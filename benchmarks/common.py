@@ -1,0 +1,79 @@
+"""Shared benchmark fixtures: datasets, trainer builders, CSV helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import (
+    APFLTrainer,
+    DittoTrainer,
+    FedAvgTrainer,
+    PerFedAvgTrainer,
+    PFedMeTrainer,
+    WalkmanTrainer,
+)
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.data import (
+    make_image_dataset,
+    make_synthetic_lr,
+    pathological_split,
+)
+from repro.data.loader import build_federated, build_federated_from_pairs
+from repro.fl.base import to_device_data
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.models.small import get_model
+
+
+def mnist_like_fed(n_clients: int = 20, n_samples: int = 3000,
+                   seed: int = 0):
+    imgs, labels = make_image_dataset(n_samples, seed=seed)
+    idx = pathological_split(labels, n_clients, seed=seed)
+    return to_device_data(build_federated(imgs, labels, idx)), (28, 28, 1)
+
+
+def cifar_like_fed(n_clients: int = 20, n_samples: int = 3000,
+                   seed: int = 0):
+    imgs, labels = make_image_dataset(
+        n_samples, shape=(32, 32, 3), noise=0.6, seed=seed)
+    idx = pathological_split(labels, n_clients, seed=seed)
+    return to_device_data(build_federated(imgs, labels, idx)), (32, 32, 3)
+
+
+def synthetic_fed(n_clients: int = 50, seed: int = 0):
+    pairs = make_synthetic_lr(n_clients, seed=seed)
+    return to_device_data(build_federated_from_pairs(pairs)), (60,)
+
+
+def make_trainer(algo: str, model, data, *, beta: float = 1.0,
+                 kappa: float = 0.001, zone: int = 8, seed: int = 0):
+    if algo == "rwsadmm":
+        return RWSADMMTrainer(
+            model, data,
+            RWSADMMHparams(beta=beta, kappa=kappa, epsilon=1e-5),
+            zone_size=zone, batch_size=32, seed=seed)
+    if algo == "rwsadmm_cf":
+        return RWSADMMTrainer(
+            model, data, RWSADMMHparams(beta=10.0, kappa=kappa,
+                                        epsilon=1e-5),
+            zone_size=zone, solver="closed_form", seed=seed)
+    cls = {
+        "fedavg": FedAvgTrainer, "perfedavg": PerFedAvgTrainer,
+        "pfedme": PFedMeTrainer, "ditto": DittoTrainer,
+        "apfl": APFLTrainer,
+    }.get(algo)
+    if cls is not None:
+        return cls(model, data, clients_per_round=min(10, data.n_clients))
+    if algo == "walkman":
+        return WalkmanTrainer(model, data, beta=3.0, seed=seed)
+    raise ValueError(algo)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,109 @@
+"""Splice the §Dry-run and §Roofline tables into EXPERIMENTS.md from
+results/dryrun/*.json (idempotent: replaces marker sections)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from .roofline_report import roofline_row, suggestion
+
+ARCH_ORDER = [
+    "qwen2-7b", "xlstm-350m", "whisper-large-v3", "kimi-k2-1t-a32b",
+    "tinyllama-1.1b", "recurrentgemma-9b", "gemma3-12b", "qwen2-vl-2b",
+    "yi-34b", "qwen3-moe-30b-a3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(dry_dir="results/dryrun"):
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        recs[(rec["arch"], rec["shape"], rec["multi_pod"])] = rec
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | per-chip peak GB | "
+        "per-chip GFLOPs | collective GB (per-chip, per-kind) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mp in (False, True):
+                rec = recs.get((arch, shape, mp))
+                if rec is None:
+                    continue
+                coll = ", ".join(
+                    f"{k.replace('all-','a')}:{v / 1e9:.2f}"
+                    for k, v in sorted(rec["collectives"].items())
+                    if k != "_counts" and v > 0)
+                peak = rec["memory"].get("peak_memory_in_bytes", 0) / 1e9
+                lines.append(
+                    f"| {arch} | {shape} | "
+                    f"{'2x16x16' if mp else '16x16'} "
+                    f"| {rec['lower_compile_s']} | {peak:.2f} "
+                    f"| {rec['flops'] / 1e9:.1f} | {coll} |")
+    skips = [
+        "qwen2-7b", "whisper-large-v3", "kimi-k2-1t-a32b",
+        "tinyllama-1.1b", "qwen2-vl-2b", "yi-34b", "qwen3-moe-30b-a3b",
+    ]
+    lines.append("")
+    lines.append(f"Skipped long_500k (full attention, DESIGN.md §4): "
+                 f"{', '.join(skips)}.")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL/HLO flops | one-line next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mp in (False, True):
+                rec = recs.get((arch, shape, mp))
+                if rec is None:
+                    continue
+                r = roofline_row(rec)
+                lines.append(
+                    f"| {arch} | {shape} | {r['mesh']} "
+                    f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+                    f"| {r['t_collective_s']:.2e} | {r['dominant']} "
+                    f"| {r['useful_ratio']:.2f} | {suggestion(r)[:70]} |")
+    return "\n".join(lines)
+
+
+def splice(md_path: str, marker: str, content: str):
+    with open(md_path) as f:
+        text = f.read()
+    tag = f"<!-- {marker} -->"
+    end_tag = f"<!-- /{marker} -->"
+    block = f"{tag}\n{content}\n{end_tag}"
+    if end_tag in text:
+        text = re.sub(
+            re.escape(tag) + r".*?" + re.escape(end_tag), block, text,
+            flags=re.S)
+    else:
+        text = text.replace(tag, block)
+    with open(md_path, "w") as f:
+        f.write(text)
+
+
+def main():
+    recs = load_records()
+    print(f"{len(recs)} dry-run records")
+    splice("EXPERIMENTS.md", "DRYRUN_TABLE", dryrun_table(recs))
+    splice("EXPERIMENTS.md", "ROOFLINE_TABLE", roofline_table(recs))
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks (CPU-relative; the TPU target numbers live in
+the roofline report). Times the jnp oracle paths (XLA-compiled) and
+derives bytes-per-call; the Pallas kernels execute in interpret mode off
+TPU so their wall-time is NOT meaningful — only their validated math."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwsadmm_update.ref import rwsadmm_fused_update_ref
+
+from .common import emit
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # fused RWSADMM update, 10M params
+    n = 10_000_000
+    x = jax.random.normal(key, (n,))
+    f = jax.jit(lambda x_, z_, y_, g_: rwsadmm_fused_update_ref(
+        x_, z_, y_, g_, 0.01, beta=1.0, eps_half=5e-6, n_total=20.0))
+    dt = _time(f, x, x * 0.1, x + 0.01, x * 0.3)
+    emit("kernel/rwsadmm_update_10M", dt * 1e6,
+         f"GBps={(7 * n * 4) / dt / 1e9:.1f}")
+
+    # flash decode, 32k cache
+    b, h, kv, hd, s = 4, 8, 2, 128, 32768
+    q = jax.random.normal(key, (b, h, hd), jnp.bfloat16)
+    k = jax.random.normal(key, (b, s, kv, hd), jnp.bfloat16)
+    v = jax.random.normal(key, (b, s, kv, hd), jnp.bfloat16)
+    length = jnp.full((b,), s, jnp.int32)
+    f = jax.jit(lambda q_, k_, v_: flash_decode_ref(q_, k_, v_, length))
+    dt = _time(f, q, k, v)
+    emit("kernel/flash_decode_32k", dt * 1e6,
+         f"GBps={(2 * b * s * kv * hd * 2) / dt / 1e9:.1f}")
+
+    # rglru scan 4k×1024
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 4096, 1024)))
+    bb = jax.random.normal(key, (4, 4096, 1024))
+    f = jax.jit(rglru_scan_ref)
+    dt = _time(f, a, bb)
+    emit("kernel/rglru_scan_4k", dt * 1e6,
+         f"GBps={(3 * a.size * 4) / dt / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""§Perf hillclimbing harness (run INSIDE the 512-device dry-run process):
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations --pair \
+      tinyllama-1.1b:train_4k --option ce_impl=onehot
+
+Runs the baseline and the optimized variant for the chosen pair, prints
+the three roofline terms before/after, and appends a JSON record to
+results/perf/. The hypothesis → change → measure → validate narrative is
+kept in EXPERIMENTS.md §Perf.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_one  # noqa: E402
+
+from .roofline_report import roofline_row  # noqa: E402
+
+
+def terms(rec):
+    r = roofline_row(rec)
+    return {k: r[k] for k in ("t_compute_s", "t_memory_s",
+                              "t_collective_s", "dominant",
+                              "step_time_s")}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, help="arch:shape")
+    ap.add_argument("--option", action="append", default=[],
+                    help="k=v dry-run option (repeatable)")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    arch, shape = args.pair.split(":")
+    options = dict(kv.split("=") for kv in args.option)
+    for k, v in list(options.items()):
+        if v in ("True", "False"):
+            options[k] = v == "True"
+    os.makedirs(args.out, exist_ok=True)
+
+    out = {"arch": arch, "shape": shape, "options": options}
+    if not args.skip_baseline:
+        base = run_one(arch, shape)
+        out["baseline"] = {"collectives": base["collectives"],
+                           "flops": base["flops"],
+                           "bytes": base["bytes_accessed"],
+                           "terms": terms(base)}
+        print("baseline:", json.dumps(out["baseline"]["terms"], indent=1))
+    opt = run_one(arch, shape, options=options)
+    out["optimized"] = {"collectives": opt["collectives"],
+                        "flops": opt["flops"],
+                        "bytes": opt["bytes_accessed"],
+                        "terms": terms(opt)}
+    print("optimized:", json.dumps(out["optimized"]["terms"], indent=1))
+    if "baseline" in out:
+        b = out["baseline"]["terms"]["step_time_s"]
+        o = out["optimized"]["terms"]["step_time_s"]
+        out["speedup"] = b / max(o, 1e-12)
+        print(f"roofline step-time speedup: {out['speedup']:.2f}×")
+
+    tag = args.tag or "_".join(f"{k}-{v}" for k, v in options.items())
+    path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see each module for the
+paper artifact it reproduces). Budget knobs via env:
+  BENCH_ROUNDS (default 100) — FL rounds per configuration.
+  BENCH_SKIP   — comma-separated module names to skip.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    rounds = int(os.environ.get("BENCH_ROUNDS", "100"))
+    skip = set(os.environ.get("BENCH_SKIP", "").split(","))
+    print("name,us_per_call,derived")
+
+    from . import (
+        ablations,
+        comm_cost,
+        convergence,
+        hyperparam,
+        kernels_bench,
+        mixing,
+        roofline_report,
+        table1,
+        table2_scaling,
+    )
+
+    jobs = [
+        ("mixing", lambda: mixing.run()),
+        ("kernels", lambda: kernels_bench.run()),
+        ("convergence", lambda: convergence.run(rounds=rounds)),
+        ("table1", lambda: table1.run(rounds=max(rounds, 120))),
+        ("table2", lambda: table2_scaling.run()),
+        ("hyperparam", lambda: hyperparam.run(rounds=min(rounds, 80))),
+        ("comm_cost", lambda: comm_cost.run(rounds=max(rounds, 150))),
+        ("ablations", lambda: ablations.run(rounds=min(rounds, 80))),
+        ("roofline", lambda: roofline_report.run()),
+    ]
+    failures = []
+    for name, job in jobs:
+        if name in skip:
+            print(f"# skipped {name}")
+            continue
+        try:
+            job()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"# FAILED {name}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

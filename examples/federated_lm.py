@@ -1,0 +1,86 @@
+"""End-to-end driver: RWSADMM federated training of a language model.
+
+Uses a mid-size reduced TinyLlama variant (~35M params — CPU-tractable)
+with per-client heterogeneous token streams; the mobile server walks the
+client graph, each visit runs one compiled RWSADMM zone step (the same
+step the 512-chip dry-run lowers for the full configs).
+
+Run:  PYTHONPATH=src python examples/federated_lm.py [--rounds 200]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.graph import DynamicGraph
+from repro.core.markov import RandomWalkServer
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.launch.steps import TrainState, init_train_state, make_train_step
+from repro.models.registry import build_model
+
+
+def heterogeneous_stream(vocab: int, client: int, batch: int, seq: int,
+                         rng: np.random.Generator):
+    """Markovian token stream with per-client transition bias — the LM
+    analogue of the paper's label-skew heterogeneity."""
+    base = rng.integers(0, vocab, size=(batch, seq))
+    # each client prefers a contiguous vocab slice
+    lo = (client * vocab // 8) % vocab
+    mask = rng.random((batch, seq)) < 0.7
+    pref = lo + rng.integers(0, max(2, vocab // 8), size=(batch, seq))
+    return jnp.asarray(np.where(mask, pref % vocab, base), jnp.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--clients", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("tinyllama-1.1b").reduced(),
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=2, head_dim=64,
+        d_ff=1024, vocab=2048, dtype="float32",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.arch_id} ~{n_params / 1e6:.1f}M params")
+
+    hp = RWSADMMHparams(beta=2.0, kappa=0.001, epsilon=1e-5)
+    step = jax.jit(make_train_step(model, hp, n_total=args.clients))
+
+    rng = np.random.default_rng(0)
+    batches = [heterogeneous_stream(cfg.vocab, c, 4, 128, rng)
+               for c in range(args.clients)]
+    states = [init_train_state(params, hp) for _ in range(args.clients)]
+    dyn = DynamicGraph(args.clients, min_degree=3, regen_every=10, seed=0)
+    walker = RandomWalkServer(seed=1)
+    walker.reset(dyn.current())
+
+    y, kappa = states[0].y, jnp.asarray(hp.kappa)
+    losses = {}
+    for r in range(args.rounds):
+        g = dyn.step() if r else dyn.current()
+        i_k = walker.step(g) if r else walker.position
+        st = TrainState(x=states[i_k].x, z=states[i_k].z, y=y, kappa=kappa)
+        st, loss = step(st, {"tokens": batches[i_k]})
+        states[i_k], y, kappa = st, st.y, st.kappa
+        losses.setdefault(i_k, []).append(float(loss))
+        if r % 10 == 0:
+            print(f"round {r:4d} client {i_k} loss {float(loss):.4f}")
+    print("\nper-client loss improvement (first visit → last):")
+    for c in sorted(losses):
+        l = losses[c]
+        print(f"  client {c}: {l[0]:.3f} → {l[-1]:.3f} ({len(l)} visits)")
+
+
+if __name__ == "__main__":
+    main()

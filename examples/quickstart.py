@@ -1,0 +1,63 @@
+"""Quickstart: mobilized personalized FL with RWSADMM (paper Algorithm 1).
+
+Trains the paper's MLP on an offline synthetic MNIST-shaped dataset with
+a pathological non-IID split (2 labels per client), a dynamic client
+graph, and a random-walking mobile server — then compares against FedAvg.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.baselines import FedAvgTrainer
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.data import make_image_dataset, pathological_split
+from repro.data.loader import build_federated
+from repro.fl.base import to_device_data
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.fl.simulation import run_simulation
+from repro.models.small import get_model
+
+
+def main():
+    # 1. Offline dataset + the paper's non-IID partition (§5).
+    imgs, labels = make_image_dataset(3000, seed=0)
+    parts = pathological_split(labels, n_clients=20, labels_per_client=2,
+                               seed=0)
+    fed = build_federated(imgs, labels, parts)   # 75/25 local splits
+    data = to_device_data(fed)
+    model = get_model("mlp", (28, 28, 1))
+
+    # 2. RWSADMM: mobile server + hard-constraint personalization.
+    trainer = RWSADMMTrainer(
+        model, data,
+        RWSADMMHparams(beta=1.0, kappa=0.001, epsilon=1e-5),
+        zone_size=8, batch_size=32, min_degree=5, regen_every=10,
+    )
+    print("== RWSADMM (mobile server, personalized) ==")
+    res = run_simulation(trainer, rounds=300, eval_every=50, verbose=True)
+
+    # 3. FedAvg benchmark on the same data.
+    print("== FedAvg (stationary server, consensus) ==")
+    fed_res = run_simulation(
+        FedAvgTrainer(model, data, clients_per_round=10),
+        rounds=300, eval_every=100, verbose=True,
+    )
+
+    print("\nFinal personalized accuracy (RWSADMM): "
+          f"{res.final['acc_personalized']:.4f} "
+          f"± {res.final['acc_personalized_std']:.4f}")
+    print(f"Final global accuracy (FedAvg):         "
+          f"{fed_res.final['acc_global']:.4f}")
+    print(f"RWSADMM comm/round: "
+          f"{res.total_comm_bytes / 300 / 1e6:.2f} MB  |  FedAvg: "
+          f"{fed_res.total_comm_bytes / 300 / 1e6:.2f} MB")
+    server = trainer.walker
+    print(f"server visits: min={server.visit_counts.min()} "
+          f"max={server.visit_counts.max()} "
+          f"hitting_time={server.hitting_time()}")
+
+
+if __name__ == "__main__":
+    main()

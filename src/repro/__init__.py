@@ -1,0 +1,4 @@
+"""repro: RWSADMM — mobilizing personalized FL via random-walk stochastic
+ADMM (NeurIPS 2023) as a production JAX training/serving framework."""
+
+__version__ = "1.0.0"

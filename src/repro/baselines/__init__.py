@@ -1,0 +1,27 @@
+"""Baseline FL algorithms the paper compares against (§5) — all fully
+implemented: FedAvg, Per-FedAvg(FO), pFedMe, Ditto, APFL, plus Walkman
+(the closest ADMM prior, §2)."""
+from .fedavg import FedAvgTrainer  # noqa: F401
+from .perfedavg import PerFedAvgTrainer  # noqa: F401
+from .pfedme import PFedMeTrainer  # noqa: F401
+from .ditto import DittoTrainer  # noqa: F401
+from .apfl import APFLTrainer  # noqa: F401
+from .walkman_trainer import WalkmanTrainer  # noqa: F401
+
+REGISTRY = {
+    "fedavg": FedAvgTrainer,
+    "perfedavg": PerFedAvgTrainer,
+    "pfedme": PFedMeTrainer,
+    "ditto": DittoTrainer,
+    "apfl": APFLTrainer,
+    "walkman": WalkmanTrainer,
+}
+
+
+def get_baseline(name: str):
+    try:
+        return REGISTRY[name.lower()]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown baseline {name!r}; options: {sorted(REGISTRY)}"
+        ) from e

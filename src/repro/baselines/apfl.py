@@ -1,0 +1,95 @@
+"""APFL (Deng et al. 2020) — adaptive personalized FL.
+
+Each client keeps a local model v_i and mixing weight α; the served model
+is v̄_i = α v_i + (1−α) w. Local steps update the global copy w_i with
+∇f(w_i) and v_i with α·∇f(v̄_i); the server averages w_i.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fl.base import DeviceData, TrainerBase, sample_batch
+
+
+class APFLState(NamedTuple):
+    w: dict
+    v: dict  # stacked (n, ...)
+
+
+class APFLTrainer(TrainerBase):
+    name = "apfl"
+    personalized = True
+
+    def __init__(self, model, data: DeviceData, *, alpha: float = 0.5,
+                 lr: float = 0.05, local_steps: int = 10,
+                 clients_per_round: int = 10, batch_size: int = 20):
+        super().__init__(model, data, batch_size)
+        self.m = int(min(clients_per_round, self.n_clients))
+        self.alpha = alpha
+
+        def local(w, v, client, key):
+            def body(carry, k):
+                w_i, v_i = carry
+                xb, yb = sample_batch(self.data, client, k, batch_size)
+                gw = self.grad_fn(w_i, xb, yb, k)
+                w_i = jax.tree_util.tree_map(
+                    lambda a, b: a - lr * b, w_i, gw
+                )
+                mixed = jax.tree_util.tree_map(
+                    lambda a, b: alpha * a + (1 - alpha) * b, v_i, w_i
+                )
+                gv = self.grad_fn(mixed, xb, yb, k)
+                v_i = jax.tree_util.tree_map(
+                    lambda a, b: a - lr * alpha * b, v_i, gv
+                )
+                return (w_i, v_i), None
+
+            keys = jax.random.split(key, local_steps)
+            (w_i, v_i), _ = jax.lax.scan(body, (w, v), keys)
+            return w_i, v_i
+
+        def round_fn(w, v_all, sel, key):
+            keys = jax.random.split(key, self.m)
+            v_sel = jax.tree_util.tree_map(lambda l: l[sel], v_all)
+            w_locals, v_upd = jax.vmap(
+                lambda v_, c, k: local(w, v_, c, k)
+            )(v_sel, sel, keys)
+            w_new = jax.tree_util.tree_map(
+                lambda ls: jnp.mean(ls, axis=0), w_locals
+            )
+            v_all = jax.tree_util.tree_map(
+                lambda full, old, new: full.at[sel].add(new - old),
+                v_all, v_sel, v_upd,
+            )
+            return w_new, v_all
+
+        self._round_fn = jax.jit(round_fn)
+
+    def init_state(self, key) -> APFLState:
+        w = self.model.init(key)
+        v = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (self.n_clients,) + l.shape), w
+        )
+        return APFLState(w=w, v=v)
+
+    def round(self, state, rnd: int, rng: np.random.Generator):
+        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        w, v = self._round_fn(state.w, state.v, jnp.asarray(sel), key)
+        return APFLState(w=w, v=v), {
+            "round": rnd,
+            "comm_bytes": self.comm_bytes_per_round(self.m),
+        }
+
+    def personalized_params(self, state):
+        return jax.tree_util.tree_map(
+            lambda v, w: self.alpha * v + (1 - self.alpha) * w[None],
+            state.v, state.w,
+        )
+
+    def global_params(self, state):
+        return state.w

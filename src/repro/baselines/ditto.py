@@ -1,0 +1,86 @@
+"""Ditto (Li et al. 2021) — global FedAvg + per-client personal model v_i
+trained with the proximal objective  f_i(v) + (λ/2)||v − w_global||²."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fl.base import DeviceData, TrainerBase, sample_batch
+
+
+class DittoState(NamedTuple):
+    w: dict       # global model
+    v: dict       # stacked personal models (n, ...)
+
+
+class DittoTrainer(TrainerBase):
+    name = "ditto"
+    personalized = True
+
+    def __init__(self, model, data: DeviceData, *, lam: float = 1.0,
+                 lr: float = 0.05, local_steps: int = 10,
+                 personal_steps: int = 5, clients_per_round: int = 10,
+                 batch_size: int = 20):
+        super().__init__(model, data, batch_size)
+        self.m = int(min(clients_per_round, self.n_clients))
+        self.lam = lam
+        local = self.make_local_sgd(lr, local_steps)
+
+        def personal_update(v, w, client, key):
+            def body(v_, k):
+                xb, yb = sample_batch(self.data, client, k, batch_size)
+                g = self.grad_fn(v_, xb, yb, k)
+                v_ = jax.tree_util.tree_map(
+                    lambda a, b, c: a - lr * (b + lam * (a - c)), v_, g, w
+                )
+                return v_, None
+
+            keys = jax.random.split(key, personal_steps)
+            v, _ = jax.lax.scan(body, v, keys)
+            return v
+
+        def round_fn(w, v_all, sel, key):
+            keys = jax.random.split(key, self.m)
+            # Global part (FedAvg).
+            w_locals = jax.vmap(lambda c, k: local(w, c, k))(sel, keys)
+            w_new = jax.tree_util.tree_map(
+                lambda ls: jnp.mean(ls, axis=0), w_locals
+            )
+            # Personal part for selected clients.
+            v_sel = jax.tree_util.tree_map(lambda l: l[sel], v_all)
+            keys2 = jax.random.split(jax.random.fold_in(key, 7), self.m)
+            v_upd = jax.vmap(
+                lambda v_, c, k: personal_update(v_, w, c, k)
+            )(v_sel, sel, keys2)
+            v_all = jax.tree_util.tree_map(
+                lambda full, old, new: full.at[sel].add(new - old),
+                v_all, v_sel, v_upd,
+            )
+            return w_new, v_all
+
+        self._round_fn = jax.jit(round_fn)
+
+    def init_state(self, key) -> DittoState:
+        w = self.model.init(key)
+        v = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (self.n_clients,) + l.shape), w
+        )
+        return DittoState(w=w, v=v)
+
+    def round(self, state, rnd: int, rng: np.random.Generator):
+        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        w, v = self._round_fn(state.w, state.v, jnp.asarray(sel), key)
+        return DittoState(w=w, v=v), {
+            "round": rnd,
+            "comm_bytes": self.comm_bytes_per_round(self.m),
+        }
+
+    def personalized_params(self, state):
+        return state.v
+
+    def global_params(self, state):
+        return state.w

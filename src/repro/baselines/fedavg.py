@@ -1,0 +1,57 @@
+"""FedAvg (McMahan et al. 2017) — the paper's non-personalized benchmark."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fl.base import DeviceData, TrainerBase
+
+
+class FedAvgState(NamedTuple):
+    w: dict  # global model
+
+
+class FedAvgTrainer(TrainerBase):
+    name = "fedavg"
+    personalized = False
+
+    def __init__(self, model, data: DeviceData, *, lr: float = 0.05,
+                 local_steps: int = 10, clients_per_round: int = 10,
+                 batch_size: int = 20):
+        super().__init__(model, data, batch_size)
+        self.lr = lr
+        self.local_steps = local_steps
+        self.m = int(min(clients_per_round, self.n_clients))
+        local = self.make_local_sgd(lr, local_steps)
+
+        def round_fn(w, sel, key):
+            keys = jax.random.split(key, self.m)
+            locals_ = jax.vmap(lambda c, k: local(w, c, k))(sel, keys)
+            weights = self.data.n_train[sel].astype(jnp.float32)
+            weights = weights / jnp.sum(weights)
+
+            def avg(ls):
+                ww = weights.reshape((-1,) + (1,) * (ls.ndim - 1))
+                return jnp.sum(ww * ls, axis=0)
+
+            return jax.tree_util.tree_map(avg, locals_)
+
+        self._round_fn = jax.jit(round_fn)
+
+    def init_state(self, key) -> FedAvgState:
+        return FedAvgState(w=self.model.init(key))
+
+    def round(self, state: FedAvgState, rnd: int, rng: np.random.Generator):
+        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        w = self._round_fn(state.w, jnp.asarray(sel), key)
+        return FedAvgState(w=w), {
+            "round": rnd,
+            "comm_bytes": self.comm_bytes_per_round(self.m),
+        }
+
+    def global_params(self, state: FedAvgState):
+        return state.w

@@ -1,0 +1,86 @@
+"""Per-FedAvg (Fallah et al. 2020) — first-order MAML variant (FO).
+
+Each local step: w⁺ = w − α∇f(w; ξ₁);  w ← w − β∇f(w⁺; ξ₂).
+Personalized evaluation adapts the global model with one α-step on the
+client's own data (the Per-FedAvg deployment protocol).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fl.base import DeviceData, TrainerBase, sample_batch
+
+
+class PerFedAvgState(NamedTuple):
+    w: dict
+
+
+class PerFedAvgTrainer(TrainerBase):
+    name = "perfedavg"
+    personalized = True
+
+    def __init__(self, model, data: DeviceData, *, alpha: float = 0.03,
+                 beta: float = 0.05, local_steps: int = 10,
+                 clients_per_round: int = 10, batch_size: int = 20):
+        super().__init__(model, data, batch_size)
+        self.alpha, self.beta = alpha, beta
+        self.m = int(min(clients_per_round, self.n_clients))
+
+        def maml_steps(w, client, key):
+            def body(p, k):
+                k1, k2 = jax.random.split(k)
+                x1, y1 = sample_batch(self.data, client, k1, batch_size)
+                g1 = self.grad_fn(p, x1, y1, k1)
+                p_in = jax.tree_util.tree_map(
+                    lambda a, b: a - alpha * b, p, g1
+                )
+                x2, y2 = sample_batch(self.data, client, k2, batch_size)
+                g2 = self.grad_fn(p_in, x2, y2, k2)
+                p = jax.tree_util.tree_map(lambda a, b: a - beta * b, p, g2)
+                return p, None
+
+            keys = jax.random.split(key, local_steps)
+            w, _ = jax.lax.scan(body, w, keys)
+            return w
+
+        def round_fn(w, sel, key):
+            keys = jax.random.split(key, self.m)
+            locals_ = jax.vmap(lambda c, k: maml_steps(w, c, k))(sel, keys)
+            return jax.tree_util.tree_map(
+                lambda ls: jnp.mean(ls, axis=0), locals_
+            )
+
+        self._round_fn = jax.jit(round_fn)
+
+        def adapt(w, client, key):
+            xb, yb = sample_batch(self.data, client, key, batch_size)
+            g = self.grad_fn(w, xb, yb, key)
+            return jax.tree_util.tree_map(lambda a, b: a - alpha * b, w, g)
+
+        self._adapt_all = jax.jit(
+            jax.vmap(adapt, in_axes=(None, 0, 0))
+        )
+
+    def init_state(self, key) -> PerFedAvgState:
+        return PerFedAvgState(w=self.model.init(key))
+
+    def round(self, state, rnd: int, rng: np.random.Generator):
+        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        w = self._round_fn(state.w, jnp.asarray(sel), key)
+        return PerFedAvgState(w=w), {
+            "round": rnd,
+            "comm_bytes": self.comm_bytes_per_round(self.m),
+        }
+
+    def personalized_params(self, state):
+        clients = jnp.arange(self.n_clients)
+        keys = jax.random.split(jax.random.PRNGKey(1234), self.n_clients)
+        return self._adapt_all(state.w, clients, keys)
+
+    def global_params(self, state):
+        return state.w

@@ -1,0 +1,110 @@
+"""pFedMe (Dinh et al. 2020) — Moreau-envelope personalization.
+
+Per selected client, R local rounds; each solves the prox subproblem
+θ̃ ≈ argmin_θ f_i(θ; ξ) + (λ/2)||θ − w_i||² with K inner SGD steps, then
+w_i ← w_i − ηλ(w_i − θ̃). Server: w ← (1−β)w + β·mean(w_i).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fl.base import DeviceData, TrainerBase, sample_batch
+
+
+class PFedMeState(NamedTuple):
+    w: dict
+
+
+class PFedMeTrainer(TrainerBase):
+    name = "pfedme"
+    personalized = True
+
+    def __init__(self, model, data: DeviceData, *, lam: float = 15.0,
+                 inner_lr: float = 0.05, inner_steps: int = 5,
+                 local_rounds: int = 5, eta: float = 0.05,
+                 server_beta: float = 1.0, clients_per_round: int = 10,
+                 batch_size: int = 20):
+        super().__init__(model, data, batch_size)
+        self.m = int(min(clients_per_round, self.n_clients))
+        self.lam, self.inner_lr = lam, inner_lr
+        self.inner_steps, self.local_rounds = inner_steps, local_rounds
+        self.eta, self.server_beta = eta, server_beta
+
+        def prox_solve(w_i, client, key):
+            """K inner SGD steps on h(θ) = f(θ; ξ) + λ/2||θ − w_i||²,
+            with a fixed minibatch ξ per prox solve (pFedMe's sampling)."""
+            xb, yb = sample_batch(self.data, client, key, batch_size)
+
+            def h(theta):
+                return (self.loss_fn(theta, xb, yb, key)
+                        + 0.5 * lam * _sqdist(theta, w_i))
+
+            theta = w_i
+            def body(theta, _):
+                g = jax.grad(h)(theta)
+                theta = jax.tree_util.tree_map(
+                    lambda a, b: a - inner_lr * b, theta, g
+                )
+                return theta, None
+
+            theta, _ = jax.lax.scan(body, theta, jnp.arange(inner_steps))
+            return theta
+
+        def local(w, client, key):
+            def body(w_i, k):
+                theta = prox_solve(w_i, client, k)
+                w_i = jax.tree_util.tree_map(
+                    lambda a, t: a - eta * lam * (a - t), w_i, theta
+                )
+                return w_i, None
+
+            keys = jax.random.split(key, local_rounds)
+            w_i, _ = jax.lax.scan(body, w, keys)
+            return w_i
+
+        def round_fn(w, sel, key):
+            keys = jax.random.split(key, self.m)
+            w_locals = jax.vmap(lambda c, k: local(w, c, k))(sel, keys)
+            w_avg = jax.tree_util.tree_map(
+                lambda ls: jnp.mean(ls, axis=0), w_locals
+            )
+            return jax.tree_util.tree_map(
+                lambda a, b: (1.0 - server_beta) * a + server_beta * b,
+                w, w_avg,
+            )
+
+        self._round_fn = jax.jit(round_fn)
+        self._prox_all = jax.jit(
+            jax.vmap(prox_solve, in_axes=(None, 0, 0))
+        )
+
+    def init_state(self, key) -> PFedMeState:
+        return PFedMeState(w=self.model.init(key))
+
+    def round(self, state, rnd: int, rng: np.random.Generator):
+        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        w = self._round_fn(state.w, jnp.asarray(sel), key)
+        return PFedMeState(w=w), {
+            "round": rnd,
+            "comm_bytes": self.comm_bytes_per_round(self.m),
+        }
+
+    def personalized_params(self, state):
+        clients = jnp.arange(self.n_clients)
+        keys = jax.random.split(jax.random.PRNGKey(99), self.n_clients)
+        return self._prox_all(state.w, clients, keys)
+
+    def global_params(self, state):
+        return state.w
+
+
+def _sqdist(a, b):
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(jnp.square(x - y)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves)

@@ -1,0 +1,93 @@
+"""Walkman trainer — random-walk *consensus* ADMM (paper [35] ablation).
+
+Same mobile-server random-walk control plane as RWSADMM, but the update
+rule enforces consensus instead of the paper's hard-inequality proximity.
+Isolates the contribution of the personalization mechanism.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import walkman
+from ..core.graph import DynamicGraph
+from ..core.markov import RandomWalkServer
+from ..fl.base import DeviceData, TrainerBase, sample_batch
+
+
+class WalkmanState(NamedTuple):
+    clients: walkman.WalkmanClientState  # stacked (n, ...)
+    y: dict
+    round: jnp.ndarray
+
+
+class WalkmanTrainer(TrainerBase):
+    name = "walkman"
+    personalized = False
+
+    def __init__(self, model, data: DeviceData, *, beta: float = 3.0,
+                 min_degree: int = 5, regen_every: int = 10,
+                 batch_size: int = 20, seed: int = 0):
+        super().__init__(model, data, batch_size)
+        self.beta = beta
+        self.dyn_graph = DynamicGraph(
+            self.n_clients, min_degree=min_degree,
+            regen_every=regen_every, seed=seed,
+        )
+        self.walker = RandomWalkServer(seed=seed + 1)
+        self.walker.reset(self.dyn_graph.current())
+
+        def round_fn(clients, y, i_k, key):
+            x_i = jax.tree_util.tree_map(lambda l: l[i_k], clients.x)
+            z_i = jax.tree_util.tree_map(lambda l: l[i_k], clients.z)
+            xb, yb = sample_batch(self.data, i_k, key, batch_size)
+            # Walkman's gradient-type update linearizes at the walker
+            # token y (Walkman-B in [35]) — more stable than at x_i.
+            loss, g = self.value_and_grad_fn(y, xb, yb, key)
+            new_c, c_new, c_old = walkman.client_round(
+                walkman.WalkmanClientState(x_i, z_i), y, g, beta
+            )
+            y_new = walkman.y_update(y, c_new, c_old, self.n_clients)
+            clients = walkman.WalkmanClientState(
+                x=jax.tree_util.tree_map(
+                    lambda full, new: full.at[i_k].set(new),
+                    clients.x, new_c.x),
+                z=jax.tree_util.tree_map(
+                    lambda full, new: full.at[i_k].set(new),
+                    clients.z, new_c.z),
+            )
+            return clients, y_new, loss
+
+        self._round_fn = jax.jit(round_fn)
+
+    def init_state(self, key) -> WalkmanState:
+        params = self.model.init(key)
+        clients, server = walkman.init_states(params, self.n_clients)
+        # Warm start x_i = y = init (same rationale as RWSADMM warm init).
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (self.n_clients,) + l.shape),
+            params,
+        )
+        clients = walkman.WalkmanClientState(x=stacked, z=clients.z)
+        return WalkmanState(clients=clients, y=params,
+                            round=jnp.asarray(0, jnp.int32))
+
+    def round(self, state, rnd: int, rng: np.random.Generator):
+        graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()
+        i_k = self.walker.step(graph) if rnd > 0 else self.walker.position
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        clients, y, loss = self._round_fn(
+            state.clients, state.y, jnp.asarray(i_k), key
+        )
+        return WalkmanState(clients, y, state.round + 1), {
+            "round": rnd,
+            "client": int(i_k),
+            "train_loss": float(loss),
+            "comm_bytes": self.comm_bytes_per_round(1),
+        }
+
+    def global_params(self, state):
+        return state.y

@@ -1,0 +1,1 @@
+from .checkpoint import load_pytree, restore_latest, save_pytree  # noqa: F401

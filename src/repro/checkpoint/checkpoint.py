@@ -1,0 +1,77 @@
+"""npz-based pytree checkpointing.
+
+Leaves are flattened with '/'-joined key paths so any nested dict /
+NamedTuple state (RWSADMM client/server states included) round-trips
+without pickling. Suitable for the mobile-server token handoff too: the
+y-token IS a checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: PyTree, step: int | None = None) -> str:
+    """Save a pytree to ``path`` (.npz). Returns the path written."""
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(kp)] = np.asarray(leaf)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+    if step is not None:
+        meta = path + ".meta.json"
+        with open(meta, "w") as f:
+            json.dump({"step": step}, f)
+    return path
+
+
+def load_pytree(path: str, template: PyTree) -> PyTree:
+    """Load into the structure of ``template`` (shapes must match)."""
+    data = np.load(path)
+    leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for kp, leaf in leaves_kp:
+        key = _path_str(kp)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != {leaf.shape}"
+            )
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(directory: str, template: PyTree,
+                   pattern: str = r"ckpt_(\d+)\.npz"):
+    """Restore the highest-step checkpoint in ``directory`` or None."""
+    if not os.path.isdir(directory):
+        return None, -1
+    best, best_step = None, -1
+    for fn in os.listdir(directory):
+        m = re.fullmatch(pattern, fn)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = fn, int(m.group(1))
+    if best is None:
+        return None, -1
+    return load_pytree(os.path.join(directory, best), template), best_step

@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — RWSADMM + random-walk machinery."""
+from . import graph, markov, rwsadmm, tree, walkman  # noqa: F401
+from .graph import ClientGraph, DynamicGraph, random_geometric_graph  # noqa: F401
+from .markov import RandomWalkServer, mixing_time  # noqa: F401
+from .rwsadmm import (  # noqa: F401
+    ClientState,
+    RWSADMMHparams,
+    ServerState,
+    client_round,
+    init_states,
+    init_states_warm,
+    zone_round,
+)

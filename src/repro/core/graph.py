@@ -1,0 +1,168 @@
+"""Dynamic client connectivity graphs for the mobile-server random walk.
+
+The paper (§5, App. D.2) uses "a moderately dynamic connected graph of
+randomly placed nodes where each node has at least 5 neighboring nodes at
+the k-th update", regenerated every ``regen_every`` rounds. Nodes are
+clients; an edge (i, j) means client j is within the mobile server's
+short-range communication zone when it visits client i.
+
+This module is pure numpy/host-side: graph topology is control-plane state
+(it decides *which* clients form the active zone), never traced into XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientGraph:
+    """Undirected connectivity graph over ``n`` clients.
+
+    adjacency: boolean (n, n) matrix, symmetric, zero diagonal.
+    positions: (n, 2) client coordinates (for geometric graphs / plotting).
+    """
+
+    adjacency: np.ndarray
+    positions: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.adjacency.shape[0])
+
+    def degree(self, i: int | None = None):
+        deg = self.adjacency.sum(axis=1)
+        return int(deg[i]) if i is not None else deg
+
+    def neighborhood(self, i: int) -> np.ndarray:
+        """N(i): client i plus its neighbors (paper's vertex set N(i))."""
+        mask = self.adjacency[i].copy()
+        mask[i] = True
+        return np.flatnonzero(mask)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        """N(i) \\ {i}."""
+        return np.flatnonzero(self.adjacency[i])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.adjacency.sum()) // 2
+
+    def is_connected(self) -> bool:
+        n = self.n
+        seen = np.zeros(n, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            u = stack.pop()
+            for v in np.flatnonzero(self.adjacency[u]):
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append(int(v))
+        return bool(seen.all())
+
+
+def random_geometric_graph(
+    n: int,
+    min_degree: int = 5,
+    rng: np.random.Generator | None = None,
+) -> ClientGraph:
+    """Randomly placed clients; each connected to at least ``min_degree``
+    nearest neighbors (paper App. D.2), then symmetrized and patched to be
+    connected (Assumption 3.1 requires an irreducible chain)."""
+    rng = rng or np.random.default_rng(0)
+    min_degree = min(min_degree, n - 1)
+    pos = rng.uniform(0.0, 1.0, size=(n, 2))
+    d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    adj = np.zeros((n, n), dtype=bool)
+    order = np.argsort(d2, axis=1)
+    for i in range(n):
+        adj[i, order[i, :min_degree]] = True
+    adj = adj | adj.T
+
+    # Patch connectivity: link nearest nodes across components.
+    g = ClientGraph(adjacency=adj, positions=pos)
+    while not g.is_connected():
+        comp = _component_labels(adj)
+        a = np.flatnonzero(comp == comp[0])
+        b = np.flatnonzero(comp != comp[0])
+        sub = d2[np.ix_(a, b)]
+        ia, ib = np.unravel_index(np.argmin(sub), sub.shape)
+        adj[a[ia], b[ib]] = adj[b[ib], a[ia]] = True
+        g = ClientGraph(adjacency=adj, positions=pos)
+    return g
+
+
+def _component_labels(adj: np.ndarray) -> np.ndarray:
+    n = adj.shape[0]
+    labels = -np.ones(n, dtype=int)
+    cur = 0
+    for s in range(n):
+        if labels[s] >= 0:
+            continue
+        stack = [s]
+        labels[s] = cur
+        while stack:
+            u = stack.pop()
+            for v in np.flatnonzero(adj[u]):
+                if labels[v] < 0:
+                    labels[v] = cur
+                    stack.append(int(v))
+        cur += 1
+    return labels
+
+
+class DynamicGraph:
+    """Moderately dynamic graph: regenerated every ``regen_every`` rounds
+    (paper uses 10). Node count and min-degree are preserved; positions are
+    re-drawn, modelling client mobility between server visits."""
+
+    def __init__(
+        self,
+        n: int,
+        min_degree: int = 5,
+        regen_every: int = 10,
+        seed: int = 0,
+    ):
+        self.n = n
+        self.min_degree = min_degree
+        self.regen_every = max(1, regen_every)
+        self._rng = np.random.default_rng(seed)
+        self._round = 0
+        self.graph = random_geometric_graph(n, min_degree, self._rng)
+        self.n_regens = 0
+
+    def current(self) -> ClientGraph:
+        return self.graph
+
+    def step(self) -> ClientGraph:
+        """Advance one round; regenerate topology on schedule."""
+        self._round += 1
+        if self._round % self.regen_every == 0:
+            self.graph = random_geometric_graph(
+                self.n, self.min_degree, self._rng
+            )
+            self.n_regens += 1
+        return self.graph
+
+
+def line_graph(n: int) -> ClientGraph:
+    """Worst-case mixing topology (used in tests/benchmarks)."""
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n - 1):
+        adj[i, i + 1] = adj[i + 1, i] = True
+    pos = np.stack([np.linspace(0, 1, n), np.zeros(n)], axis=1)
+    return ClientGraph(adjacency=adj, positions=pos)
+
+
+def complete_graph(n: int) -> ClientGraph:
+    adj = ~np.eye(n, dtype=bool)
+    pos = np.stack(
+        [np.cos(np.linspace(0, 2 * np.pi, n, endpoint=False)),
+         np.sin(np.linspace(0, 2 * np.pi, n, endpoint=False))],
+        axis=1,
+    )
+    return ClientGraph(adjacency=adj, positions=pos)

@@ -1,0 +1,177 @@
+"""Markov-chain machinery for the mobile server's random walk.
+
+Implements the paper's §3:
+  * transition matrix  [P(k)]_{ij} = 1/deg(i) for j ~ i  (experiments §5),
+  * Metropolis-Hastings variant (uniform stationary distribution π = 1/n,
+    which makes Assumption 3.1's π_* as large as possible — used when a
+    uniform client-visit frequency is desired),
+  * stationary distribution π, spectral quantities σ(P), λ₂(P),
+  * mixing time τ(δ) from Eq. (6),
+  * P_max elementwise envelope (Eq. (5)) for the dynamic chain,
+  * random-walk sampling of the visited-client sequence (i_k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .graph import ClientGraph
+
+
+def degree_transition_matrix(graph: ClientGraph) -> np.ndarray:
+    """[P]_{ij} = 1/deg(i) for j in N(i)\\{i}; the paper's experimental
+    choice. Stationary distribution is π_i ∝ deg(i)."""
+    adj = graph.adjacency.astype(np.float64)
+    deg = adj.sum(axis=1, keepdims=True)
+    return adj / np.maximum(deg, 1.0)
+
+
+def metropolis_transition_matrix(graph: ClientGraph) -> np.ndarray:
+    """Metropolis-Hastings weights: uniform stationary distribution.
+
+    P_ij = min(1/deg(i), 1/deg(j)) for j~i; self-loop absorbs the rest.
+    """
+    adj = graph.adjacency.astype(np.float64)
+    deg = adj.sum(axis=1)
+    n = graph.n
+    p = np.zeros((n, n))
+    for i in range(n):
+        nbrs = np.flatnonzero(adj[i])
+        for j in nbrs:
+            p[i, j] = min(1.0 / deg[i], 1.0 / deg[j])
+        p[i, i] = 1.0 - p[i].sum()
+    return p
+
+
+def stationary_distribution(p: np.ndarray, tol: float = 1e-12) -> np.ndarray:
+    """π with πᵀP = πᵀ, via power iteration on Pᵀ."""
+    n = p.shape[0]
+    pi = np.full(n, 1.0 / n)
+    for _ in range(100_000):
+        nxt = pi @ p
+        if np.abs(nxt - pi).max() < tol:
+            pi = nxt
+            break
+        pi = nxt
+    return pi / pi.sum()
+
+
+def sigma(p: np.ndarray) -> float:
+    """σ(P) := sup { ||fᵀP|| / ||f|| : fᵀ1 = 0 }  (paper Eq. 6).
+
+    Equals the largest singular value of Pᵀ restricted to 1⊥.
+    """
+    n = p.shape[0]
+    # Orthonormal basis of 1-perp via QR of [1 | I].
+    q, _ = np.linalg.qr(np.concatenate([np.ones((n, 1)) / math.sqrt(n),
+                                        np.eye(n)[:, : n - 1]], axis=1))
+    basis = q[:, 1:]  # (n, n-1), orthonormal, ⊥ 1
+    m = basis.T @ p @ p.T @ basis
+    ev = np.linalg.eigvalsh(m)
+    return float(np.sqrt(max(ev.max(), 0.0)))
+
+
+def lambda2(p: np.ndarray) -> float:
+    """Second-largest eigenvalue modulus (reversible-chain rate, Eq. 30)."""
+    ev = np.linalg.eigvals(p)
+    ev = np.sort(np.abs(ev))[::-1]
+    return float(ev[1]) if len(ev) > 1 else 0.0
+
+
+def mixing_time(p: np.ndarray, delta: float = 0.5,
+                pi: np.ndarray | None = None) -> int:
+    """τ(δ) = ceil( ln(√2/(δ π_*)) / (1 − σ(P)) )   (paper Eq. 6)."""
+    if pi is None:
+        pi = stationary_distribution(p)
+    pi_star = float(pi.min())
+    s = sigma(p)
+    if s >= 1.0 - 1e-12:
+        return 2**31 - 1  # non-ergodic chain: infinite mixing time
+    return int(math.ceil(math.log(math.sqrt(2.0) / (delta * pi_star))
+                         / (1.0 - s)))
+
+
+def p_max_envelope(ps: list[np.ndarray]) -> np.ndarray:
+    """Eq. (5): elementwise max over the dynamic chain's matrices P(k)."""
+    env = ps[0].copy()
+    for p in ps[1:]:
+        np.maximum(env, p, out=env)
+    return env
+
+
+def verify_assumption_3_1(p: np.ndarray, delta: float = 0.5) -> dict:
+    """Empirically verify the mixing inequality Eq. (3)/(4) for τ(δ)."""
+    pi = stationary_distribution(p)
+    tau = mixing_time(p, delta, pi)
+    if tau >= 2**30:  # non-ergodic (e.g. periodic bipartite chain)
+        return {"tau": tau, "holds": False, "max_dev": float("inf"),
+                "pi_star": float(pi.min()), "sigma": sigma(p),
+                "lambda2": lambda2(p)}
+    pt = np.linalg.matrix_power(p, tau)
+    dev = np.abs(pt - pi[None, :]).max()
+    return {
+        "tau": tau,
+        "pi_star": float(pi.min()),
+        "sigma": sigma(p),
+        "lambda2": lambda2(p),
+        "max_dev": float(dev),
+        "holds": bool(dev <= delta * pi.min() + 1e-9),
+    }
+
+
+@dataclasses.dataclass
+class RandomWalkServer:
+    """The mobile server: walks the client graph per the Markov chain.
+
+    Host-side control plane; the visited sequence (i_k) drives which zone
+    the compiled SPMD round operates on.
+    """
+
+    transition: str = "degree"  # "degree" (paper) | "metropolis"
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.position: int | None = None
+        self.visit_counts: np.ndarray | None = None
+        self.history: list[int] = []
+
+    def matrix(self, graph: ClientGraph) -> np.ndarray:
+        if self.transition == "degree":
+            return degree_transition_matrix(graph)
+        if self.transition == "metropolis":
+            return metropolis_transition_matrix(graph)
+        raise ValueError(f"unknown transition kind {self.transition!r}")
+
+    def reset(self, graph: ClientGraph, start: int | None = None) -> int:
+        self.visit_counts = np.zeros(graph.n, dtype=np.int64)
+        self.position = (int(self._rng.integers(graph.n))
+                         if start is None else int(start))
+        self.visit_counts[self.position] += 1
+        self.history = [self.position]
+        return self.position
+
+    def step(self, graph: ClientGraph) -> int:
+        """One random-walk move: i_{k+1} ~ [P(k)]_{i_k, ·} (Eq. 2)."""
+        assert self.position is not None, "call reset() first"
+        p = self.matrix(graph)
+        row = p[self.position]
+        # The dynamic graph may have disconnected the current node from its
+        # old neighbors; row always sums to 1 on the *current* graph.
+        self.position = int(self._rng.choice(graph.n, p=row))
+        self.visit_counts[self.position] += 1
+        self.history.append(self.position)
+        return self.position
+
+    def hitting_time(self) -> int | None:
+        """T = max_i T_i once every client has been visited (paper §4)."""
+        if self.visit_counts is None or (self.visit_counts == 0).any():
+            return None
+        seen: set[int] = set()
+        for k, i in enumerate(self.history):
+            seen.add(i)
+            if len(seen) == len(self.visit_counts):
+                return k
+        return None

@@ -1,0 +1,60 @@
+"""Differentially private RWSADMM (the paper's §6 future-work item).
+
+Mechanism: the only thing a client transmits is its contribution delta
+Δc = c_new − c_old (Eq. 14's upload). We clip Δc to an l2 ball of radius
+``clip`` and add Gaussian noise σ·clip — the standard Gaussian mechanism,
+giving (ε, δ)-DP per round w.r.t. the client's local dataset; composition
+over T visits follows the usual moments accountant bound (reported here
+with the simple advanced-composition formula).
+
+This is exactly where DP belongs in RWSADMM: x_i and z_i never leave the
+client; the walking token y only ever sees clipped+noised deltas.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import tree
+
+PyTree = Any
+
+
+def clip_tree(t: PyTree, clip: float) -> PyTree:
+    """Project onto the l2 ball of radius ``clip`` (global norm)."""
+    nrm = tree.norm(t)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+    return tree.scale(t, scale)
+
+
+def gaussian_noise_like(key, t: PyTree, sigma: float) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    keys = jax.random.split(key, len(leaves))
+    noised = [jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype)
+              * sigma for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def privatize_delta(key, c_new: PyTree, c_old: PyTree, *, clip: float,
+                    noise_multiplier: float) -> PyTree:
+    """DP upload: clip(Δc) + N(0, (σ·clip)²). Returns the private Δc."""
+    delta = tree.sub(c_new, c_old)
+    delta = clip_tree(delta, clip)
+    noise = gaussian_noise_like(key, delta, noise_multiplier * clip)
+    return tree.add(delta, noise)
+
+
+def epsilon_advanced_composition(noise_multiplier: float, visits: int,
+                                 delta: float = 1e-5) -> float:
+    """(ε, δ) after ``visits`` Gaussian-mechanism releases (advanced
+    composition; loose vs RDP but dependency-free)."""
+    if noise_multiplier <= 0:
+        return float("inf")
+    eps_step = math.sqrt(2.0 * math.log(1.25 / delta)) / noise_multiplier
+    if eps_step > 50.0:  # exp() would overflow; privacy is vacuous anyway
+        return float("inf")
+    return (math.sqrt(2.0 * visits * math.log(1.0 / delta)) * eps_step
+            + visits * eps_step * (math.exp(eps_step) - 1.0))

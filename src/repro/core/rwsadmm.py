@@ -1,0 +1,346 @@
+"""RWSADMM: Random Walk Stochastic ADMM (paper §3.1, Algorithm 1).
+
+The optimization problem (paper Eq. 1/7):
+
+    min_{x_1..n}  (1/n) Σ_i f_i(x_i)
+    s.t.          |x_i − x_j| ≤ ε_i   ∀ j ∈ N(i)          (hard inequality)
+
+reformulated with a server variable y ("local proximity" token carried by
+the mobile server) and solved by stochastic ADMM with closed-form updates:
+
+    x ← y' + (1/β)·sgn(t') ⊙ (z' − ε − g)            (Eq. 11, t' = y' − x')
+    z ← z' + κβ·(x − y' − ε)                         (Eq. 15, κ decayed)
+    y ← y' + (1/n_i)·[ c(x, z) − c(x', z') ]          (Eq. 14, incremental)
+        with contribution  c(x, z) = x − (z/β + ε) ⊙ sgn(y' − x)
+
+All three updates are **elementwise** over the parameter pytree — this is
+what makes the per-round cost O(p) compute and O(1) communication (the
+y token is the only thing that moves with the server).
+
+Everything here is functional JAX (jit/vmap-safe). Host-side orchestration
+(random walk, graph regeneration, κ decay bookkeeping) lives in
+``repro.fl.simulation``; the mesh-parallel zone step lives in
+``repro.launch``.
+
+Implementation notes vs the paper:
+  * Eq. (14)'s typography is ambiguous about whether 1/n_i scales both
+    bracket terms; deriving the incremental form from the closed-form
+    solution Eq. (13) (y = (1/n_i) Σ_j c_j) requires it to scale the
+    *difference*, which is what we implement:
+        y ← y' + (1/n_i)(c_new − c_old).
+    The multi-client generalization (Eq. 31) follows the same derivation:
+        y ← y' + (1/n_i) Σ_{j∈S} (c_new_j − c_old_j).
+  * ε is a scalar broadcast over parameters (paper's experiments use
+    ε = 1e-5 for every client); vector ε_i per client is supported by
+    passing an array.
+  * sgn is jnp.sign (sgn(0) = 0); the paper leaves sgn(0) unspecified.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import tree
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RWSADMMHparams:
+    """Hyperparameters (paper App. D.3).
+
+    beta: ADMM barrier parameter β. Theory needs β > 2L² + L + 2
+        (Lemma 4.7); the experiments use 10/100 depending on dataset.
+    kappa: initial dual step κ (Eq. 15); decayed ×``kappa_decay`` per round
+        (Algorithm 1 line: κ = 0.99 κ).
+    epsilon: hard-constraint relaxation ε (paper uses 1e-5). The split
+        ε_half = ε/2 enters the reformulated constraint (Eq. 7).
+    """
+
+    beta: float = 10.0
+    kappa: float = 0.001
+    kappa_decay: float = 0.99
+    epsilon: float = 1e-5
+
+    @property
+    def eps_half(self) -> float:
+        return self.epsilon / 2.0
+
+
+class ClientState(NamedTuple):
+    """Per-client ADMM variables (kept on the client between visits)."""
+
+    x: PyTree  # personalized model parameters
+    z: PyTree  # dual variable
+
+
+class ServerState(NamedTuple):
+    """The token the mobile server carries."""
+
+    y: PyTree       # local-proximity variable (Eq. 7)
+    kappa: jnp.ndarray  # current dual step size (decayed per round)
+    round: jnp.ndarray  # iteration counter k
+
+
+def init_states(params_template: PyTree, hp: RWSADMMHparams,
+                n_clients: int | None = None):
+    """Paper Eq. (32): x⁰ = z⁰ = 0, y¹ = (1/n) Σ (x⁰ − z⁰/β) = 0.
+
+    When ``n_clients`` is given, client states are stacked on a leading
+    axis (the layout used by the vmapped simulation runner).
+    """
+    zeros = tree.zeros_like(params_template)
+    if n_clients is None:
+        client = ClientState(x=zeros, z=zeros)
+    else:
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((n_clients,) + l.shape, l.dtype), params_template
+        )
+        client = ClientState(x=stacked, z=stacked)
+    server = ServerState(
+        y=zeros,
+        kappa=jnp.asarray(hp.kappa, jnp.float32),
+        round=jnp.asarray(0, jnp.int32),
+    )
+    return client, server
+
+
+def init_states_warm(params: PyTree, hp: RWSADMMHparams,
+                     n_clients: int) -> tuple[ClientState, ServerState]:
+    """Warm initialization from a model init (all clients share it).
+
+    The paper's theory initializes at 0 (Eq. 32), which is fine for MLR but
+    wasteful for deep nets; starting every x_i = y = params, z = 0 keeps
+    Eq. (32)'s invariant y = (1/n)Σ(x_i − z_i/β)."""
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (n_clients,) + l.shape), params
+    )
+    client = ClientState(x=stacked, z=tree.zeros_like(stacked))
+    server = ServerState(
+        y=params,
+        kappa=jnp.asarray(hp.kappa, jnp.float32),
+        round=jnp.asarray(0, jnp.int32),
+    )
+    return client, server
+
+
+# ---------------------------------------------------------------------------
+# Closed-form updates (Eq. 11 / 15 / 14) — leafwise over pytrees.
+# ---------------------------------------------------------------------------
+
+def x_update(y_prev: PyTree, x_prev: PyTree, z_prev: PyTree, grad: PyTree,
+             hp: RWSADMMHparams, *, literal_eq11: bool = False) -> PyTree:
+    """Solver of the linearized x-subproblem (Eq. 10).
+
+    Setting the subgradient of Eq. (10) to zero gives, elementwise
+    (u = y' − x, s = sgn(u) approximated by sgn(t') at the previous
+    iterate):
+
+        0 = g − s·(z' + β(|u| − ε))   ⇒   x = y' − g/β + s ⊙ (z' − βε)/β
+
+    The paper's printed Eq. (11) folds g *inside* the sign product
+    (x = y' + sgn(t')⊙(z' − ε − g)/β). That form is degenerate under the
+    paper's own initialization (Eq. 32 gives t' = 0 ⇒ sgn = 0 ⇒ x never
+    moves) and scrambles gradient signs; we treat it as a typo for the
+    derivation above — note the derived form reduces to a stochastic
+    proximal-gradient step x = y' − g/β on first visit, consistent with
+    the paper's tuned β=10 behaving like lr=0.1. Set ``literal_eq11=True``
+    to reproduce the printed formula (used in an ablation benchmark).
+    """
+    beta, eps = hp.beta, hp.eps_half
+
+    if literal_eq11:
+        def leaf(y, x, z, g):
+            s = jnp.sign(y - x)
+            return y + (s * (z - eps - g)) / beta
+    else:
+        def leaf(y, x, z, g):
+            s = jnp.sign(y - x)
+            return y - g / beta + s * (z - beta * eps) / beta
+
+    return tree.tree_map(leaf, y_prev, x_prev, z_prev, grad)
+
+
+def z_update(x_new: PyTree, y_prev: PyTree, z_prev: PyTree,
+             hp: RWSADMMHparams, kappa) -> PyTree:
+    """Eq. (15): z = z' + κβ·(x − y' − ε), κ decayed per round."""
+    beta, eps = hp.beta, hp.eps_half
+
+    def leaf(x, y, z):
+        return z + kappa * beta * (x - y - eps)
+
+    return tree.tree_map(leaf, x_new, y_prev, z_prev)
+
+
+def contribution(x: PyTree, z: PyTree, y_ref: PyTree,
+                 hp: RWSADMMHparams) -> PyTree:
+    """c(x, z) = x − (z/β + ε) ⊙ sgn(y' − x)   (the bracket of Eq. 13/14)."""
+    beta, eps = hp.beta, hp.eps_half
+
+    def leaf(x_, z_, y_):
+        return x_ - (z_ / beta + eps) * jnp.sign(y_ - x_)
+
+    return tree.tree_map(leaf, x, z, y_ref)
+
+
+def y_update(y_prev: PyTree, c_new: PyTree, c_old: PyTree,
+             n_total) -> PyTree:
+    """Eq. (14) incremental y-update: y = y' + (1/n)(c_new − c_old).
+
+    The printed Eq. (14) divides by n_{i_k} = |N(i_k)| (zone size), but the
+    incremental form only maintains the running-average invariant that the
+    paper's own initialization establishes (Eq. 32: y = (1/n)Σ_i(x_i −
+    z_i/β) over ALL n clients) when the replacement is scaled by 1/n.
+    Scaling by 1/n_i over-applies each replacement by n/n_i — empirically a
+    geometric divergence (~×1.3/round at n=20, n_i≈6). Walkman's analogous
+    token update [35] also uses 1/n. We treat Eq. (14)'s n_{i_k} as a typo
+    for n; the ``benchmarks/ablations`` suite includes the literal variant
+    for comparison.
+    """
+
+    def leaf(y, cn, co):
+        return y + (cn - co) / n_total
+
+    return tree.tree_map(leaf, y_prev, c_new, c_old)
+
+
+def subproblem_grad(x: PyTree, y_prev: PyTree, z: PyTree, grad_f: PyTree,
+                    hp: RWSADMMHparams) -> PyTree:
+    """(Sub)gradient of the x-subproblem objective (Eq. 9):
+
+        F(x) = f(x) + ⟨z, |y'−x| − ε⟩ + (β/2)‖|y'−x| − ε‖²
+        ∇F   = ∇f(x) + sgn(x−y')⊙(z − βε) + β(x − y')
+
+    Used by the iterative (prox-SGD) solver of Eq. (9) — the paper's
+    original subproblem before the one-step stochastic linearization of
+    Eq. (10). Multiple stochastic steps on this objective match the
+    paper's reported per-iteration wall-clock (≈seconds, vs ms for one
+    minibatch gradient) and give the dual/constraint structure teeth.
+    """
+    beta, eps = hp.beta, hp.eps_half
+
+    def leaf(x_, y_, z_, g_):
+        t = x_ - y_
+        return g_ + jnp.sign(t) * (z_ - beta * eps) + beta * t
+
+    return tree.tree_map(leaf, x, y_prev, z, grad_f)
+
+
+def client_round(client: ClientState, y_prev: PyTree, grad: PyTree,
+                 hp: RWSADMMHparams, kappa, *, literal_eq11: bool = False):
+    """One client's full local update when the server is in range.
+
+    Returns the new client state plus the (c_new, c_old) contribution pair
+    the server needs for its incremental y-update. This is everything that
+    crosses the wireless link — O(1) tensors, independent of n.
+    """
+    c_old = contribution(client.x, client.z, y_prev, hp)
+    x_new = x_update(y_prev, client.x, client.z, grad, hp,
+                     literal_eq11=literal_eq11)
+    z_new = z_update(x_new, y_prev, client.z, hp, kappa)
+    c_new = contribution(x_new, z_new, y_prev, hp)
+    return ClientState(x=x_new, z=z_new), c_new, c_old
+
+
+def zone_round(clients: ClientState, y_prev: PyTree, grads: PyTree,
+               hp: RWSADMMHparams, kappa, n_total):
+    """Multi-client zone update (paper Eq. 31): all active clients in
+    S(i_k) update in parallel (stacked leading axis), then the server folds
+    the summed contribution deltas into y.
+
+    clients / grads: pytrees with a leading ``S`` axis (active clients).
+    n_total: total client count n (see :func:`y_update` for why the fold
+    uses 1/n rather than the printed 1/n_i).
+    """
+    upd = jax.vmap(
+        lambda c, g: client_round(c, y_prev, g, hp, kappa),
+        in_axes=(0, 0),
+    )
+    new_clients, c_new, c_old = upd(clients, grads)
+    delta = tree.tree_map(
+        lambda cn, co: jnp.sum(cn - co, axis=0), c_new, c_old
+    )
+    y_new = tree.tree_map(lambda y, d: y + d / n_total, y_prev, delta)
+    return new_clients, y_new
+
+
+def server_round_done(server: ServerState, y_new: PyTree,
+                      hp: RWSADMMHparams) -> ServerState:
+    """Advance the server token: store y, decay κ (Algorithm 1)."""
+    return ServerState(
+        y=y_new,
+        kappa=server.kappa * hp.kappa_decay,
+        round=server.round + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lyapunov monitors (Eq. 8 / 25) — used by tests & convergence diagnostics.
+# ---------------------------------------------------------------------------
+
+def augmented_lagrangian(y: PyTree, xs: ClientState, losses: jnp.ndarray,
+                         hp: RWSADMMHparams) -> jnp.ndarray:
+    """L_β(y, X; Z) of Eq. (8) with the single global token y.
+
+    xs: stacked client states (leading axis n). losses: per-client f_i(x_i).
+    """
+    beta, eps = hp.beta, hp.eps_half
+
+    def per_leaf(x, z, y_):
+        r = jnp.abs(y_[None] - x) - eps          # |y − x_i| − ε, per client
+        inner = jnp.sum(z * r, axis=tuple(range(1, r.ndim)))
+        quad = jnp.sum(r * r, axis=tuple(range(1, r.ndim)))
+        return inner + (beta / 2.0) * quad
+
+    leaves = jax.tree_util.tree_map(per_leaf, xs.x, xs.z, y)
+    per_client = jax.tree_util.tree_reduce(jnp.add, leaves)  # (n,)
+    n = losses.shape[0]
+    return (jnp.sum(losses) + jnp.sum(per_client)) / n
+
+
+def lyapunov_m(l_beta: jnp.ndarray, last_x_delta_sq: jnp.ndarray,
+               lipschitz: float, n: int) -> jnp.ndarray:
+    """M_β^k = L_β^k + (L²/n) Σ_i ||x_i^{τ(k,i)+1} − x_i^{τ(k,i)}||²
+    (Eq. 25 as used in Lemma B.4). ``last_x_delta_sq``: per-client squared
+    norm of the most recent x update (0 until first visit)."""
+    return l_beta + (lipschitz**2 / n) * jnp.sum(last_x_delta_sq)
+
+
+def constraint_violation(y: PyTree, xs_stacked: PyTree,
+                         hp: RWSADMMHparams) -> jnp.ndarray:
+    """max_i || max(|y − x_i| − ε/2, 0) ||_∞ — hard-constraint residual of
+    the reformulated problem (Eq. 7). → 0 at feasibility."""
+    eps = hp.eps_half
+
+    def leaf(x, y_):
+        v = jnp.maximum(jnp.abs(y_[None] - x) - eps, 0.0)
+        return jnp.max(v)
+
+    leaves = jax.tree_util.tree_map(leaf, xs_stacked, y)
+    return jax.tree_util.tree_reduce(jnp.maximum, leaves)
+
+
+def pairwise_violation(xs_stacked: PyTree, adjacency: jnp.ndarray,
+                       hp: RWSADMMHparams) -> jnp.ndarray:
+    """max over edges (i,j) of || max(|x_i − x_j| − ε, 0) ||_∞ — the
+    ORIGINAL constraint of Eq. (1), implied by Eq. (7) via triangle
+    inequality."""
+    eps = hp.epsilon
+
+    def leaf(x):
+        diff = jnp.abs(x[:, None] - x[None])  # (n, n, ...)
+        viol = jnp.maximum(diff - eps, 0.0)
+        axes = tuple(range(2, viol.ndim))
+        v = jnp.max(viol, axis=axes) if axes else viol
+        return jnp.max(jnp.where(adjacency, v, 0.0))
+
+    leaves = jax.tree_util.tree_map(leaf, xs_stacked)
+    return jax.tree_util.tree_reduce(jnp.maximum, leaves)
+
+
+def beta_lower_bound(lipschitz: float) -> float:
+    """Theory threshold β > 2L² + L + 2 (Lemma 4.7 / Theorem 4.8)."""
+    return 2.0 * lipschitz**2 + lipschitz + 2.0

@@ -1,0 +1,131 @@
+"""Pytree arithmetic used throughout the RWSADMM core.
+
+All RWSADMM state variables (client x_i, dual z_i, server y) are parameter
+pytrees of the underlying model; the closed-form updates (paper Eq. 11, 14,
+15) are purely elementwise, so every helper here maps leaf-wise.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def zeros_like(t: PyTree) -> PyTree:
+    return tree_map(jnp.zeros_like, t)
+
+
+def ones_like(t: PyTree) -> PyTree:
+    return tree_map(jnp.ones_like, t)
+
+
+def add(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.add, a, b)
+
+
+def sub(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.subtract, a, b)
+
+
+def mul(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(jnp.multiply, a, b)
+
+
+def scale(a: PyTree, s) -> PyTree:
+    return tree_map(lambda x: x * s, a)
+
+
+def add_scaled(a: PyTree, b: PyTree, s) -> PyTree:
+    """a + s * b, leafwise."""
+    return tree_map(lambda x, y: x + s * y, a, b)
+
+
+def sign(a: PyTree) -> PyTree:
+    return tree_map(jnp.sign, a)
+
+
+def sub_scalar(a: PyTree, s) -> PyTree:
+    return tree_map(lambda x: x - s, a)
+
+
+def dot(a: PyTree, b: PyTree):
+    """Global inner product <a, b> across all leaves."""
+    leaves = tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves)
+
+
+def sq_norm(a: PyTree):
+    """Global squared l2 norm across all leaves."""
+    leaves = tree_map(lambda x: jnp.sum(jnp.square(x)), a)
+    return jax.tree_util.tree_reduce(jnp.add, leaves)
+
+
+def norm(a: PyTree):
+    return jnp.sqrt(sq_norm(a))
+
+
+def linf(a: PyTree):
+    leaves = tree_map(lambda x: jnp.max(jnp.abs(x)), a)
+    return jax.tree_util.tree_reduce(jnp.maximum, leaves)
+
+
+def mean(trees: list[PyTree]) -> PyTree:
+    """Elementwise mean of a list of pytrees."""
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = add(acc, t)
+    return scale(acc, 1.0 / n)
+
+
+def weighted_mean(trees: list[PyTree], weights) -> PyTree:
+    total = float(sum(weights))
+    acc = scale(trees[0], weights[0] / total)
+    for t, w in zip(trees[1:], weights[1:]):
+        acc = add_scaled(acc, t, w / total)
+    return acc
+
+
+def n_params(t: PyTree) -> int:
+    return sum(int(math.prod(l.shape)) for l in jax.tree_util.tree_leaves(t))
+
+
+def n_bytes(t: PyTree) -> int:
+    return sum(
+        int(math.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(t)
+    )
+
+
+def flatten(t: PyTree) -> jnp.ndarray:
+    """Concatenate all leaves into one flat vector (used by fused kernels)."""
+    leaves = jax.tree_util.tree_leaves(t)
+    return jnp.concatenate([jnp.ravel(l) for l in leaves])
+
+
+def unflatten(template: PyTree, flat: jnp.ndarray) -> PyTree:
+    """Inverse of :func:`flatten`, using ``template`` for shapes/treedef."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        size = int(math.prod(l.shape))
+        out.append(jnp.reshape(flat[off : off + size], l.shape).astype(l.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def any_nan(t: PyTree):
+    leaves = tree_map(lambda x: jnp.any(jnp.isnan(x)), t)
+    return jax.tree_util.tree_reduce(jnp.logical_or, leaves)
+
+
+def cast(t: PyTree, dtype) -> PyTree:
+    return tree_map(lambda x: x.astype(dtype), t)

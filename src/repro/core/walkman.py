@@ -1,0 +1,68 @@
+"""Walkman-style random-walk consensus ADMM (Mao et al. 2020, paper [35]).
+
+The closest prior algorithm to RWSADMM: a walker token y performs a random
+walk over the agents; exactly one agent is activated per iteration; updates
+enforce *consensus* (x_i = y for all i) instead of RWSADMM's hard inequality
+proximity. Included as an ablation baseline — it isolates the value of the
+paper's hard-constraint personalization (RWSADMM vs Walkman differ exactly
+there, holding the random-walk/token structure fixed).
+
+We implement the gradient-type variant (Walkman's inexact update, analogous
+to the paper's stochastic linearization):
+
+    x_i ← y' − (1/β)(g_i(x_i') + z_i')
+    z_i ← z_i' + β (x_i − y')
+    y  ← y' + (1/n)[(x_i + z_i/β) − (x_i' + z_i'/β)]
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import tree
+
+PyTree = Any
+
+
+class WalkmanClientState(NamedTuple):
+    x: PyTree
+    z: PyTree
+
+
+class WalkmanServerState(NamedTuple):
+    y: PyTree
+    round: jnp.ndarray
+
+
+def init_states(params_template: PyTree, n_clients: int):
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((n_clients,) + l.shape, l.dtype), params_template
+    )
+    return (
+        WalkmanClientState(x=stacked, z=stacked),
+        WalkmanServerState(
+            y=tree.zeros_like(params_template),
+            round=jnp.asarray(0, jnp.int32),
+        ),
+    )
+
+
+def client_round(client: WalkmanClientState, y_prev: PyTree, grad: PyTree,
+                 beta: float):
+    def x_leaf(y, g, z):
+        return y - (g + z) / beta
+
+    x_new = tree.tree_map(x_leaf, y_prev, grad, client.z)
+    z_new = tree.tree_map(
+        lambda z, x, y: z + beta * (x - y), client.z, x_new, y_prev
+    )
+    c_new = tree.tree_map(lambda x, z: x + z / beta, x_new, z_new)
+    c_old = tree.tree_map(lambda x, z: x + z / beta, client.x, client.z)
+    return WalkmanClientState(x=x_new, z=z_new), c_new, c_old
+
+
+def y_update(y_prev: PyTree, c_new: PyTree, c_old: PyTree, n: int) -> PyTree:
+    return tree.tree_map(lambda y, cn, co: y + (cn - co) / n,
+                         y_prev, c_new, c_old)

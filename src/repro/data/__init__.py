@@ -1,0 +1,5 @@
+"""Offline data pipeline: synthetic datasets + federated partitioners."""
+from .partition import dirichlet_split, pathological_split  # noqa: F401
+from .synthetic_images import make_image_dataset  # noqa: F401
+from .synthetic_lr import make_synthetic_lr  # noqa: F401
+from .loader import ClientDataset, FederatedData, minibatch  # noqa: F401

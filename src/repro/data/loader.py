@@ -1,0 +1,141 @@
+"""Client dataset containers + padded stacked layout for vmapped FL.
+
+The simulation runner jits a *single* round function over stacked client
+arrays; per-client datasets are padded to a common ``max_samples`` with a
+validity mask, so heterogeneous sizes (the paper's variable allocations)
+never retrigger compilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .partition import train_test_split_indices
+
+
+@dataclasses.dataclass
+class ClientDataset:
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @property
+    def n_train(self) -> int:
+        return len(self.y_train)
+
+    @property
+    def n_test(self) -> int:
+        return len(self.y_test)
+
+
+@dataclasses.dataclass
+class FederatedData:
+    """Stacked, padded federated dataset.
+
+    x_train: (n_clients, max_train, *feat)   mask_train: (n_clients, max_train)
+    x_test:  (n_clients, max_test, *feat)    mask_test:  (n_clients, max_test)
+    """
+
+    x_train: np.ndarray
+    y_train: np.ndarray
+    mask_train: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+    mask_test: np.ndarray
+
+    @property
+    def n_clients(self) -> int:
+        return self.x_train.shape[0]
+
+    @property
+    def feature_shape(self) -> tuple[int, ...]:
+        return self.x_train.shape[2:]
+
+    def client(self, i: int) -> ClientDataset:
+        mt, me = self.mask_train[i].astype(bool), self.mask_test[i].astype(bool)
+        return ClientDataset(
+            x_train=self.x_train[i][mt], y_train=self.y_train[i][mt],
+            x_test=self.x_test[i][me], y_test=self.y_test[i][me],
+        )
+
+
+def build_federated(
+    features: np.ndarray,
+    labels: np.ndarray,
+    client_indices: list[np.ndarray],
+    *,
+    test_frac: float = 0.25,
+    seed: int = 0,
+) -> FederatedData:
+    """Split each client's allocation 75/25 (paper §5), pad and stack."""
+    clients = []
+    for k, idx in enumerate(client_indices):
+        tr, te = train_test_split_indices(len(idx), test_frac, seed + k)
+        clients.append((features[idx[tr]], labels[idx[tr]],
+                        features[idx[te]], labels[idx[te]]))
+    return _stack(clients)
+
+
+def build_federated_from_pairs(
+    per_client: list[tuple[np.ndarray, np.ndarray]],
+    *,
+    test_frac: float = 0.25,
+    seed: int = 0,
+) -> FederatedData:
+    """For generators that already emit per-client data (Synthetic(α,β))."""
+    clients = []
+    for k, (x, y) in enumerate(per_client):
+        tr, te = train_test_split_indices(len(y), test_frac, seed + k)
+        clients.append((x[tr], y[tr], x[te], y[te]))
+    return _stack(clients)
+
+
+def _stack(clients) -> FederatedData:
+    max_tr = max(len(c[1]) for c in clients)
+    max_te = max(len(c[3]) for c in clients)
+    feat = clients[0][0].shape[1:]
+    n = len(clients)
+
+    def alloc(m, shape, dtype):
+        return np.zeros((n, m) + shape, dtype=dtype)
+
+    xt = alloc(max_tr, feat, np.float32)
+    yt = alloc(max_tr, (), np.int32)
+    mt = alloc(max_tr, (), np.float32)
+    xe = alloc(max_te, feat, np.float32)
+    ye = alloc(max_te, (), np.int32)
+    me = alloc(max_te, (), np.float32)
+    for k, (a, b, c, d) in enumerate(clients):
+        xt[k, : len(b)] = a
+        yt[k, : len(b)] = b
+        mt[k, : len(b)] = 1.0
+        xe[k, : len(d)] = c
+        ye[k, : len(d)] = d
+        me[k, : len(d)] = 1.0
+    return FederatedData(xt, yt, mt, xe, ye, me)
+
+
+def minibatch(
+    rng: np.random.Generator,
+    fed: FederatedData,
+    client: int,
+    batch_size: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sample a minibatch ξ from one client's (unpadded) training data."""
+    mask = fed.mask_train[client].astype(bool)
+    valid = np.flatnonzero(mask)
+    take = rng.choice(valid, size=min(batch_size, len(valid)),
+                      replace=len(valid) < batch_size)
+    return fed.x_train[client][take], fed.y_train[client][take]
+
+
+def minibatch_indices(
+    rng: np.random.Generator, fed: FederatedData, client: int,
+    batch_size: int,
+) -> np.ndarray:
+    """Index-only variant (fixed ``batch_size``, samples with replacement if
+    the client is small) — keeps jitted round shapes static."""
+    valid = np.flatnonzero(fed.mask_train[client].astype(bool))
+    return rng.choice(valid, size=batch_size, replace=len(valid) < batch_size)

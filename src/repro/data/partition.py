@@ -1,0 +1,106 @@
+"""Federated partitioners.
+
+``pathological_split`` is the paper's §5 setting: "The data on each client
+contains a portion of labels (two out of ten labels), and the allocated
+data size for each client is variable."  ``dirichlet_split`` is the
+standard Dir(α) alternative (beyond-paper, used in ablations).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pathological_split(
+    labels: np.ndarray,
+    n_clients: int,
+    *,
+    labels_per_client: int = 2,
+    size_variability: float = 0.5,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """Returns per-client index arrays. Each client draws from exactly
+    ``labels_per_client`` classes; per-client sizes vary by up to
+    ±``size_variability`` relative to the mean."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    by_class = [np.flatnonzero(labels == c) for c in range(n_classes)]
+    for idx in by_class:
+        rng.shuffle(idx)
+    ptr = [0] * n_classes
+
+    # Assign label pairs round-robin so every class is used roughly equally.
+    client_labels = []
+    pool = rng.permutation(
+        np.tile(np.arange(n_classes),
+                int(np.ceil(n_clients * labels_per_client / n_classes)))
+    )
+    p = 0
+    for _ in range(n_clients):
+        chosen: list[int] = []
+        while len(chosen) < labels_per_client:
+            c = int(pool[p % len(pool)])
+            p += 1
+            if c not in chosen:
+                chosen.append(c)
+        client_labels.append(chosen)
+
+    # Per-(client, class) demand ∝ variable sizes.
+    base = len(labels) // (n_clients * labels_per_client)
+    out: list[np.ndarray] = []
+    for k in range(n_clients):
+        take: list[np.ndarray] = []
+        for c in client_labels[k]:
+            frac = 1.0 + size_variability * (rng.random() * 2.0 - 1.0)
+            cnt = max(4, int(base * frac))
+            avail = len(by_class[c]) - ptr[c]
+            if avail < cnt:  # recycle with replacement if exhausted
+                extra = rng.choice(by_class[c], size=cnt - avail)
+                take.append(
+                    np.concatenate([by_class[c][ptr[c]:], extra])
+                )
+                ptr[c] = len(by_class[c])
+            else:
+                take.append(by_class[c][ptr[c]: ptr[c] + cnt])
+                ptr[c] += cnt
+        out.append(np.concatenate(take))
+    return out
+
+
+def dirichlet_split(
+    labels: np.ndarray,
+    n_clients: int,
+    *,
+    alpha: float = 0.3,
+    min_per_client: int = 8,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    out = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for k, part in enumerate(np.split(idx, cuts)):
+            out[k].extend(part.tolist())
+    result = []
+    all_idx = np.arange(len(labels))
+    for k in range(n_clients):
+        arr = np.asarray(out[k], dtype=np.int64)
+        if len(arr) < min_per_client:
+            arr = np.concatenate(
+                [arr, rng.choice(all_idx, size=min_per_client - len(arr))]
+            )
+        result.append(arr)
+    return result
+
+
+def train_test_split_indices(
+    n: int, test_frac: float = 0.25, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Paper §5: local datasets split 75% / 25% train/test."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_test = max(1, int(round(n * test_frac)))
+    return perm[n_test:], perm[:n_test]

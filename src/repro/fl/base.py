@@ -1,0 +1,156 @@
+"""Shared FL trainer substrate.
+
+All algorithms (RWSADMM + the five baselines + Walkman) operate on the same
+device-resident stacked client data and share jitted building blocks:
+stochastic gradients, local-SGD inner loops (lax.scan), and personalized
+evaluation. Batches are sampled *inside* jit with fixed shapes, so a whole
+simulation reuses one compiled round function per algorithm.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.loader import FederatedData
+from ..models.small import SmallModel, accuracy, cross_entropy
+
+PyTree = Any
+
+
+class DeviceData(NamedTuple):
+    """Stacked federated data on device (leading axis = client)."""
+
+    x_train: jnp.ndarray  # (n, m_tr, *feat)
+    y_train: jnp.ndarray  # (n, m_tr)
+    n_train: jnp.ndarray  # (n,) valid counts
+    x_test: jnp.ndarray   # (n, m_te, *feat)
+    y_test: jnp.ndarray   # (n, m_te)
+    mask_test: jnp.ndarray  # (n, m_te)
+
+    @property
+    def n_clients(self) -> int:
+        return self.x_train.shape[0]
+
+
+def to_device_data(fed: FederatedData) -> DeviceData:
+    return DeviceData(
+        x_train=jnp.asarray(fed.x_train),
+        y_train=jnp.asarray(fed.y_train),
+        n_train=jnp.asarray(fed.mask_train.sum(axis=1).astype(np.int32)),
+        x_test=jnp.asarray(fed.x_test),
+        y_test=jnp.asarray(fed.y_test),
+        mask_test=jnp.asarray(fed.mask_test),
+    )
+
+
+def sample_batch(data: DeviceData, client: jnp.ndarray, key: jnp.ndarray,
+                 batch_size: int):
+    """Uniform-with-replacement minibatch ξ from one client (fixed shape)."""
+    idx = jax.random.randint(key, (batch_size,), 0, data.n_train[client])
+    return data.x_train[client, idx], data.y_train[client, idx]
+
+
+class TrainerBase:
+    """Common plumbing: loss/grad/local-SGD/eval builders for a model."""
+
+    name: str = "base"
+    personalized: bool = True
+
+    def __init__(self, model: SmallModel, data: DeviceData,
+                 batch_size: int = 20):
+        self.model = model
+        self.data = data
+        self.batch_size = int(batch_size)
+        self.n_clients = data.n_clients
+
+        def loss_fn(params, xb, yb, rng):
+            logits = model.apply(params, xb, train=True, rng=rng)
+            return cross_entropy(logits, yb)
+
+        self.loss_fn = loss_fn
+        self.grad_fn = jax.grad(loss_fn)
+        self.value_and_grad_fn = jax.value_and_grad(loss_fn)
+
+        def eval_client(params, client):
+            logits = model.apply(params, data.x_test[client], train=False)
+            m = data.mask_test[client]
+            return (accuracy(logits, data.y_test[client], m),
+                    cross_entropy(logits, data.y_test[client], m))
+
+        self._eval_client = eval_client
+
+        def train_loss_client(params, client, key):
+            xb, yb = sample_batch(data, client, key, self.batch_size)
+            return loss_fn(params, xb, yb, None)
+
+        self._train_loss_client = train_loss_client
+
+        # Personalized evaluation over all clients: params stacked (n, ...).
+        self.eval_stacked = jax.jit(
+            jax.vmap(eval_client, in_axes=(0, 0))
+        )
+        # One shared model evaluated on every client's test set.
+        self.eval_shared = jax.jit(
+            jax.vmap(eval_client, in_axes=(None, 0))
+        )
+
+    # -- local inner loops ------------------------------------------------
+    def make_local_sgd(self, lr: float, steps: int) -> Callable:
+        """(params, client, key) -> params after ``steps`` SGD steps on the
+        client's data. jit/vmap-safe."""
+
+        def run(params, client, key):
+            def body(p, k):
+                xb, yb = sample_batch(self.data, client, k, self.batch_size)
+                g = self.grad_fn(p, xb, yb, k)
+                p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+                return p, None
+
+            keys = jax.random.split(key, steps)
+            params, _ = jax.lax.scan(body, params, keys)
+            return params
+
+        return run
+
+    # -- evaluation hooks (override personalized_params in subclasses) ----
+    def personalized_params(self, state) -> PyTree | None:
+        """Stacked (n, ...) personalized parameters, or None."""
+        return None
+
+    def global_params(self, state) -> PyTree | None:
+        return None
+
+    def evaluate(self, state) -> dict:
+        out: dict[str, float] = {}
+        pers = self.personalized_params(state)
+        if pers is not None:
+            acc, loss = self.eval_stacked(pers, jnp.arange(self.n_clients))
+            out["acc_personalized"] = float(jnp.mean(acc))
+            out["acc_personalized_std"] = float(jnp.std(acc))
+            out["loss_personalized"] = float(jnp.mean(loss))
+        glob = self.global_params(state)
+        if glob is not None:
+            acc, loss = self.eval_shared(glob, jnp.arange(self.n_clients))
+            out["acc_global"] = float(jnp.mean(acc))
+            out["loss_global"] = float(jnp.mean(loss))
+        out["acc"] = out.get("acc_personalized", out.get("acc_global", 0.0))
+        return out
+
+    # -- abstract ----------------------------------------------------------
+    def init_state(self, key):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def round(self, state, rnd: int, rng: np.random.Generator):
+        """One communication round. Returns (state, metrics dict)."""
+        raise NotImplementedError  # pragma: no cover
+
+    # -- communication accounting ------------------------------------------
+    def comm_bytes_per_round(self, participants: int) -> int:
+        """Default: each participant downloads + uploads one model copy."""
+        from ..core import tree as t
+
+        p_bytes = t.n_bytes(self.model.init(jax.random.PRNGKey(0)))
+        return int(2 * participants * p_bytes)

@@ -1,0 +1,131 @@
+"""Fleet-RWSADMM (beyond-paper): multiple mobile servers.
+
+The paper's scenario has ONE tactical vehicle; its §6 scalability
+discussion motivates more. Here K walkers each carry their own token y_k
+and run independent random walks over the same dynamic graph; every
+``sync_every`` rounds the fleet rendezvouses (satellite link) and tokens
+average — between syncs, communication stays strictly local/O(1) per
+vehicle. Client states (x_i, z_i) are shared: a client updates against
+whichever vehicle reaches it.
+
+Effects vs a single walker: hitting time drops ~K× (coverage), and the
+averaged tokens keep a consensus anchor; with sync_every → ∞ the fleet
+degenerates into K independent federations.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import DynamicGraph
+from ..core.markov import RandomWalkServer
+from ..core.rwsadmm import RWSADMMHparams, ServerState
+from .base import DeviceData
+from .rwsadmm_trainer import RWSADMMState, RWSADMMTrainer
+
+
+class FleetState(NamedTuple):
+    base: RWSADMMState          # clients + ACTIVE walker's server view
+    tokens: tuple               # per-walker y pytrees
+    kappa: jnp.ndarray
+
+
+class FleetRWSADMMTrainer(RWSADMMTrainer):
+    name = "rwsadmm_fleet"
+
+    def __init__(self, model, data: DeviceData,
+                 hp: RWSADMMHparams = RWSADMMHparams(), *,
+                 n_walkers: int = 3, sync_every: int = 20, **kw):
+        super().__init__(model, data, hp, **kw)
+        self.n_walkers = int(n_walkers)
+        self.sync_every = int(sync_every)
+        seed = kw.get("seed", 0)
+        self.walkers = [RandomWalkServer(transition=self.walker.transition,
+                                         seed=seed + 10 + k)
+                        for k in range(self.n_walkers)]
+        for w in self.walkers:
+            w.reset(self.dyn_graph.current())
+
+    def init_state(self, key) -> FleetState:
+        base = super().init_state(key)
+        tokens = tuple(base.server.y for _ in range(self.n_walkers))
+        return FleetState(base=base, tokens=tokens,
+                          kappa=base.server.kappa)
+
+    def round(self, state: FleetState, rnd: int, rng: np.random.Generator):
+        k = rnd % self.n_walkers
+        graph = (self.dyn_graph.step() if rnd >= self.n_walkers
+                 else self.dyn_graph.current())
+        walker = self.walkers[k]
+        i_k = walker.step(graph) if rnd >= self.n_walkers \
+            else walker.position
+        zone = graph.neighborhood(i_k)
+        n_i = len(zone)
+        if n_i > self.zone_size:
+            others = zone[zone != i_k]
+            pick = rng.choice(others, size=self.zone_size - 1,
+                              replace=False)
+            active = np.concatenate([[i_k], pick])
+        else:
+            active = zone
+        mask = np.zeros(self.zone_size, np.float32)
+        mask[: len(active)] = 1.0
+        idx = np.zeros(self.zone_size, np.int32)
+        idx[: len(active)] = active
+
+        # run the zone step against walker k's token
+        base = RWSADMMState(
+            clients=state.base.clients,
+            server=ServerState(y=state.tokens[k], kappa=state.kappa,
+                               round=state.base.server.round),
+            visited=state.base.visited,
+        )
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        base, zone_loss = self._round_fn(
+            base, jnp.asarray(idx), jnp.asarray(mask),
+            jnp.asarray(float(n_i)), key)
+        tokens = list(state.tokens)
+        tokens[k] = base.server.y
+
+        # fleet rendezvous: average the tokens
+        if (rnd + 1) % self.sync_every == 0:
+            mean = jax.tree_util.tree_map(
+                lambda *ls: sum(ls) / len(ls), *tokens)
+            tokens = [mean for _ in tokens]
+
+        metrics = {
+            "round": rnd, "walker": k, "client": int(i_k),
+            "train_loss": float(zone_loss),
+            "comm_bytes": self.comm_bytes_per_round(len(active)),
+        }
+        return FleetState(base=base, tokens=tuple(tokens),
+                          kappa=base.server.kappa), metrics
+
+    def personalized_params(self, state: FleetState):
+        return super().personalized_params(state.base)
+
+    def global_params(self, state: FleetState):
+        return jax.tree_util.tree_map(
+            lambda *ls: sum(ls) / len(ls), *state.tokens)
+
+    def fleet_hitting_time(self) -> int | None:
+        """WALL-CLOCK steps until the union of walker visits covers all
+        clients (the K vehicles move simultaneously in the field, so one
+        wall step = one move of every walker — the fleet's coverage
+        advantage is ≈K× in wall time, not in total rounds)."""
+        counts = sum(w.visit_counts for w in self.walkers
+                     if w.visit_counts is not None)
+        if counts is None or (counts == 0).any():
+            return None
+        seen: set[int] = set()
+        hists = [w.history for w in self.walkers]
+        for step in range(max(len(h) for h in hists)):
+            for h in hists:
+                if step < len(h):
+                    seen.add(h[step])
+            if len(seen) == self.n_clients:
+                return step
+        return None

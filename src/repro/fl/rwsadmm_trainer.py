@@ -1,0 +1,260 @@
+"""RWSADMM federated trainer (paper Algorithm 1 + Eq. 31 multi-client zone).
+
+Host side per round k:
+  1. advance the dynamic graph (regenerated every ``regen_every`` rounds),
+  2. the mobile server random-walks to client i_k  (Markov chain, Eq. 2),
+  3. the active zone S(i_k) ⊆ N(i_k) is formed (up to ``zone_size``),
+  4. one compiled SPMD zone round runs: stochastic grads at the active
+     clients' x'_j, closed-form x/z updates, incremental y update,
+  5. κ ← 0.99 κ.
+
+The compiled round has *fixed shapes*: zones are padded to ``zone_size``
+with a mask; padded slots contribute zero deltas via scatter-add, so a
+whole training run reuses a single XLA executable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import rwsadmm
+from ..core.graph import DynamicGraph
+from ..core.markov import RandomWalkServer
+from ..core.rwsadmm import ClientState, RWSADMMHparams, ServerState
+from .base import DeviceData, TrainerBase, sample_batch
+
+
+class RWSADMMState(NamedTuple):
+    clients: ClientState      # stacked (n, ...)
+    server: ServerState
+    visited: jnp.ndarray      # (n,) bool — who holds a personalized model
+
+
+class RWSADMMTrainer(TrainerBase):
+    name = "rwsadmm"
+    personalized = True
+
+    def __init__(
+        self,
+        model,
+        data: DeviceData,
+        hp: RWSADMMHparams = RWSADMMHparams(),
+        *,
+        batch_size: int = 20,
+        zone_size: int = 8,
+        min_degree: int = 5,
+        regen_every: int = 10,
+        transition: str = "degree",
+        warm_init: bool = True,
+        solver: str = "prox_sgd",   # "prox_sgd" (Eq. 9, K steps) |
+                                    # "closed_form" (Eq. 10/11, one step)
+        inner_steps: int = 10,
+        inner_lr: float = 0.05,
+        dp_clip: float | None = None,     # l2 clip on uploaded Δc (DP)
+        dp_noise: float = 1.0,            # Gaussian noise multiplier σ
+        seed: int = 0,
+    ):
+        super().__init__(model, data, batch_size)
+        self.hp = hp
+        self.solver = solver
+        self.dp_clip = dp_clip
+        self.dp_noise = dp_noise
+        self.inner_steps = int(inner_steps)
+        self.inner_lr = float(inner_lr)
+        self.zone_size = int(min(zone_size, self.n_clients))
+        self.warm_init = warm_init
+        self.dyn_graph = DynamicGraph(
+            self.n_clients, min_degree=min_degree,
+            regen_every=regen_every, seed=seed,
+        )
+        self.walker = RandomWalkServer(transition=transition, seed=seed + 1)
+        self.walker.reset(self.dyn_graph.current())
+        self._round_fn = jax.jit(functools.partial(self._round_impl))
+
+    # ------------------------------------------------------------------
+    def init_state(self, key) -> RWSADMMState:
+        params = self.model.init(key)
+        if self.warm_init:
+            clients, server = rwsadmm.init_states_warm(
+                params, self.hp, self.n_clients
+            )
+        else:
+            clients, server = rwsadmm.init_states(
+                params, self.hp, self.n_clients
+            )
+        return RWSADMMState(
+            clients=clients, server=server,
+            visited=jnp.zeros((self.n_clients,), bool),
+        )
+
+    # ------------------------------------------------------------------
+    def _round_impl(self, state: RWSADMMState, zone_idx, zone_mask, n_i,
+                    key):
+        clients, server = state.clients, state.server
+        hp, kappa = self.hp, server.kappa
+
+        # Gather active clients' ADMM variables: (Z, ...)
+        gather = lambda t: jax.tree_util.tree_map(lambda l: l[zone_idx], t)
+        act = ClientState(x=gather(clients.x), z=gather(clients.z))
+
+        keys = jax.random.split(key, self.zone_size)
+
+        if self.solver == "closed_form":
+            # One-step stochastic linearization (Eq. 10/11).
+            def one_grad(params, client, k):
+                xb, yb = sample_batch(self.data, client, k, self.batch_size)
+                return self.value_and_grad_fn(params, xb, yb, k)
+
+            losses, grads = jax.vmap(one_grad)(act.x, zone_idx, keys)
+            upd = jax.vmap(
+                lambda c, g: rwsadmm.client_round(c, server.y, g, hp, kappa)
+            )
+            new_act, c_new, c_old = upd(act, grads)
+        else:
+            # Iterative solver of the x-subproblem (Eq. 9): K stochastic
+            # subgradient steps, warm-started at the client's stored x'.
+            eta = self.inner_lr
+
+            def solve_one(c: ClientState, client, k):
+                def body(x, kk):
+                    xb, yb = sample_batch(self.data, client, kk,
+                                          self.batch_size)
+                    loss, gf = self.value_and_grad_fn(x, xb, yb, kk)
+                    g = rwsadmm.subproblem_grad(x, server.y, c.z, gf, hp)
+                    x = jax.tree_util.tree_map(
+                        lambda a, b: a - eta * b, x, g
+                    )
+                    return x, loss
+
+                kks = jax.random.split(k, self.inner_steps)
+                x_new, losses_ = jax.lax.scan(body, c.x, kks)
+                z_new = rwsadmm.z_update(x_new, server.y, c.z, hp, kappa)
+                c_old_ = rwsadmm.contribution(c.x, c.z, server.y, hp)
+                c_new_ = rwsadmm.contribution(x_new, z_new, server.y, hp)
+                return (ClientState(x=x_new, z=z_new), c_new_, c_old_,
+                        losses_[-1])
+
+            new_act, c_new, c_old, losses = jax.vmap(solve_one)(
+                act, zone_idx, keys
+            )
+
+        # Masked incremental y-update:  y += (1/n) Σ_active (c_new − c_old)
+        # (1/n, not the printed 1/n_i — see core.rwsadmm.y_update docstring.)
+        m = zone_mask  # (Z,)
+        n_total = float(self.n_clients)
+
+        if self.dp_clip is not None:
+            # DP uploads: clip + noise each active client's Δc before it
+            # reaches the walking token (core/privacy.py).
+            from ..core import privacy
+
+            dkeys = jax.random.split(jax.random.fold_in(key, 97),
+                                     self.zone_size)
+            deltas = jax.vmap(
+                lambda k_, cn, co: privacy.privatize_delta(
+                    k_, cn, co, clip=self.dp_clip,
+                    noise_multiplier=self.dp_noise)
+            )(dkeys, c_new, c_old)
+        else:
+            deltas = jax.tree_util.tree_map(
+                lambda cn, co: cn - co, c_new, c_old)
+
+        def fold(y, d):
+            mm = m.reshape((-1,) + (1,) * (d.ndim - 1))
+            return y + jnp.sum(mm * d, axis=0) / n_total
+
+        y_new = jax.tree_util.tree_map(fold, server.y, deltas)
+
+        # Scatter active deltas back (duplicate-free: zone indices unique,
+        # padded slots masked to zero so .add is a no-op for them).
+        def scatter(full, old_act, new_act_):
+            mm = m.reshape((-1,) + (1,) * (new_act_.ndim - 1))
+            return full.at[zone_idx].add(mm * (new_act_ - old_act))
+
+        clients = ClientState(
+            x=jax.tree_util.tree_map(scatter, clients.x, act.x, new_act.x),
+            z=jax.tree_util.tree_map(scatter, clients.z, act.z, new_act.z),
+        )
+        server = ServerState(
+            y=y_new,
+            kappa=server.kappa * hp.kappa_decay,
+            round=server.round + 1,
+        )
+        visited = state.visited.at[zone_idx].max(m > 0)
+        zone_loss = jnp.sum(losses * m) / jnp.maximum(jnp.sum(m), 1.0)
+        return RWSADMMState(clients, server, visited), zone_loss
+
+    # ------------------------------------------------------------------
+    def round(self, state: RWSADMMState, rnd: int, rng: np.random.Generator):
+        graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()
+        i_k = self.walker.step(graph) if rnd > 0 else self.walker.position
+        zone = graph.neighborhood(i_k)
+        n_i = len(zone)
+        if n_i > self.zone_size:
+            # S(i_k) ⊂ N(i_k): i_k + random neighbors (Eq. 31 subset).
+            others = zone[zone != i_k]
+            pick = rng.choice(others, size=self.zone_size - 1, replace=False)
+            active = np.concatenate([[i_k], pick])
+        else:
+            active = zone
+        mask = np.zeros(self.zone_size, np.float32)
+        mask[: len(active)] = 1.0
+        idx = np.zeros(self.zone_size, np.int32)
+        idx[: len(active)] = active
+
+        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        state, zone_loss = self._round_fn(
+            state, jnp.asarray(idx), jnp.asarray(mask),
+            jnp.asarray(float(n_i)), key,
+        )
+        metrics = {
+            "round": rnd,
+            "client": int(i_k),
+            "zone": int(len(active)),
+            "n_i": n_i,
+            "train_loss": float(zone_loss),
+            "kappa": float(state.server.kappa),
+            "comm_bytes": self.comm_bytes_per_round(len(active)),
+        }
+        return state, metrics
+
+    # ------------------------------------------------------------------
+    def personalized_params(self, state: RWSADMMState):
+        """x_i for visited clients; unvisited clients fall back to the
+        server token y (what the mobile server would hand them)."""
+        def leaf(x, y):
+            v = state.visited.reshape((-1,) + (1,) * (y.ndim))
+            return jnp.where(v, x, y[None])
+
+        return jax.tree_util.tree_map(leaf, state.clients.x, state.server.y)
+
+    def global_params(self, state: RWSADMMState):
+        return state.server.y
+
+    def comm_bytes_per_round(self, participants: int) -> int:
+        # Server broadcasts y once into the zone; each active client
+        # uploads its contribution delta. O(1) in n — the paper's claim.
+        from ..core import tree as t
+
+        p_bytes = t.n_bytes(self.model.init(jax.random.PRNGKey(0)))
+        return int((1 + participants) * p_bytes)
+
+    # -- diagnostics -----------------------------------------------------
+    def lyapunov(self, state: RWSADMMState, key) -> dict:
+        """L_β and constraint residuals (Eq. 8 / Eq. 7) for monitoring."""
+        losses = []
+        for c in range(self.n_clients):
+            xi = jax.tree_util.tree_map(lambda l: l[c], state.clients.x)
+            losses.append(self._train_loss_client(xi, c, key))
+        losses = jnp.stack(losses)
+        l_beta = rwsadmm.augmented_lagrangian(
+            state.server.y, state.clients, losses, self.hp
+        )
+        viol = rwsadmm.constraint_violation(
+            state.server.y, state.clients.x, self.hp
+        )
+        return {"L_beta": float(l_beta), "violation": float(viol)}

@@ -1,0 +1,66 @@
+"""Generic FL simulation runner: drives any trainer for R rounds, records
+convergence history, communication totals, and wall time."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from .base import TrainerBase
+
+
+@dataclasses.dataclass
+class SimulationResult:
+    algo: str
+    history: list[dict]             # eval snapshots (sparse, every eval_every)
+    round_metrics: list[dict]       # per-round metrics (train loss etc.)
+    final: dict                     # last eval snapshot
+    total_comm_bytes: int
+    wall_time_s: float
+
+    def curve(self, key: str = "acc") -> tuple[np.ndarray, np.ndarray]:
+        rounds = np.array([h["round"] for h in self.history])
+        vals = np.array([h.get(key, np.nan) for h in self.history])
+        return rounds, vals
+
+
+def run_simulation(
+    trainer: TrainerBase,
+    *,
+    rounds: int = 100,
+    eval_every: int = 10,
+    seed: int = 0,
+    verbose: bool = False,
+) -> SimulationResult:
+    rng = np.random.default_rng(seed)
+    state = trainer.init_state(jax.random.PRNGKey(seed))
+    history: list[dict] = []
+    round_metrics: list[dict] = []
+    total_comm = 0
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        state, metrics = trainer.round(state, r, rng)
+        total_comm += int(metrics.get("comm_bytes", 0))
+        round_metrics.append(metrics)
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            snap = trainer.evaluate(state)
+            snap["round"] = r + 1
+            snap["comm_bytes_total"] = total_comm
+            history.append(snap)
+            if verbose:
+                print(
+                    f"[{trainer.name}] round {r + 1:4d}  "
+                    f"acc={snap['acc']:.4f}  comm={total_comm / 1e6:.1f}MB"
+                )
+    wall = time.perf_counter() - t0
+    return SimulationResult(
+        algo=trainer.name,
+        history=history,
+        round_metrics=round_metrics,
+        final=history[-1] if history else {},
+        total_comm_bytes=total_comm,
+        wall_time_s=wall,
+    )

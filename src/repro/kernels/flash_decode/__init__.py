@@ -1,0 +1,2 @@
+from . import kernel, ops, ref  # noqa: F401
+from .ops import flash_decode  # noqa: F401

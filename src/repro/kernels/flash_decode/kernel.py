@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: single-token GQA flash decode.
+
+The decode_32k / long_500k bottleneck is streaming the KV cache once per
+token: it is purely memory-bound (arithmetic intensity ~2 flops/byte). The
+kernel tiles the cache sequence dimension into VMEM blocks and keeps the
+online-softmax running state (m, l, acc) in VMEM scratch across the
+sequence grid dimension (sequential on TPU), so HBM traffic is exactly one
+pass over K and V. Grid: (B, K_heads, S/block); the G = H/K query heads of
+one KV head ride along in a (G, hd) tile (MXU-aligned for hd ∈ {64..256}).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+SEQ_BLOCK = 512
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, window, seq_block, n_blocks):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)    # (Sb, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)    # (Sb, hd)
+    length = len_ref[0]
+
+    s = jnp.dot(q, k.T) * scale               # (G, Sb)
+    pos = sb * seq_block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, seq_block), 1)
+    valid = pos < length
+    if window is not None:
+        valid &= pos >= length - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # (G, Sb)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = alpha * acc_scr[...] + jnp.dot(p, v)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(sb == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_gqa(q, k, v, length, *, window: int | None = None,
+                     seq_block: int = SEQ_BLOCK, interpret: bool = True):
+    """q: (B, H, hd); k/v: (B, S, K, hd); length: (B,) int32.
+
+    Returns (B, H, hd). S must be a multiple of seq_block (ops.py pads).
+    """
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    assert s % seq_block == 0, (s, seq_block)
+    n_blocks = s // seq_block
+    scale = 1.0 / (hd ** 0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    qg = q.reshape(b, kvh, g, hd)
+    grid = (b, kvh, n_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window,
+                          seq_block=seq_block, n_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki, si: (bi,)),            # length
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, seq_block, 1, hd),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, seq_block, 1, hd),
+                         lambda bi, ki, si: (bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((g, hd), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(length, qg, k, v)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for single-token GQA flash decode.
+
+q: (B, H, hd); k/v: (B, S, K, hd); length: (B,) valid prefix; optional
+sliding window (attend to positions (length−window, length])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k, v, length, *, window: int | None = None):
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    pos = jnp.arange(s)[None, :]                  # (1, S)
+    valid = pos < length[:, None]
+    if window is not None:
+        valid &= pos >= (length[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

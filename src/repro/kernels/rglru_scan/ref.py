@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence h_t = a_t·h_{t−1}+b_t
+(diagonal, per-channel) — the associative-scan form from
+models/recurrent.linear_scan."""
+from __future__ import annotations
+
+from ...models.recurrent import linear_scan
+
+
+def rglru_scan_ref(a, b):
+    """a, b: (B, S, D) fp32 → h: (B, S, D)."""
+    return linear_scan(a, b)

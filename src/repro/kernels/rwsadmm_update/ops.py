@@ -1,0 +1,44 @@
+"""jit wrapper: pytree-level fused RWSADMM update via the Pallas kernel.
+
+Flattens the parameter pytree once, pads to the block size, runs the
+fused kernel, and unflattens. On non-TPU backends the kernel executes in
+interpret mode (Python/CPU) for correctness validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import tree as tree_util
+from . import kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "eps_half", "n_total",
+                                             "block"))
+def rwsadmm_fused_update(x, z, y, g, kappa, *, beta: float, eps_half: float,
+                         n_total: float, block: int = kernel.BLOCK):
+    """Pytree version of the fused triple update. Returns (x⁺, z⁺, y⁺)."""
+    xf = tree_util.flatten(x)
+    zf = tree_util.flatten(z)
+    yf = tree_util.flatten(y)
+    gf = tree_util.flatten(g)
+    n = xf.shape[0]
+    pad = (-n) % block
+    if pad:
+        xf, zf, yf, gf = (jnp.pad(a, (0, pad)) for a in (xf, zf, yf, gf))
+    kappa_arr = jnp.reshape(jnp.asarray(kappa, xf.dtype), (1,))
+    x_new, z_new, y_new = kernel.fused_update_flat(
+        xf, zf, yf, gf, kappa_arr, beta=beta, eps_half=eps_half,
+        n_total=n_total, interpret=_interpret(), block=block,
+    )
+    if pad:
+        x_new, z_new, y_new = (a[:n] for a in (x_new, z_new, y_new))
+    return (tree_util.unflatten(x, x_new),
+            tree_util.unflatten(z, z_new),
+            tree_util.unflatten(y, y_new))

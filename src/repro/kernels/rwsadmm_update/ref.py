@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused RWSADMM triple update.
+
+One zone round's elementwise math over flat parameter vectors (the
+Pallas kernel computes exactly this, one HBM pass):
+
+    t' = y − x;  s' = sgn(t')
+    x⁺ = y − g/β + s' ⊙ (z − βε)/β              (derived Eq. 10 solver)
+    z⁺ = z + κβ (x⁺ − y − ε)                     (Eq. 15)
+    c  = x  − (z /β + ε) ⊙ sgn(y − x)            (Eq. 13 contribution)
+    c⁺ = x⁺ − (z⁺/β + ε) ⊙ sgn(y − x⁺)
+    y⁺ = y + (c⁺ − c)/n                          (Eq. 14 incremental)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rwsadmm_fused_update_ref(x, z, y, g, kappa, *, beta: float,
+                             eps_half: float, n_total: float):
+    s_prev = jnp.sign(y - x)
+    x_new = y - g / beta + s_prev * (z - beta * eps_half) / beta
+    z_new = z + kappa * beta * (x_new - y - eps_half)
+    c_old = x - (z / beta + eps_half) * jnp.sign(y - x)
+    c_new = x_new - (z_new / beta + eps_half) * jnp.sign(y - x_new)
+    y_new = y + (c_new - c_old) / n_total
+    return x_new, z_new, y_new

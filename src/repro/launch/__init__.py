@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharding rules, dry-run, drivers."""

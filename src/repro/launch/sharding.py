@@ -1,0 +1,222 @@
+"""Sharding rules: parameter / batch / KV-cache PartitionSpecs.
+
+Policy (MaxText-style 2D "fsdp + tensor" sharding):
+  * activations: batch over the data axes (("pod","data") multi-pod).
+  * weights: output-feature dim over "model" (tensor parallel), the other
+    big dim over the data axes (ZeRO/FSDP storage — XLA all-gathers per
+    layer inside the scan and reduce-scatters grads).
+  * MoE experts: expert dim over "model" (expert parallel); optional
+    ZeRO-3 of the expert hidden dim over "data" (needed for the 1T kimi
+    config — see DESIGN.md).
+  * KV caches: batch over data axes; cache sequence dim over "model"
+    (decode TP); for long_500k (B=1) the sequence dim is sharded over
+    BOTH ("data","model") — sequence-parallel decode.
+
+Every rule is divisibility-checked against the mesh; a dim that does not
+divide falls back to replication on that axis (e.g. whisper's 51866
+vocab), keeping lowering robust across all 10 architectures.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import attention as attn_mod
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(mesh, dim_size: int, axes) -> bool:
+    return dim_size % _axis_size(mesh, axes) == 0
+
+
+def _spec(mesh, shape, wanted: list) -> P:
+    """Apply per-dim wanted axes with divisibility fallback."""
+    out = []
+    for size, axes in zip(shape, wanted):
+        out.append(axes if axes and _fits(mesh, size, axes) else None)
+    return P(*out)
+
+
+def param_spec(path: str, leaf, cfg: ModelConfig, mesh,
+               data_axes: tuple[str, ...] | None, *,
+               zero3_moe: bool = False, embed_mode: str = "model",
+               rglru_row_parallel: bool = False) -> P:
+    """Sharding rule for one parameter leaf, by name + rank.
+
+    data_axes=None disables FSDP storage (pure tensor parallel) — the
+    §Perf decode variant (no per-token parameter all-gathers)."""
+    fsdp = data_axes
+    shape = leaf.shape
+    name = path.split("/")[-1]
+    stacked = ("layers/" in path or "enc_layers" in path
+               or "dec_layers" in path)
+    lead = [None] if stacked else []       # scan-stacked (R, ...) leading dim
+    body = shape[1:] if stacked else shape
+
+    def build(wanted):
+        return _spec(mesh, shape, lead + wanted)
+
+    # ---- MoE experts (E, d, h) / (E, h, d); router replicated ----------
+    if "/ffn/" in path and cfg.moe is not None:
+        if name == "router":
+            return build([None, None])
+        if name in ("w_in", "w_gate"):
+            return build(["model", None, fsdp if zero3_moe else None])
+        if name == "w_out":
+            return build(["model", fsdp if zero3_moe else None, None])
+        # shared expert: plain TP
+        if name in ("w_in", "w_gate"):
+            return build([fsdp, "model"])
+    if "/shared/" in path:
+        if name in ("w_in", "w_gate"):
+            return build([fsdp, "model"])
+        if name == "w_out":
+            return build(["model", fsdp])
+
+    # ---- embeddings / head / positional tables -------------------------
+    if name == "embed":
+        if embed_mode == "tp_d":
+            # §Perf variant: vocab replicated, d over model — the token
+            # lookup becomes collective-free (rows are local).
+            return _spec(mesh, shape, [None, "model"])
+        return _spec(mesh, shape, ["model", fsdp])
+    if name == "head":
+        return _spec(mesh, shape, [fsdp, "model"])
+    if name in ("pos_embed", "dec_pos"):
+        return _spec(mesh, shape, [None, fsdp])
+
+    # ---- norms / small vectors ------------------------------------------
+    if name in ("scale", "b_gates", "lam") or len(body) <= 1:
+        return build([None] * len(body))
+
+    # ---- attention projections ------------------------------------------
+    if rglru_row_parallel and name in ("w_rg", "w_ig"):
+        # §Perf: the gate matmuls consume the (model-sharded) recurrence
+        # branch u — row-parallel keeps the chain contraction in place
+        # (one psum) instead of an all-gather + column-parallel matmul.
+        return build(["model", fsdp])
+    if name in ("wq", "wk", "wv", "w_in", "w_gate", "w_up", "w_gate_up",
+                "w_x", "w_g", "w_rg", "w_ig", "w_gates", "r_gates",
+                "w_if", "projector"):
+        return build([fsdp, "model"])
+    if name in ("wo", "w_out", "w_down"):
+        return build(["model", fsdp])
+    if name == "conv_w":
+        return build([None, "model"])
+
+    # default: replicate
+    return build([None] * len(body))
+
+
+def params_shardings(params, cfg: ModelConfig, mesh,
+                     data_axes: tuple[str, ...] | None, *,
+                     zero3_moe: bool = False, embed_mode: str = "model",
+                     rglru_row_parallel: bool = False):
+    """NamedSharding tree matching the params pytree."""
+    def one(kp, leaf):
+        path = "/".join(_key_str(k) for k in kp)
+        spec = param_spec(path, leaf, cfg, mesh, data_axes,
+                          zero3_moe=zero3_moe, embed_mode=embed_mode,
+                          rglru_row_parallel=rglru_row_parallel)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"layers/{k.idx}" if False else str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def batch_shardings(cfg: ModelConfig, mesh, data_axes: tuple[str, ...],
+                    kind: str = "train", *, batch: int | None = None):
+    """Input batch shardings (dict mirrors registry.batch_spec).
+    Divisibility-checked: B=1 (long_500k) falls back to replication."""
+    dp = data_axes if (batch is None or _fits(mesh, batch, data_axes)) \
+        else None
+    out = {"tokens": NamedSharding(mesh, P(dp, None))}
+    if kind != "decode":
+        if cfg.frontend == "vision_stub":
+            out["patches"] = NamedSharding(mesh, P(dp, None, None))
+        if cfg.frontend == "audio_stub":
+            out["frames"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def cache_shardings(model, cfg: ModelConfig, mesh,
+                    data_axes: tuple[str, ...], batch: int, max_len: int):
+    """Sharding tree mirroring model.init_cache(batch, max_len).
+
+    KV k/v leaves: (R, B, S, K, hd). B over data axes when divisible;
+    cache seq dim S over "model" (+ data axes too when B == 1, i.e. the
+    sequence-parallel long-context decode path).
+    """
+    cache_struct = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    dp = data_axes
+    seq_axes = ("model",) if batch > 1 else tuple(dp) + ("model",)
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) == 5:  # stacked KVCache k/v: (R, B, S, K, hd)
+            return NamedSharding(mesh, _spec(
+                mesh, shape, [None, dp, seq_axes, None, None]))
+        if len(shape) == 4:  # mlstm C: (R, B, H, hd, hd) is 5D... (B,H,hd,hd) stacked→5
+            return NamedSharding(mesh, _spec(
+                mesh, shape, [None, dp, None, "model"]))
+        if len(shape) == 3:  # recurrent (R, B, d) / conv (R, B, 3, d) is 4D
+            return NamedSharding(mesh, _spec(
+                mesh, shape, [None, dp, "model"]))
+        if len(shape) == 2:
+            return NamedSharding(mesh, _spec(mesh, shape, [None, dp]))
+        return NamedSharding(mesh, P())
+
+    def route(leaf):
+        shape = leaf.shape
+        if len(shape) == 6:  # stacked mlstm C: (R, B, H, hd, hd)? → 5D
+            return NamedSharding(mesh, _spec(
+                mesh, shape, [None, dp, None, None, "model", None]))
+        return one(leaf)
+
+    return jax.tree_util.tree_map(route, cache_struct)
+
+
+def whisper_cache_shardings(model, cfg, mesh, data_axes, batch, max_len,
+                            params_struct=None):
+    if params_struct is not None:  # cached cross-KV variant (§Perf)
+        cache_struct = jax.eval_shape(
+            lambda p: model.init_cache(batch, max_len, params=p),
+            params_struct)
+    else:
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(batch, max_len))
+    dp = data_axes
+    seq_axes = ("model",) if batch > 1 else tuple(dp) + ("model",)
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) == 5:   # self_kv k/v (L, B, S, K, hd)
+            return NamedSharding(mesh, _spec(
+                mesh, shape, [None, dp, seq_axes, None, None]))
+        if len(shape) == 3:   # enc_out (B, T, d)
+            return NamedSharding(mesh, _spec(mesh, shape,
+                                             [dp, None, "model"]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, cache_struct)

@@ -1,0 +1,93 @@
+"""Compiled step functions: RWSADMM zone-round training and serving.
+
+``train_step`` is one RWSADMM zone round at datacenter scale (DESIGN.md
+§3): the active client's personalized model x, dual z and the server
+token y live sharded on the mesh; the zone's minibatch is sharded over
+the data axes (each data shard = one zone member's samples, Eq. 31), so
+the gradient mean IS the zone aggregation (one all-reduce / reduce-
+scatter); the closed-form x/z/y updates are elementwise.
+
+``serve_step`` is one-token decode against the KV cache (decode shapes).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import rwsadmm
+from ..core.rwsadmm import RWSADMMHparams
+
+
+class TrainState(NamedTuple):
+    """RWSADMM state for the active zone at scale."""
+
+    x: Any          # active client's personalized params
+    z: Any          # dual
+    y: Any          # mobile-server token
+    kappa: jnp.ndarray
+
+
+def init_train_state(params, hp: RWSADMMHparams) -> TrainState:
+    return TrainState(
+        x=params,
+        z=jax.tree_util.tree_map(jnp.zeros_like, params),
+        y=params,
+        kappa=jnp.asarray(hp.kappa, jnp.float32),
+    )
+
+
+def make_train_step(model, hp: RWSADMMHparams, n_total: float = 20.0,
+                    *, ce_impl: str = "gather"):
+    """One RWSADMM round: stochastic grad at x' + fused x/z/y update.
+
+    n_total: the client population size n the host launcher tracks (the
+    y-fold weight — see core.rwsadmm.y_update).
+    ce_impl: cross-entropy formulation (see LM.loss) — "onehot" is the
+    sharded-vocab-friendly §Perf variant."""
+
+    def train_step(state: TrainState, batch):
+        def loss_fn(p):
+            try:
+                return model.loss(p, batch, ce_impl=ce_impl)
+            except TypeError:  # EncDecLM has no ce_impl knob
+                return model.loss(p, batch)
+
+        loss, g = jax.value_and_grad(loss_fn)(state.x)
+        # Elementwise triple update (kernels/rwsadmm_update math; expressed
+        # in jnp here so GSPMD shards it with the params — XLA fuses the
+        # chain into one pass; the Pallas kernel is the single-device /
+        # client-edge build of the same op).
+        client = rwsadmm.ClientState(x=state.x, z=state.z)
+        new_client, c_new, c_old = rwsadmm.client_round(
+            client, state.y, g, hp, state.kappa)
+        y_new = rwsadmm.y_update(state.y, c_new, c_old, n_total=n_total)
+        new_state = TrainState(
+            x=new_client.x, z=new_client.z, y=y_new,
+            kappa=state.kappa * hp.kappa_decay,
+        )
+        return new_state, loss
+
+    return train_step
+
+
+def make_serve_step(model):
+    """(params, cache, tokens (B,1)) → (next_token (B,1), cache)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(model, max_len: int):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(
+            jnp.int32)[:, None]
+        return next_tok, cache
+
+    return prefill_step

@@ -1,0 +1,2 @@
+"""Model zoo: the paper's small FL models + the assigned LM architectures."""
+from .small import CNN, MLP, MLR, SmallModel  # noqa: F401

@@ -1,0 +1,225 @@
+"""GQA attention: training/prefill (query-chunked, flash-style online
+softmax at the HLO level) and single-token decode against a KV cache
+(full cache for global layers, ring buffer for sliding-window layers).
+
+The query-chunked lax.scan formulation keeps the attention transient at
+O(chunk × S) instead of O(S²) — this doubles as the jnp oracle for the
+Pallas ``flash_decode`` kernel (kernels/flash_decode/ref.py reuses it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, *, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, kv * hd, dt),
+        "wv": dense_init(ks[2], d, kv * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt, scale=1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _project_qkv(params, x, x_kv, cfg):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ params["wq"]
+    k = x_kv @ params["wk"]
+    v = x_kv @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, x_kv.shape[1], kv, hd)
+    v = v.reshape(b, x_kv.shape[1], kv, hd)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg):
+    if cfg.rope == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: int | None,
+                       chunk: int = 512):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd). GQA by head grouping. Query-chunked
+    scan; scores fp32; optional sliding window of size ``window``."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, s, kvh, g, hd)
+
+    chunk = min(chunk, s)
+    n_chunks = s // chunk if s % chunk == 0 else -1
+    if n_chunks == -1:  # pad to a chunk multiple
+        pad = (-s) % chunk
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        n_chunks = (s + pad) // chunk
+    qg = qg.reshape(b, n_chunks, chunk, kvh, g, hd)
+    kpos = jnp.arange(t)
+
+    def one_chunk(carry, inp):
+        qc, idx = inp  # (B, chunk, K, G, hd), scalar chunk index
+        qpos = idx * chunk + jnp.arange(chunk)
+        scores = jnp.einsum(
+            "bqkgh,btkh->bkgqt", qc.astype(jnp.float32),
+            k.astype(jnp.float32),
+        ) * scale
+        mask = jnp.ones((chunk, t), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    qg_t = jnp.moveaxis(qg, 1, 0)  # (n_chunks, B, chunk, K, G, hd)
+    _, outs = jax.lax.scan(one_chunk, None,
+                           (qg_t, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * chunk, kvh, g, hd)
+    return out[:, :s].reshape(b, s, h * hd)
+
+
+def attention(params, x, positions, cfg, *, kind: str = "attn",
+              x_kv=None, causal: bool = True, chunk: int = 512):
+    """Training/prefill attention. kind: "attn" (global) | "local"."""
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(params, x, x_kv, cfg)
+    if x_kv is x:
+        q, k = _rope_qk(q, k, positions, cfg)
+    window = cfg.window if kind == "local" else None
+    out = _chunked_attention(q, k, v, causal=causal and x_kv is x,
+                             window=window, chunk=chunk)
+    return out @ params["wo"]
+
+
+# ------------------------------------------------------------ decode ------
+class KVCache(NamedTuple):
+    """KV cache for one attention layer (possibly stacked over repeats).
+
+    k/v: (B, S_cache, K, hd). ``length`` — valid prefix (global layers) or
+    total tokens written (ring layers, where S_cache == window)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray  # scalar int32
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, kind: str,
+                  dtype=None) -> KVCache:
+    size = min(max_len, cfg.window) if kind == "local" else max_len
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_attention(params, x, positions, cache: KVCache, cfg, *,
+                      kind: str = "attn", chunk: int = 512):
+    """Prefill: full-sequence attention that also fills the KV cache.
+
+    Global layers write positions [0, T); local layers keep the last
+    ``window`` entries at their ring slots (slot = pos % window)."""
+    t = x.shape[1]
+    q, k, v = _project_qkv(params, x, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    window = cfg.window if kind == "local" else None
+    out = _chunked_attention(q, k, v, causal=True, window=window,
+                             chunk=chunk)
+    size = cache.k.shape[1]
+    if kind == "local" and t > size:
+        keep = jnp.arange(t - size, t)
+        slots = keep % size
+        k_c = jnp.zeros_like(cache.k).at[:, slots].set(
+            k[:, keep].astype(cache.k.dtype))
+        v_c = jnp.zeros_like(cache.v).at[:, slots].set(
+            v[:, keep].astype(cache.v.dtype))
+    else:
+        k_c = jax.lax.dynamic_update_slice(
+            cache.k, k[:, :min(t, size)].astype(cache.k.dtype),
+            (0, 0, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(
+            cache.v, v[:, :min(t, size)].astype(cache.v.dtype),
+            (0, 0, 0, 0))
+    new_cache = KVCache(k=k_c, v=v_c,
+                        length=jnp.asarray(t, jnp.int32))
+    return out @ params["wo"], new_cache
+
+
+def decode_attention(params, x, cache: KVCache, cfg, *, kind: str = "attn",
+                     use_pallas: bool = False):
+    """One-token decode: x (B, 1, d) against the cache; returns
+    (out (B,1,d), new cache). Ring-buffer write for local layers.
+
+    use_pallas=True routes the attention contraction through the
+    kernels/flash_decode Pallas kernel (VMEM-blocked online softmax) —
+    validated against this jnp path in tests/test_kernels_integration."""
+    b = x.shape[0]
+    pos = cache.length  # current absolute position of the new token
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope == "mrope":
+        positions = jnp.stack([positions] * 3, 0)
+    q, k_new = _rope_qk(q, k_new, positions, cfg)
+
+    size = cache.k.shape[1]
+    slot = jnp.where(kind == "local", pos % size, jnp.minimum(pos, size - 1))
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if use_pallas:
+        from ..kernels.flash_decode.ops import flash_decode
+
+        # ring buffers hold every slot valid once full; express validity
+        # through `length` + window on the kernel side.
+        if kind == "local":
+            length = jnp.minimum(pos + 1, size)
+            length = jnp.broadcast_to(length, (b,))
+            out = flash_decode(q[:, 0], k, v, length)
+        else:
+            out = flash_decode(q[:, 0], k, v,
+                               jnp.broadcast_to(pos + 1, (b,)))
+        out = out.reshape(b, 1, h * hd).astype(x.dtype)
+        return out @ params["wo"], KVCache(k=k, v=v, length=pos + 1)
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    tpos = jnp.arange(size)
+    if kind == "local":
+        valid = (tpos <= pos % size) | (pos >= size)
+    else:
+        valid = tpos <= jnp.minimum(pos, size - 1)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return out @ params["wo"], KVCache(k=k, v=v, length=pos + 1)

@@ -1,0 +1,109 @@
+"""Shared neural layers for the assigned architectures (TPU-native JAX).
+
+Everything is functional: ``init_*`` builds parameter dicts, ``apply``-style
+functions are pure. dtype policy: parameters/activations in cfg.dtype
+(bf16 for full configs), softmax/normalization statistics in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, n_in: int, n_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(n_in)
+    return (jax.random.normal(key, (n_in, n_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ------------------------------------------------------------- norms ------
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------- RoPE -------
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    angles = angles[..., None, :]                       # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, theta: float):
+    """M-RoPE (Qwen2-VL): head_dim split into (temporal, height, width)
+    sections — hd/2, hd/4, hd/4 — each rotated by its own position track.
+
+    x: (B, S, H, hd); positions_3d: (3, B, S).
+    """
+    hd = x.shape[-1]
+    sec = (hd // 2, hd // 4, hd - hd // 2 - hd // 4)
+    parts, off = [], 0
+    for i, s in enumerate(sec):
+        parts.append(apply_rope(x[..., off:off + s], positions_3d[i], theta))
+        off += s
+    return jnp.concatenate(parts, axis=-1)
+
+
+def text_mrope_positions(positions):
+    """Text tokens use the same index on all three M-RoPE tracks."""
+    return jnp.stack([positions] * 3, axis=0)
+
+
+# ------------------------------------------------------------- MLP --------
+def mlp_init(key, d: int, ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d, ff, dtype),
+        "w_out": dense_init(ks[1], ff, d, dtype),
+    }
+    if act == "silu":  # SwiGLU: gate projection
+        p["w_gate"] = dense_init(ks[2], d, ff, dtype)
+    return p
+
+
+def mlp(params, x, act: str):
+    h = x @ params["w_in"]
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w_out"]
+
+
+# --------------------------------------------------------- embeddings -----
+def embedding_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (1.0 / np.sqrt(d))).astype(dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN — TPU-native expert parallelism.
+
+Design (see DESIGN.md §3): activations are batch-sharded over the data
+axes and replicated over the model axis; experts are sharded over the
+model axis. Each model shard routes its (replicated) tokens to its LOCAL
+experts with a sort-based capacity dispatch (differentiable gather/scatter
++ dense batched GEMMs), produces a partial output, and the partials are
+combined with a psum over the model axis — the same collective a
+Megatron-style dense FFN needs, i.e. no all-to-all. Per-shard compute is
+~T·k/E_shards tokens worth of expert GEMMs (balanced in expectation).
+
+The module is mesh-agnostic: ``moe_ffn_local`` runs on whatever slice of
+experts it is handed and psums over ``axis`` if given. Without a mesh
+(unit tests, smoke tests) it sees all experts and no collective.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+
+
+def moe_init(key, cfg):
+    """Expert weights (E, d, h) ×3 (SwiGLU) + router (+ shared experts)."""
+    e = cfg.moe
+    d, h = cfg.d_model, e.d_expert
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+
+    def experts(k, n_in, n_out, sc):
+        return (jax.random.normal(k, (e.n_experts, n_in, n_out), jnp.float32)
+                * sc).astype(dt)
+
+    p = {
+        "router": dense_init(ks[0], d, e.n_experts, jnp.float32, scale=scale),
+        "w_in": experts(ks[1], d, h, scale),
+        "w_gate": experts(ks[2], d, h, scale),
+        "w_out": experts(ks[3], h, d, 1.0 / np.sqrt(h)),
+    }
+    if e.n_shared_experts:
+        hs = h * e.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_in": dense_init(k1, d, hs, dt),
+            "w_gate": dense_init(k2, d, hs, dt),
+            "w_out": dense_init(k3, hs, d, dt),
+        }
+    return p
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    e = cfg.moe
+    c = int(np.ceil(e.capacity_factor * n_tokens * e.top_k / e.n_experts))
+    return max(4, min(c, n_tokens))
+
+
+def moe_ffn_local(params, x, cfg, *, axis: str | None = None,
+                  shard_index=0, n_shards: int = 1,
+                  gather_axis: str | None = None):
+    """x: (B, S, d) local tokens (replicated over the expert-shard axis).
+
+    params hold THIS shard's experts (E_local, d, h) — possibly further
+    sharded over ``gather_axis`` on the hidden dim (ZeRO-style storage),
+    gathered here before use.
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    w_in, w_gate, w_out = params["w_in"], params["w_gate"], params["w_out"]
+    if gather_axis is not None:
+        # ZeRO-3 storage: hidden dim sharded over the data axis; gather
+        # one layer's local experts just-in-time (transient, not resident).
+        w_in = jax.lax.all_gather(w_in, gather_axis, axis=2, tiled=True)
+        w_gate = jax.lax.all_gather(w_gate, gather_axis, axis=2, tiled=True)
+        w_out = jax.lax.all_gather(w_out, gather_axis, axis=1, tiled=True)
+    e_local = w_in.shape[0]
+
+    # --- routing (computed identically on every shard; router is fp32) ---
+    logits = xf.astype(jnp.float32) @ params["router"]        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, e.top_k)              # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- local assignment: flatten (T·k) slots, keep local experts -------
+    lo = shard_index * e_local
+    flat_e = top_i.reshape(-1)                                # (T·k,)
+    flat_t = jnp.repeat(jnp.arange(t), e.top_k)
+    flat_w = top_w.reshape(-1)
+    local_e = flat_e - lo
+    is_local = (local_e >= 0) & (local_e < e_local)
+    sort_key = jnp.where(is_local, local_e, e_local)          # dummy bucket
+    order = jnp.argsort(sort_key, stable=True)
+    s_e = sort_key[order]
+    s_t = flat_t[order]
+    s_w = jnp.where(is_local[order], flat_w[order], 0.0)
+
+    # position within each expert's run → capacity slot
+    counts = jnp.bincount(sort_key, length=e_local + 1)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * e.top_k) - starts[s_e]
+    cap = _capacity(t, cfg)
+    valid = (s_e < e_local) & (pos < cap)
+    slot = jnp.where(valid, s_e * cap + pos, e_local * cap)   # overflow slot
+
+    # gather tokens into the (E_local·cap) dispatch buffer
+    buf = jnp.zeros((e_local * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(valid[:, None], xf[s_t], 0.0))
+    buf = buf[:-1].reshape(e_local, cap, d)
+
+    # --- expert GEMMs (dense batched; FLOPs = E_local·cap·d·h·3·2) -------
+    hidd = jnp.einsum("ecd,edh->ech", buf, w_in)
+    gate = jnp.einsum("ecd,edh->ech", buf, w_gate)
+    hidd = jax.nn.silu(gate) * hidd
+    out_e = jnp.einsum("ech,ehd->ecd", hidd, w_out)           # (E_l,cap,d)
+
+    # --- combine: weighted scatter back to tokens ------------------------
+    out_flat = out_e.reshape(e_local * cap, d)
+    contrib = jnp.where(valid[:, None],
+                        out_flat[jnp.clip(slot, 0, e_local * cap - 1)]
+                        * s_w[:, None].astype(x.dtype), 0.0)
+    out = jnp.zeros((t, d), x.dtype).at[s_t].add(contrib)
+
+    # --- shared (always-on) experts: plain SwiGLU over all tokens --------
+    if "shared" in params:
+        sh = params["shared"]
+        hs = xf @ sh["w_in"]
+        hs = jax.nn.silu(xf @ sh["w_gate"]) * hs
+        out = out + hs @ sh["w_out"]
+
+    if axis is not None:
+        out = jax.lax.psum(out, axis)
+    return out.reshape(b, s, d)
+
+
+def router_aux_loss(params, x, cfg):
+    """Load-balance auxiliary loss (Switch-style): E·Σ_e f_e·p_e."""
+    e = cfg.moe
+    t = x.shape[0] * x.shape[1]
+    xf = x.reshape(t, -1).astype(jnp.float32)
+    probs = jax.nn.softmax(xf @ params["router"], axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.bincount(top1, length=e.n_experts) / t
+    imp = probs.mean(axis=0)
+    return e.n_experts * jnp.sum(frac * imp)

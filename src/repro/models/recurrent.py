@@ -1,0 +1,376 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and xLSTM
+(mLSTM + sLSTM).
+
+TPU adaptation notes (DESIGN.md §3):
+  * RG-LRU uses a log-space linear recurrence h_t = a_t·h_{t−1} + b_t,
+    parallelized with jax.lax.associative_scan (log-depth on TPU); the
+    Pallas ``rglru_scan`` kernel implements the same contraction blocked
+    over VMEM tiles.
+  * mLSTM training uses its parallel (decay-masked linear-attention)
+    form — an attention-like quadratic contraction, query-chunked like
+    attention.py; decode uses the O(1) recurrent (C, n, m) state.
+  * sLSTM is inherently sequential (recurrent gate nonlinearity) and uses
+    lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+
+# =========================================================== RG-LRU =======
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness
+
+# §Perf knob: dtype of the gate activations (the recurrence itself stays
+# fp32 for stability). bf16 halves the TP activation psum bytes.
+GATE_DTYPE = jnp.float32
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, d, dt),       # recurrence branch in-proj
+        "w_g": dense_init(ks[1], d, d, dt),       # gate branch in-proj
+        "conv_w": (jax.random.normal(ks[2], (4, d), jnp.float32)
+                   * 0.1).astype(dt),
+        "w_rg": dense_init(ks[3], d, d, dt),      # recurrence gate r_t
+        "w_ig": dense_init(ks[4], d, d, dt),      # input gate i_t
+        # Λ init so a = exp(-c·softplus(λ)·r) starts near 0.95^c-ish.
+        "lam": jnp.full((d,), 0.7, jnp.float32),
+        "w_out": dense_init(ks[5], d, d, dt),
+    }
+
+
+def _causal_conv4(x, w):
+    """x: (B,S,d), w: (4,d) depthwise causal conv."""
+    pads = [jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+            for k in range(4)]
+    return sum(p * w[k].astype(x.dtype) for k, p in enumerate(pads))
+
+
+def _rglru_gates(params, u):
+    r = jax.nn.sigmoid((u @ params["w_rg"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_ig"]).astype(jnp.float32))
+    log_a = -_C_RGLRU * jax.nn.softplus(params["lam"]) * r    # (B,S,d) fp32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_block(params, x, use_pallas: bool = False,
+                return_state: bool = False):
+    """Full Griffin recurrent block: (B,S,d) → (B,S,d)."""
+    u_in = x @ params["w_x"]
+    u = _causal_conv4(u_in, params["conv_w"])
+    gate = jax.nn.gelu((x @ params["w_g"]).astype(GATE_DTYPE))
+    a, b = _rglru_gates(params, u)
+    if use_pallas:
+        from ..kernels.rglru_scan import ops as rg_ops
+        h = rg_ops.rglru_scan(a, b)
+    else:
+        h = linear_scan(a, b)
+    out = (h.astype(GATE_DTYPE) * gate).astype(x.dtype)
+    out = out @ params["w_out"]
+    if return_state:
+        s = x.shape[1]
+        conv_hist = u_in[:, max(0, s - 3):]
+        if s < 3:
+            conv_hist = jnp.pad(conv_hist, ((0, 0), (3 - s, 0), (0, 0)))
+        state = RGLRUState(h=h[:, -1], conv=conv_hist)
+        return out, state
+    return out
+
+
+def linear_scan(a, b):
+    """h_t = a_t h_{t−1} + b_t via associative_scan over time axis=1."""
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # (B, d) fp32 recurrent state
+    conv: jnp.ndarray       # (B, 3, d) last inputs for the causal conv
+
+
+def rglru_init_state(cfg, batch: int) -> RGLRUState:
+    d = cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, d), jnp.float32),
+                      conv=jnp.zeros((batch, 3, d), jnp.dtype(cfg.dtype)))
+
+
+def rglru_decode_step(params, x, state: RGLRUState):
+    """x: (B,1,d) one token; O(1) state update."""
+    u_in = (x @ params["w_x"])[:, 0]                      # (B,d)
+    hist = jnp.concatenate([state.conv, u_in[:, None]], axis=1)  # (B,4,d)
+    w = params["conv_w"].astype(u_in.dtype)
+    u = jnp.einsum("bkd,kd->bd", hist, w[::-1])           # causal conv tap
+    gate = jax.nn.gelu((x @ params["w_g"]).astype(jnp.float32))[:, 0]
+    a, b = _rglru_gates(params, u[:, None])
+    h = a[:, 0] * state.h + b[:, 0]
+    out = (h * gate).astype(x.dtype)[:, None]
+    return out @ params["w_out"], RGLRUState(h=h, conv=hist[:, 1:])
+
+
+# ============================================================ mLSTM =======
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    di = 2 * d  # inner dim (pf=2 up-projection)
+    return {
+        "w_up": dense_init(ks[0], d, di, dt),
+        "w_gate_up": dense_init(ks[1], d, di, dt),
+        "wq": dense_init(ks[2], di, di, dt),
+        "wk": dense_init(ks[3], di, di, dt),
+        "wv": dense_init(ks[4], di, di, dt),
+        "w_if": dense_init(ks[5], di, 2 * cfg.n_heads, jnp.float32),
+        "w_down": dense_init(ks[6], di, d, dt),
+    }
+
+
+def _mlstm_gates(params, u):
+    """Log input/forget gates per head: (B,S,H) fp32 each."""
+    gf = (u @ params["w_if"]).astype(jnp.float32)
+    h = gf.shape[-1] // 2
+    log_i = gf[..., :h]                       # pre-activation ĩ (log space)
+    log_f = jax.nn.log_sigmoid(gf[..., h:])   # log σ(f̃)
+    return log_i, log_f
+
+
+def mlstm_block(params, x, cfg, chunk: int = 256,
+                return_state: bool = False):
+    """mLSTM mixer. Dispatches between the quadratic parallel form (short
+    sequences / oracle) and the chunkwise-recurrent form (production)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    u = x @ params["w_up"]
+    gate = jax.nn.silu(x @ params["w_gate_up"])
+    di = u.shape[-1]
+    hd = di // nh
+    q = (u @ params["wq"]).reshape(b, s, nh, hd).astype(jnp.float32)
+    k = ((u @ params["wk"]).reshape(b, s, nh, hd) / np.sqrt(hd)).astype(
+        jnp.float32)
+    v = (u @ params["wv"]).reshape(b, s, nh, hd).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(params, u)    # (B,S,H)
+    if s <= chunk and not return_state:
+        h = _mlstm_quadratic(q, k, v, log_i, log_f)
+    else:
+        h, state = _mlstm_chunked(q, k, v, log_i, log_f, min(chunk, s),
+                                  return_state=True)
+    h = h.reshape(b, s, di).astype(x.dtype)
+    out = (h * gate) @ params["w_down"]
+    if return_state:
+        return out, MLSTMState(c=state[0], n=state[1], m=state[2])
+    return out
+
+
+def _mlstm_quadratic(q, k, v, log_i, log_f):
+    """Decay-masked linear-attention form (oracle; O(S²) memory).
+
+    h_t = Σ_{s≤t} exp(log_i_s + Σ_{r=s+1..t} log_f_r − m_t)·(q_t·k_s)·v_s,
+    normalized by max(|Σ w·(q·k)|, 1).
+    """
+    b, s, nh, hd = q.shape
+    cum_f = jnp.cumsum(log_f, axis=1)
+    a = log_i[:, None, :, :] + cum_f[:, :, None, :] - cum_f[:, None, :, :]
+    t_idx = jnp.arange(s)
+    causal = t_idx[None, :, None, None] >= t_idx[None, None, :, None]
+    a = jnp.where(causal, a, -jnp.inf)
+    m = jnp.max(a, axis=2, keepdims=True)                     # (B,S,1,H)
+    dmat = jnp.exp(a - m)
+    qk = jnp.einsum("bthd,bshd->btsh", q, k)
+    w = dmat * qk
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), 1.0)
+    h = jnp.einsum("btsh,bshd->bthd", w, v)
+    return h / norm[..., None]
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int,
+                   return_state: bool = False):
+    """Chunkwise-recurrent mLSTM: O(S·chunk) memory, (C,n,m) state carried
+    across chunks (the xLSTM paper's production formulation)."""
+    b, s, nh, hd = q.shape
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = q.shape[1] // chunk
+
+    def resh(x_, extra):  # (B, n_chunks, chunk, ...) → scan-major
+        return jnp.moveaxis(
+            x_.reshape((b, n_chunks, chunk) + extra), 1, 0)
+
+    qs, ks, vs = (resh(t_, (nh, hd)) for t_ in (q, k, v))
+    lis, lfs = (resh(t_, (nh,)) for t_ in (log_i, log_f))
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+
+    def body(carry, inp):
+        c_p, n_p, m_p = carry
+        qc, kc, vc, lic, lfc = inp              # (B, chunk, H, ...)
+        cum_f = jnp.cumsum(lfc, axis=1)         # (B,chunk,H)
+        # intra-chunk log weights a[b,t,s,h]
+        a = (lic[:, None, :, :] + cum_f[:, :, None, :]
+             - cum_f[:, None, :, :])
+        t_idx = jnp.arange(chunk)
+        causal = t_idx[None, :, None, None] >= t_idx[None, None, :, None]
+        a = jnp.where(causal, a, -jnp.inf)
+        inter_log = cum_f + m_p[:, None, :]     # (B,chunk,H)
+        m_t = jnp.maximum(jnp.max(a, axis=2), inter_log)   # (B,chunk,H)
+        w = jnp.exp(a - m_t[:, :, None, :])
+        g = jnp.exp(inter_log - m_t)            # (B,chunk,H)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        num_intra = jnp.einsum("btsh,bshd->bthd", w * qk, vc)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qc, c_p) \
+            * g[..., None]
+        den_intra = jnp.sum(w * qk, axis=2)                 # (B,chunk,H)
+        den_inter = jnp.einsum("bthd,bhd->bth", qc, n_p) * g
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        h = (num_intra + num_inter) / den[..., None]
+        # end-of-chunk state
+        cf_end = cum_f[:, -1, :]                            # (B,H)
+        m_end = jnp.maximum(
+            m_p + cf_end,
+            jnp.max(lic + cf_end[:, None, :] - cum_f, axis=1))
+        carry_sc = jnp.exp(m_p + cf_end - m_end)            # (B,H)
+        tok_sc = jnp.exp(lic + cf_end[:, None, :] - cum_f
+                         - m_end[:, None, :])                # (B,chunk,H)
+        c_new = carry_sc[..., None, None] * c_p + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kc, vc, tok_sc)
+        n_new = carry_sc[..., None] * n_p + jnp.einsum(
+            "bshd,bsh->bhd", kc, tok_sc)
+        return (c_new, n_new, m_end), h
+
+    final, hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, n_chunks * chunk, nh, hd)
+    h = h[:, :s]
+    if return_state:
+        return h, final
+    return h
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, hd, hd) matrix memory, fp32
+    n: jnp.ndarray   # (B, H, hd) normalizer
+    m: jnp.ndarray   # (B, H) log-space stabilizer
+
+
+def mlstm_init_state(cfg, batch: int) -> MLSTMState:
+    di = 2 * cfg.d_model
+    hd = di // cfg.n_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+        m=jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode_step(params, x, state: MLSTMState, cfg):
+    b = x.shape[0]
+    nh = cfg.n_heads
+    u = (x @ params["w_up"])[:, 0]
+    gate = jax.nn.silu(x @ params["w_gate_up"])[:, 0]
+    di = u.shape[-1]
+    hd = di // nh
+    q = (u @ params["wq"]).reshape(b, nh, hd).astype(jnp.float32)
+    k = ((u @ params["wk"]).reshape(b, nh, hd) / np.sqrt(hd)).astype(
+        jnp.float32)
+    v = (u @ params["wv"]).reshape(b, nh, hd).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(params, u[:, None])
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                   # (B,H)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_sc = jnp.exp(log_f + state.m - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    c = f_sc[..., None] * state.c + i_sc[..., None] * (
+        k[..., :, None] * v[..., None, :])          # C = k ⊗ v (matches
+    n = f_sc * state.n + i_sc * k                   # the chunked form)
+    num = jnp.einsum("bhde,bhd->bhe", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = (num / den[..., None]).reshape(b, di)
+    out = ((h.astype(x.dtype) * gate) @ params["w_down"])[:, None]
+    return out, MLSTMState(c=c, n=n, m=m_new)
+
+
+# ============================================================ sLSTM =======
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dt),   # i,f,z,o from x_t
+        "r_gates": dense_init(ks[1], d, 4 * d, dt,
+                              scale=0.5 / np.sqrt(d)),  # from h_{t−1}
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], d, d, dt),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, d)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray
+
+
+def slstm_init_state(cfg, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30))
+
+
+def _slstm_cell(params, x_t, st: SLSTMState):
+    d = x_t.shape[-1]
+    pre = (x_t @ params["w_gates"]).astype(jnp.float32) \
+        + (st.h.astype(x_t.dtype) @ params["r_gates"]).astype(jnp.float32) \
+        + params["b_gates"]
+    it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + st.m, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(log_f + st.m - m_new)
+    c = f_sc * st.c + i_sc * jnp.tanh(zt)
+    n = f_sc * st.n + i_sc
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_block(params, x, cfg, return_state: bool = False):
+    """Sequential scan over time (sLSTM has no parallel form)."""
+    b, s, d = x.shape
+    st0 = slstm_init_state(cfg, b)
+
+    def body(st, x_t):
+        st = _slstm_cell(params, x_t, st)
+        return st, st.h
+
+    st_f, hs = jax.lax.scan(body, st0, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = h @ params["w_out"]
+    if return_state:
+        return out, st_f
+    return out
+
+
+def slstm_decode_step(params, x, state: SLSTMState, cfg):
+    st = _slstm_cell(params, x[:, 0], state)
+    out = st.h.astype(x.dtype)[:, None] @ params["w_out"]
+    return out, st

@@ -1,0 +1,56 @@
+"""Arch-id → model builder registry + input batch builders."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .transformer import LM, ShardingCtx
+from .whisper import EncDecLM
+
+
+def build_model(cfg: ModelConfig, ctx: ShardingCtx | None = None,
+                *, unroll: bool = False):
+    if cfg.encoder_layers > 0:
+        return EncDecLM(cfg, ctx, unroll=unroll)
+    return LM(cfg, ctx, unroll=unroll)
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int,
+               kind: str = "train") -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    sd = jax.ShapeDtypeStruct
+    if kind == "decode":
+        out = {"tokens": sd((batch, 1), jnp.int32)}
+        return out
+    out = {"tokens": sd((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        out["patches"] = sd((batch, cfg.n_patches, cfg.d_model),
+                            jnp.dtype(cfg.dtype))
+    if cfg.frontend == "audio_stub":
+        out["frames"] = sd((batch, cfg.encoder_seq, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+    return out
+
+
+def random_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 kind: str = "train") -> dict:
+    """Concrete random inputs of the same shapes (smoke tests/examples)."""
+    rng = np.random.default_rng(seed)
+    if kind == "decode":
+        return {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)}
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_patches, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    if cfg.frontend == "audio_stub":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return out

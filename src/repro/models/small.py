@@ -1,0 +1,157 @@
+"""The paper's experimental models (App. D.1):
+
+  * MLR — multinomial logistic regression (strongly convex setting),
+  * MLP — two hidden dense layers, 100 hidden nodes, cross-entropy,
+  * CNN — two 5×5 conv layers + FC-512 + softmax, dropout 25% / 50%.
+
+Plain functional JAX: ``init(key, input_shape) -> params`` and
+``apply(params, x, *, train, rng) -> logits``. Parameters are flat dicts of
+arrays so RWSADMM's elementwise pytree updates apply directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModel:
+    name: str
+    init: Callable
+    apply: Callable
+    convex: bool = False
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale if scale is not None else float(np.sqrt(2.0 / n_in))
+    wk, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wk, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- MLR -----
+def make_mlr(input_shape: tuple[int, ...], n_classes: int = 10) -> SmallModel:
+    n_in = int(np.prod(input_shape))
+
+    def init(key):
+        return {"linear": _dense_init(key, n_in, n_classes, scale=0.01)}
+
+    def apply(params, x, *, train=False, rng=None):
+        x = x.reshape(x.shape[0], -1)
+        return x @ params["linear"]["w"] + params["linear"]["b"]
+
+    return SmallModel("mlr", init, apply, convex=True)
+
+
+# ---------------------------------------------------------------- MLP -----
+def make_mlp(input_shape: tuple[int, ...], n_classes: int = 10,
+             hidden: int = 100) -> SmallModel:
+    n_in = int(np.prod(input_shape))
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "fc1": _dense_init(k1, n_in, hidden),
+            "fc2": _dense_init(k2, hidden, hidden),
+            "out": _dense_init(k3, hidden, n_classes),
+        }
+
+    def apply(params, x, *, train=False, rng=None):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return SmallModel("mlp", init, apply)
+
+
+# ---------------------------------------------------------------- CNN -----
+def make_cnn(input_shape: tuple[int, int, int], n_classes: int = 10,
+             c1: int = 16, c2: int = 32, fc: int = 512) -> SmallModel:
+    h, w, cin = input_shape
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        conv_scale1 = float(np.sqrt(2.0 / (5 * 5 * cin)))
+        conv_scale2 = float(np.sqrt(2.0 / (5 * 5 * c1)))
+        flat = (h // 4) * (w // 4) * c2
+        return {
+            "conv1": {
+                "w": jax.random.normal(k1, (5, 5, cin, c1)) * conv_scale1,
+                "b": jnp.zeros((c1,)),
+            },
+            "conv2": {
+                "w": jax.random.normal(k2, (5, 5, c1, c2)) * conv_scale2,
+                "b": jnp.zeros((c2,)),
+            },
+            "fc": _dense_init(k3, flat, fc),
+            "out": _dense_init(k4, fc, n_classes),
+        }
+
+    def conv(x, p):
+        return jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p["b"]
+
+    def pool(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    def apply(params, x, *, train=False, rng=None):
+        x = jax.nn.relu(conv(x, params["conv1"]))
+        x = pool(x)
+        if train and rng is not None:  # dropout 25% after conv block 1
+            keep = jax.random.bernoulli(jax.random.fold_in(rng, 1), 0.75,
+                                        x.shape)
+            x = jnp.where(keep, x / 0.75, 0.0)
+        x = jax.nn.relu(conv(x, params["conv2"]))
+        x = pool(x)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc"]["w"] + params["fc"]["b"])
+        if train and rng is not None:  # dropout 50% before the head
+            keep = jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.5,
+                                        x.shape)
+            x = jnp.where(keep, x / 0.5, 0.0)
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return SmallModel("cnn", init, apply)
+
+
+def get_model(name: str, input_shape, n_classes: int = 10) -> SmallModel:
+    name = name.lower()
+    if name == "mlr":
+        return make_mlr(input_shape, n_classes)
+    if name == "mlp":
+        return make_mlp(input_shape, n_classes)
+    if name == "cnn":
+        return make_cnn(input_shape, n_classes)
+    raise ValueError(f"unknown small model {name!r}")
+
+
+MLR, MLP, CNN = "mlr", "mlp", "cnn"
+
+
+# ------------------------------------------------------------- losses -----
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+             mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(hit)
+    return jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)

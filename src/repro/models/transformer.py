@@ -1,0 +1,383 @@
+"""Composable decoder LM covering all assigned architectures.
+
+A model is a repeating ``layer_pattern`` of mixer kinds (attn / local /
+rglru / mlstm / slstm) + FFN (dense SwiGLU/GELU or MoE), scanned over
+``pattern_repeats`` with stacked parameters (compact HLO, fast compiles,
+remat-friendly). Encoder-decoder (whisper) and multimodal stubs (VLM /
+audio) are handled by input assembly around the same block stack.
+
+Distribution: pure GSPMD (pjit in/out shardings, see repro.launch) except
+the MoE FFN, which runs in an explicit shard_map island (expert parallel —
+see models/moe.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import recurrent as rec_mod
+from .layers import (
+    dense_init,
+    embedding_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """How the model should use the mesh (None ⇒ single-device math)."""
+
+    mesh: Any = None
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    zero3_moe: bool = False      # store MoE expert hidden dim sharded
+                                 # over the data axis, gather per layer
+
+
+class LM:
+    """Decoder-only LM (also the VLM/audio backbone and whisper decoder)."""
+
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ShardingCtx] = None,
+                 *, unroll: bool = False):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.pattern = cfg.layer_pattern
+        self.repeats = cfg.pattern_repeats
+        # unroll=True fully unrolls the layer scan — used by the dry-run's
+        # flop-accounting variants (XLA cost_analysis counts a scan body
+        # once, not ×trip-count; see launch/dryrun.py).
+        self.unroll = self.repeats if unroll else 1
+
+    # ------------------------------------------------------------ init --
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k_emb, k_head, k_layers, k_front, k_enc = jax.random.split(key, 5)
+
+        def init_block(kind, k):
+            ks = jax.random.split(k, 4)
+            p = {"norm1": rmsnorm_init(cfg.d_model, dt)}
+            if kind in ("attn", "local"):
+                p["mix"] = attn_mod.attn_init(ks[0], cfg)
+            elif kind == "rglru":
+                p["mix"] = rec_mod.rglru_init(ks[0], cfg)
+            elif kind == "mlstm":
+                p["mix"] = rec_mod.mlstm_init(ks[0], cfg)
+            elif kind == "slstm":
+                p["mix"] = rec_mod.slstm_init(ks[0], cfg)
+            else:
+                raise ValueError(kind)
+            if cfg.moe is not None:
+                p["norm2"] = rmsnorm_init(cfg.d_model, dt)
+                p["ffn"] = moe_mod.moe_init(ks[1], cfg)
+            elif cfg.d_ff > 0:
+                p["norm2"] = rmsnorm_init(cfg.d_model, dt)
+                p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+            return p
+
+        layer_keys = jax.random.split(k_layers, self.repeats)
+        layers = []
+        for gi, kind in enumerate(self.pattern):
+            stacked = jax.vmap(
+                lambda k, kind=kind, gi=gi: init_block(
+                    kind, jax.random.fold_in(k, gi))
+            )(layer_keys)
+            layers.append(stacked)
+
+        params = {
+            "embed": embedding_init(k_emb, cfg.vocab, cfg.d_model, dt),
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+            "layers": tuple(layers),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+        if cfg.frontend == "vision_stub":
+            params["projector"] = dense_init(
+                k_front, cfg.d_model, cfg.d_model, dt)
+        if self._needs_pos_table():
+            params["pos_embed"] = (jax.random.normal(
+                k_front, (cfg.max_pos, cfg.d_model), jnp.float32)
+                * 0.02).astype(dt)
+        return params
+
+    def _needs_pos_table(self) -> bool:
+        """Learned positions only for rope-less ATTENTION archs; recurrent
+        stacks (xLSTM) are order-aware and need none."""
+        cfg = self.cfg
+        return cfg.rope == "none" and any(
+            k in ("attn", "local") for k in cfg.layer_pattern)
+
+    # --------------------------------------------------------- forward --
+    def _block(self, p, h, kind: str, positions, decode_cache=None):
+        cfg = self.cfg
+        hn = rmsnorm(p["norm1"], h, cfg.norm_eps)
+        new_cache = None
+        if decode_cache is None:
+            if kind in ("attn", "local"):
+                mixed = attn_mod.attention(p["mix"], hn, positions, cfg,
+                                           kind=kind)
+            elif kind == "rglru":
+                mixed = rec_mod.rglru_block(p["mix"], hn)
+            elif kind == "mlstm":
+                mixed = rec_mod.mlstm_block(p["mix"], hn, cfg)
+            elif kind == "slstm":
+                mixed = rec_mod.slstm_block(p["mix"], hn, cfg)
+        else:
+            if kind in ("attn", "local"):
+                mixed, new_cache = attn_mod.decode_attention(
+                    p["mix"], hn, decode_cache, cfg, kind=kind)
+            elif kind == "rglru":
+                mixed, new_cache = rec_mod.rglru_decode_step(
+                    p["mix"], hn, decode_cache)
+            elif kind == "mlstm":
+                mixed, new_cache = rec_mod.mlstm_decode_step(
+                    p["mix"], hn, decode_cache, cfg)
+            elif kind == "slstm":
+                mixed, new_cache = rec_mod.slstm_decode_step(
+                    p["mix"], hn, decode_cache, cfg)
+        h = h + mixed
+        if "ffn" in p:
+            hn2 = rmsnorm(p["norm2"], h, cfg.norm_eps)
+            if cfg.moe is not None:
+                h = h + self._moe(p["ffn"], hn2)
+            else:
+                h = h + mlp(p["ffn"], hn2, cfg.act)
+        return h, new_cache
+
+    def _moe(self, p, h):
+        cfg, ctx = self.cfg, self.ctx
+        if ctx is None or ctx.mesh is None:
+            return moe_mod.moe_ffn_local(p, h, cfg)
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax
+            from jax.experimental.shard_map import shard_map
+
+        mp, za = ctx.model_axis, ("data" if ctx.zero3_moe else None)
+        w_spec = P(mp, None, za)
+        wo_spec = P(mp, za, None)
+        shared_spec = {"w_in": P(None, mp), "w_gate": P(None, mp),
+                       "w_out": P(mp, None)}
+        in_specs = {
+            "router": P(None, None),
+            "w_in": w_spec, "w_gate": w_spec, "w_out": wo_spec,
+        }
+        if "shared" in p:
+            in_specs["shared"] = shared_spec
+
+        def local_fn(pl, xl):
+            idx = jax.lax.axis_index(mp)
+            out = moe_mod.moe_ffn_local(
+                pl, xl, cfg, axis=mp, shard_index=idx,
+                gather_axis=("data" if ctx.zero3_moe else None),
+            )
+            if "shared" in pl:
+                # shared-expert partials were summed in the same psum
+                pass
+            return out
+
+        x_spec = P(ctx.data_axes, None, None)
+        import inspect
+
+        kw = ("check_vma" if "check_vma"
+              in inspect.signature(shard_map).parameters else "check_rep")
+        return shard_map(
+            local_fn, mesh=ctx.mesh,
+            in_specs=(in_specs, x_spec),
+            out_specs=x_spec,
+            **{kw: False},
+        )(p, h)
+
+    def _assemble_inputs(self, params, batch):
+        """Returns (h (B,S,d), positions, label_offset)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"][tokens]
+        b, s = tokens.shape
+        offset = 0
+        if cfg.frontend == "vision_stub":
+            patches = batch["patches"].astype(h.dtype)  # (B, Pn, d) stub
+            patches = patches @ params["projector"]
+            h = jnp.concatenate([patches, h], axis=1)
+            offset = patches.shape[1]
+        s_total = h.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s_total), (b, s_total))
+        if cfg.rope == "mrope":
+            # Vision span: (t=0, row, col); text span: global index on all
+            # three tracks (so decode positions continue seamlessly).
+            pn = offset
+            g = max(1, int(np.sqrt(max(pn, 1))))
+            t_track = jnp.where(pos < pn, 0, pos)
+            h_track = jnp.where(pos < pn, pos // g, pos)
+            w_track = jnp.where(pos < pn, pos % g, pos)
+            positions = jnp.stack([t_track, h_track, w_track], axis=0)
+        else:
+            positions = pos
+        if self._needs_pos_table():
+            h = h + params["pos_embed"][:s_total][None].astype(h.dtype)
+        return h, positions, offset
+
+    def apply(self, params, batch) -> jnp.ndarray:
+        """Training/prefill forward → logits (B, S_total, vocab)."""
+        h, positions, _ = self._assemble_inputs(params, batch)
+        h = self._run_stack(params, h, positions)
+        return self._logits(params, h)
+
+    def _run_stack(self, params, h, positions):
+        pattern = self.pattern
+
+        def body(h, group_params):
+            for gi, kind in enumerate(pattern):
+                h, _ = self._block(group_params[gi], h, kind, positions)
+            return h, None
+
+        body = jax.checkpoint(body)  # remat per pattern group
+        h, _ = jax.lax.scan(body, h, params["layers"], unroll=self.unroll)
+        return rmsnorm(params["final_norm"], h, self.cfg.norm_eps)
+
+    logits_dtype = jnp.float32  # §Perf knob: bf16 halves the logits psum
+                                # bytes when the contraction dim is sharded
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        dt = self.logits_dtype
+        if cfg.tie_embeddings:
+            out = h.astype(dt) @ params["embed"].astype(dt).T
+        else:
+            out = h.astype(dt) @ params["head"].astype(dt)
+        return out.astype(jnp.float32)
+
+    def loss(self, params, batch, *, ce_impl: str = "gather") -> jnp.ndarray:
+        """Next-token cross entropy over the text span.
+
+        ce_impl:
+          "gather" — log_softmax + take_along_axis (baseline; under a
+            model-sharded vocab the per-token dynamic gather forces GSPMD
+            to materialize/gather full logits),
+          "onehot" — nll = logsumexp(logits) − Σ logits·onehot(targets):
+            both terms are contractions over the vocab axis, so they
+            reduce *in place* on the vocab shards (psum of partials) —
+            the §Perf hillclimb optimization.
+        """
+        logits = self.apply(params, batch)
+        tokens = batch["tokens"]
+        offset = logits.shape[1] - tokens.shape[1]
+        logits = logits[:, offset:-1]
+        targets = tokens[:, 1:]
+        if ce_impl == "onehot":
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.sum(
+                logits * jax.nn.one_hot(targets, logits.shape[-1],
+                                        dtype=logits.dtype),
+                axis=-1)
+            return jnp.mean(lse - tgt)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    # ---------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        groups = []
+        for kind in self.pattern:
+            if kind in ("attn", "local"):
+                one = attn_mod.init_kv_cache(cfg, batch, max_len, kind)
+            elif kind == "rglru":
+                one = rec_mod.rglru_init_state(cfg, batch)
+            elif kind == "mlstm":
+                one = rec_mod.mlstm_init_state(cfg, batch)
+            elif kind == "slstm":
+                one = rec_mod.slstm_init_state(cfg, batch)
+            stacked = jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(
+                    l, (self.repeats,) + l.shape), one)
+            groups.append(stacked)
+        return {"step": jnp.zeros((), jnp.int32), "groups": tuple(groups)}
+
+    def prefill(self, params, batch, max_len: int):
+        """Serving prefill: full forward that also fills the caches.
+
+        Returns (logits (B, S_total, V), cache ready for decode_step)."""
+        cfg = self.cfg
+        h, positions, _ = self._assemble_inputs(params, batch)
+        b, s_total = h.shape[0], h.shape[1]
+        pattern = self.pattern
+        cache = self.init_cache(b, max_len)
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new_caches = []
+            for gi, kind in enumerate(pattern):
+                p = group_params[gi]
+                hn = rmsnorm(p["norm1"], h, cfg.norm_eps)
+                if kind in ("attn", "local"):
+                    mixed, nc = attn_mod.prefill_attention(
+                        p["mix"], hn, positions, group_cache[gi], cfg,
+                        kind=kind)
+                elif kind == "rglru":
+                    mixed, nc = rec_mod.rglru_block(
+                        p["mix"], hn, return_state=True)
+                elif kind == "mlstm":
+                    mixed, nc = rec_mod.mlstm_block(
+                        p["mix"], hn, cfg, return_state=True)
+                elif kind == "slstm":
+                    mixed, nc = rec_mod.slstm_block(
+                        p["mix"], hn, cfg, return_state=True)
+                h = h + mixed
+                if "ffn" in p:
+                    hn2 = rmsnorm(p["norm2"], h, cfg.norm_eps)
+                    if cfg.moe is not None:
+                        h = h + self._moe(p["ffn"], hn2)
+                    else:
+                        h = h + mlp(p["ffn"], hn2, cfg.act)
+                new_caches.append(nc)
+            return h, tuple(new_caches)
+
+        if cfg.rope == "none":
+            h = h  # pos-embed already added in _assemble_inputs
+        h, new_groups = jax.lax.scan(
+            body, h, (params["layers"], cache["groups"]),
+            unroll=self.unroll)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits, {"step": jnp.asarray(s_total, jnp.int32),
+                        "groups": new_groups}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) → (logits (B, vocab), new cache)."""
+        cfg = self.cfg
+        h = params["embed"][tokens]
+        if self._needs_pos_table():
+            h = h + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], cache["step"], 1, 0
+            )[None].astype(h.dtype)
+        pattern = self.pattern
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new_caches = []
+            for gi, kind in enumerate(pattern):
+                h, nc = self._block(group_params[gi], h, kind, None,
+                                    decode_cache=group_cache[gi])
+                new_caches.append(nc)
+            return h, tuple(new_caches)
+
+        h, new_groups = jax.lax.scan(
+            body, h, (params["layers"], cache["groups"]),
+            unroll=self.unroll)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = self._logits(params, h)[:, 0]
+        return logits, {"step": cache["step"] + 1, "groups": new_groups}

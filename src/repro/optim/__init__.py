@@ -1,0 +1,2 @@
+from .sgd import adam, sgd  # noqa: F401
+from .schedule import constant, cosine, step_decay  # noqa: F401

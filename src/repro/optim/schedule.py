@@ -1,0 +1,23 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def step_decay(value: float, decay: float = 0.99, every: int = 1):
+    def fn(step):
+        k = jnp.floor_divide(step, every).astype(jnp.float32)
+        return jnp.asarray(value, jnp.float32) * decay**k
+    return fn
+
+
+def cosine(value: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return value * (final_frac + (1.0 - final_frac) * cos)
+    return fn

@@ -1,0 +1,79 @@
+"""Minimal optimizer substrate (optax-style pure transforms).
+
+Used by the *baselines'* local solvers (FedAvg/Per-FedAvg/pFedMe/Ditto/APFL
+all run local SGD/Adam); RWSADMM itself needs no optimizer — its updates are
+closed-form (core/rwsadmm.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]  # (grads, state, params)
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+        momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = (jax.tree_util.tree_map(jnp.zeros_like, params)
+              if momentum else None)
+        return {"mu": mu, "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step_lr = lr(state["count"]) if callable(lr) else lr
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params
+            )
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], grads
+            )
+            new_params = jax.tree_util.tree_map(
+                lambda p, m: p - step_lr * m, params, mu
+            )
+            return new_params, {"mu": mu, "count": state["count"] + 1}
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - step_lr * g, params, grads
+        )
+        return new_params, {"mu": None, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": z, "v": z, "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        step_lr = lr(count) if callable(lr) else lr
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+        )
+        mc = 1.0 - b1 ** count.astype(jnp.float32)
+        vc = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def leaf(p, m_, v_):
+            upd = (m_ / mc) / (jnp.sqrt(v_ / vc) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p
+            return p - step_lr * upd
+
+        return (jax.tree_util.tree_map(leaf, params, m, v),
+                {"m": m, "v": v, "count": count})
+
+    return Optimizer(init, update)

@@ -1,0 +1,46 @@
+"""Checkpoint round-trips, including RWSADMM state pytrees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, restore_latest, save_pytree
+from repro.core.rwsadmm import RWSADMMHparams, init_states
+
+
+def test_roundtrip_nested(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    p = str(tmp_path / "ckpt_1.npz")
+    save_pytree(p, tree, step=1)
+    out = load_pytree(p, tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_roundtrip_rwsadmm_state(tmp_path):
+    hp = RWSADMMHparams()
+    client, server = init_states({"w": jnp.ones((5,))}, hp, n_clients=3)
+    p = str(tmp_path / "ckpt_2.npz")
+    save_pytree(p, {"client": client._asdict(),
+                    "server": server._asdict()})
+    out = load_pytree(p, {"client": client._asdict(),
+                          "server": server._asdict()})
+    np.testing.assert_array_equal(out["client"]["x"]["w"], client.x["w"])
+
+
+def test_restore_latest(tmp_path):
+    tree = {"w": jnp.zeros((3,))}
+    for step in (1, 5, 3):
+        save_pytree(str(tmp_path / f"ckpt_{step}.npz"),
+                    {"w": jnp.full((3,), float(step))})
+    out, step = restore_latest(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(out["w"], jnp.full((3,), 5.0))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    p = str(tmp_path / "ckpt_1.npz")
+    save_pytree(p, {"w": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        load_pytree(p, {"w": jnp.zeros((4,))})

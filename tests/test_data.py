@@ -1,0 +1,88 @@
+"""Data pipeline: synthetic generators + federated partitioners."""
+import numpy as np
+import pytest
+
+from repro.data import (
+    dirichlet_split,
+    make_image_dataset,
+    make_synthetic_lr,
+    pathological_split,
+)
+from repro.data.loader import (
+    build_federated,
+    build_federated_from_pairs,
+    minibatch,
+)
+
+
+def test_image_dataset_learnable_structure():
+    x, y = make_image_dataset(500, seed=0)
+    assert x.shape == (500, 28, 28, 1) and y.shape == (500,)
+    # class-conditional means must differ (prototype structure)
+    m0 = x[y == 0].mean(axis=0)
+    m1 = x[y == 1].mean(axis=0)
+    assert np.abs(m0 - m1).mean() > 0.05
+
+
+def test_pathological_split_two_labels():
+    """Paper §5: each client holds exactly `labels_per_client` labels and
+    allocation sizes vary."""
+    _, y = make_image_dataset(4000, seed=1)
+    parts = pathological_split(y, 20, labels_per_client=2, seed=0)
+    assert len(parts) == 20
+    sizes = []
+    for idx in parts:
+        labels = set(y[idx].tolist())
+        assert len(labels) <= 2
+        sizes.append(len(idx))
+    assert max(sizes) > min(sizes)  # variable allocations
+
+
+def test_dirichlet_split_covers_all_clients():
+    _, y = make_image_dataset(2000, seed=2)
+    parts = dirichlet_split(y, 10, alpha=0.3, seed=0)
+    assert len(parts) == 10
+    assert all(len(p) >= 8 for p in parts)
+
+
+def test_synthetic_lr_generator():
+    data = make_synthetic_lr(10, n_features=60, n_classes=10, seed=0)
+    assert len(data) == 10
+    for x, y in data:
+        assert x.shape[1] == 60
+        assert y.min() >= 0 and y.max() < 10
+    # heterogeneity: per-client optimal weights differ → label dists differ
+    h0 = np.bincount(data[0][1], minlength=10) / len(data[0][1])
+    h1 = np.bincount(data[1][1], minlength=10) / len(data[1][1])
+    assert np.abs(h0 - h1).sum() > 0.2
+
+
+def test_build_federated_split_75_25():
+    x, y = make_image_dataset(1000, seed=3)
+    parts = pathological_split(y, 5, seed=1)
+    fed = build_federated(x, y, parts, test_frac=0.25)
+    assert fed.n_clients == 5
+    for i in range(5):
+        c = fed.client(i)
+        total = c.n_train + c.n_test
+        assert abs(c.n_test / total - 0.25) < 0.1
+
+
+def test_minibatch_respects_mask():
+    x, y = make_image_dataset(600, seed=4)
+    parts = pathological_split(y, 6, seed=2)
+    fed = build_federated(x, y, parts)
+    rng = np.random.default_rng(0)
+    xb, yb = minibatch(rng, fed, 2, 16)
+    assert xb.shape[0] == 16
+    # every sampled label must be one of the client's ≤2 labels
+    valid = fed.mask_train[2].astype(bool)
+    allowed = set(fed.y_train[2][valid].tolist())
+    assert set(yb.tolist()) <= allowed
+
+
+def test_build_from_pairs():
+    data = make_synthetic_lr(4, seed=1)
+    fed = build_federated_from_pairs(data)
+    assert fed.n_clients == 4
+    assert fed.x_train.shape[2] == 60

@@ -1,0 +1,124 @@
+"""Beyond-paper extensions: DP-RWSADMM, kernel-integrated decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import privacy, tree
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.data import make_image_dataset, pathological_split
+from repro.data.loader import build_federated
+from repro.fl.base import to_device_data
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.fl.simulation import run_simulation
+from repro.models.small import get_model
+
+
+# ------------------------------------------------------------- privacy ----
+def test_clip_tree_bounds_norm():
+    t = {"a": jnp.full((10,), 3.0), "b": jnp.full((4,), -2.0)}
+    clipped = privacy.clip_tree(t, 1.0)
+    assert float(tree.norm(clipped)) <= 1.0 + 1e-5
+    small = {"a": jnp.full((10,), 0.01)}
+    np.testing.assert_allclose(privacy.clip_tree(small, 1.0)["a"],
+                               small["a"])  # inside ball: untouched
+
+
+def test_privatize_delta_noise_scale():
+    key = jax.random.PRNGKey(0)
+    zero = {"w": jnp.zeros((20_000,))}
+    d = privacy.privatize_delta(key, zero, zero, clip=1.0,
+                                noise_multiplier=0.5)
+    # Δc = 0 ⇒ output is pure N(0, 0.5²) noise
+    assert abs(float(jnp.std(d["w"])) - 0.5) < 0.02
+
+
+def test_epsilon_monotone():
+    e1 = privacy.epsilon_advanced_composition(1.0, 10)
+    e2 = privacy.epsilon_advanced_composition(1.0, 100)
+    e3 = privacy.epsilon_advanced_composition(2.0, 100)
+    assert e1 < e2       # more visits ⇒ more privacy loss
+    assert e3 < e2       # more noise ⇒ less privacy loss
+
+
+def test_dp_rwsadmm_learns_with_moderate_noise():
+    imgs, labels = make_image_dataset(1200, seed=0)
+    parts = pathological_split(labels, 10, seed=0)
+    data = to_device_data(build_federated(imgs, labels, parts))
+    model = get_model("mlr", (28, 28, 1))
+    tr = RWSADMMTrainer(
+        model, data, RWSADMMHparams(beta=1.0, kappa=0.001, epsilon=1e-5),
+        zone_size=6, batch_size=32, dp_clip=5.0, dp_noise=0.002)
+    res = run_simulation(tr, rounds=80, eval_every=80, seed=0)
+    # DP costs accuracy (non-private run reaches ~1.0 here) but the
+    # mechanism must still learn well above the 10% chance level.
+    assert res.final["acc_personalized"] > 0.6
+    # σ=0.002 is utility-oriented; a meaningful ε needs σ ≳ 0.5
+    assert privacy.epsilon_advanced_composition(0.002, 48) == float("inf")
+    assert np.isfinite(privacy.epsilon_advanced_composition(1.0, 48))
+
+
+# ----------------------------------------------------------- fleet --------
+def test_fleet_rwsadmm_covers_faster_and_learns():
+    """Beyond-paper: K mobile servers. The fleet covers all clients in
+    ~K× fewer wall-clock steps and still learns (tokens re-sync on
+    rendezvous)."""
+    from repro.fl.fleet_trainer import FleetRWSADMMTrainer
+
+    imgs, labels = make_image_dataset(1500, seed=0)
+    parts = pathological_split(labels, 20, seed=0)
+    data = to_device_data(build_federated(imgs, labels, parts))
+    model = get_model("mlr", (28, 28, 1))
+    hp = RWSADMMHparams(beta=1.0, kappa=0.001, epsilon=1e-5)
+    single = RWSADMMTrainer(model, data, hp, zone_size=4, batch_size=32)
+    fleet = FleetRWSADMMTrainer(model, data, hp, n_walkers=3,
+                                sync_every=15, zone_size=4, batch_size=32)
+    r1 = run_simulation(single, rounds=120, eval_every=120, seed=0)
+    r2 = run_simulation(fleet, rounds=120, eval_every=120, seed=0)
+    assert r2.final["acc_personalized"] > 0.6
+    assert r1.final["acc_personalized"] > 0.6
+    t_single = single.walker.hitting_time()
+    t_fleet = fleet.fleet_hitting_time()
+    assert t_fleet is not None and t_single is not None
+    assert t_fleet < t_single  # wall-clock coverage advantage
+
+
+# --------------------------------------------------- kernel integration ---
+def test_decode_attention_pallas_path_matches_jnp():
+    from repro.configs import get_config
+    from repro.models import attention as A
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = A.attn_init(jax.random.PRNGKey(0), cfg)
+    cache_j = A.init_kv_cache(cfg, 2, 32, "attn")
+    cache_p = A.init_kv_cache(cfg, 2, 32, "attn")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, cfg.d_model),
+                          jnp.float32)
+    for _ in range(5):
+        out_j, cache_j = A.decode_attention(params, x, cache_j, cfg)
+        out_p, cache_p = A.decode_attention(params, x, cache_p, cfg,
+                                            use_pallas=True)
+        np.testing.assert_allclose(np.asarray(out_j, np.float32),
+                                   np.asarray(out_p, np.float32),
+                                   atol=3e-3, rtol=1e-2)
+
+
+def test_decode_attention_pallas_local_ring():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import attention as A
+
+    cfg = dataclasses.replace(get_config("gemma3-12b").reduced(), window=8)
+    params = A.attn_init(jax.random.PRNGKey(0), cfg)
+    cache_j = A.init_kv_cache(cfg, 1, 8, "local")
+    cache_p = A.init_kv_cache(cfg, 1, 8, "local")
+    for t in range(12):  # goes past the window
+        x = jax.random.normal(jax.random.PRNGKey(t), (1, 1, cfg.d_model))
+        out_j, cache_j = A.decode_attention(params, x, cache_j, cfg,
+                                            kind="local")
+        out_p, cache_p = A.decode_attention(params, x, cache_p, cfg,
+                                            kind="local", use_pallas=True)
+        np.testing.assert_allclose(np.asarray(out_j, np.float32),
+                                   np.asarray(out_p, np.float32),
+                                   atol=3e-3, rtol=1e-2)

@@ -1,0 +1,106 @@
+"""Graph + Markov-chain machinery (paper §3, Assumption 3.1, Eq. 2-6)."""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import markov as M
+
+
+def test_random_geometric_graph_properties():
+    g = G.random_geometric_graph(20, min_degree=5,
+                                 rng=np.random.default_rng(0))
+    assert g.n == 20
+    assert g.is_connected()
+    assert (g.degree() >= 5).all()          # paper App. D.2 requirement
+    assert (g.adjacency == g.adjacency.T).all()
+    assert not g.adjacency.diagonal().any()
+
+
+def test_neighborhood_contains_self():
+    g = G.random_geometric_graph(10, min_degree=3,
+                                 rng=np.random.default_rng(1))
+    nb = g.neighborhood(4)
+    assert 4 in nb
+    assert len(nb) == g.degree(4) + 1
+
+
+def test_dynamic_graph_regeneration():
+    dg = G.DynamicGraph(15, min_degree=4, regen_every=10, seed=0)
+    a0 = dg.current().adjacency.copy()
+    for _ in range(9):
+        dg.step()
+    assert (dg.current().adjacency == a0).all()  # unchanged before regen
+    dg.step()
+    assert dg.n_regens == 1
+    assert dg.current().is_connected()
+
+
+def test_degree_transition_matrix_row_stochastic():
+    g = G.random_geometric_graph(12, min_degree=4,
+                                 rng=np.random.default_rng(2))
+    p = M.degree_transition_matrix(g)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-12)
+    assert (p >= 0).all()
+
+
+def test_metropolis_uniform_stationary():
+    g = G.random_geometric_graph(12, min_degree=4,
+                                 rng=np.random.default_rng(3))
+    p = M.metropolis_transition_matrix(g)
+    pi = M.stationary_distribution(p)
+    np.testing.assert_allclose(pi, 1.0 / 12, atol=1e-6)
+
+
+def test_degree_chain_stationary_proportional_to_degree():
+    g = G.random_geometric_graph(12, min_degree=4,
+                                 rng=np.random.default_rng(4))
+    p = M.degree_transition_matrix(g)
+    pi = M.stationary_distribution(p)
+    deg = g.degree().astype(float)
+    np.testing.assert_allclose(pi, deg / deg.sum(), atol=1e-6)
+
+
+def test_mixing_time_inequality_eq3():
+    """Assumption 3.1: ||P^τ(δ)_i − π|| ≤ δ π_* must hold at the τ(δ)
+    computed from Eq. (6)."""
+    g = G.random_geometric_graph(15, min_degree=5,
+                                 rng=np.random.default_rng(5))
+    for make in (M.degree_transition_matrix, M.metropolis_transition_matrix):
+        rep = M.verify_assumption_3_1(make(g), delta=0.5)
+        assert rep["holds"], rep
+
+
+def test_mixing_time_monotone_in_connectivity():
+    """Complete graph mixes faster than a line (sanity on σ(P))."""
+    line = M.metropolis_transition_matrix(G.line_graph(10))
+    comp = M.metropolis_transition_matrix(G.complete_graph(10))
+    assert M.mixing_time(comp) <= M.mixing_time(line)
+
+
+def test_p_max_envelope():
+    ps = [np.eye(3) * 0.5 + 0.5 / 3, np.full((3, 3), 1 / 3)]
+    env = M.p_max_envelope(ps)
+    assert (env >= ps[0] - 1e-12).all() and (env >= ps[1] - 1e-12).all()
+
+
+def test_random_walk_visits_all_and_hitting_time():
+    dg = G.DynamicGraph(10, min_degree=4, regen_every=10, seed=0)
+    w = M.RandomWalkServer(seed=1)
+    w.reset(dg.current())
+    for _ in range(400):
+        w.step(dg.step())
+    assert (w.visit_counts > 0).all()
+    t = w.hitting_time()
+    assert t is not None and t < 400
+
+
+def test_walk_empirical_frequency_matches_stationary():
+    """Long-run visit frequencies ≈ π (ergodic theorem) on a static graph."""
+    g = G.random_geometric_graph(8, min_degree=3,
+                                 rng=np.random.default_rng(7))
+    w = M.RandomWalkServer(transition="metropolis", seed=2)
+    w.reset(g)
+    for _ in range(6000):
+        w.step(g)
+    freq = w.visit_counts / w.visit_counts.sum()
+    np.testing.assert_allclose(freq, 1.0 / 8, atol=0.03)

@@ -1,0 +1,196 @@
+"""Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps
+vs the pure-jnp oracles + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree as T
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwsadmm_update.ops import rwsadmm_fused_update
+from repro.kernels.rwsadmm_update.ref import rwsadmm_fused_update_ref
+
+HYP = dict(max_examples=15, deadline=None,
+           suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+# ------------------------------------------------------- rwsadmm_update ---
+@pytest.mark.parametrize("n", [128, 8192, 8192 + 17, 100_003])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwsadmm_update_shapes_dtypes(n, dtype):
+    key = jax.random.PRNGKey(n)
+    ks = jax.random.split(key, 4)
+    mk = lambda k: jax.random.normal(k, (n,), jnp.float32).astype(dtype)
+    x, z, y, g = (mk(k) for k in ks)
+    xt = {"w": x}
+    xk, zk, yk = rwsadmm_fused_update(
+        xt, {"w": z}, {"w": y}, {"w": g}, 0.01,
+        beta=2.0, eps_half=5e-4, n_total=8.0)
+    xr, zr, yr = rwsadmmref(x, z, y, g, dtype)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(xk["w"], np.float32), xr,
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(zk["w"], np.float32), zr,
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(yk["w"], np.float32), yr,
+                               atol=tol, rtol=tol)
+
+
+def rwsadmmref(x, z, y, g, dtype):
+    xr, zr, yr = rwsadmm_fused_update_ref(
+        x, z, y, g, jnp.asarray(0.01, dtype),
+        beta=2.0, eps_half=5e-4, n_total=8.0)
+    return (np.asarray(xr, np.float32), np.asarray(zr, np.float32),
+            np.asarray(yr, np.float32))
+
+
+def test_rwsadmm_update_multi_leaf_pytree():
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(key, (33, 7)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (5, 4, 3))}}
+    z = T.scale(tree, 0.1)
+    y = T.add_scaled(tree, tree, 0.05)
+    g = T.scale(tree, 0.3)
+    xk, zk, yk = rwsadmm_fused_update(tree, z, y, g, 0.02,
+                                      beta=4.0, eps_half=1e-5, n_total=20.0)
+    xr, zr, yr = rwsadmm_fused_update_ref(
+        T.flatten(tree), T.flatten(z), T.flatten(y), T.flatten(g), 0.02,
+        beta=4.0, eps_half=1e-5, n_total=20.0)
+    np.testing.assert_allclose(T.flatten(xk), xr, atol=1e-6)
+    np.testing.assert_allclose(T.flatten(yk), yr, atol=1e-6)
+    assert jax.tree_util.tree_structure(xk) \
+        == jax.tree_util.tree_structure(tree)
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(
+    n=st.integers(min_value=1, max_value=5000),
+    beta=st.floats(min_value=0.5, max_value=100.0),
+    kappa=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rwsadmm_update_property(n, beta, kappa, seed):
+    """Property: kernel == oracle for arbitrary sizes/hparams, and with
+    g=0, z=0, ε=0 the update is a fixed point (x=y stays)."""
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.normal(key, (n,))
+    x, z, g = y, jnp.zeros((n,)), jnp.zeros((n,))
+    xk, zk, yk = rwsadmm_fused_update(
+        {"w": x}, {"w": z}, {"w": y}, {"w": g}, kappa,
+        beta=beta, eps_half=0.0, n_total=5.0)
+    np.testing.assert_allclose(xk["w"], y, atol=1e-6)
+    np.testing.assert_allclose(yk["w"], y, atol=1e-6)
+
+
+# --------------------------------------------------------- flash_decode ---
+@pytest.mark.parametrize("s", [256, 1024, 1000])
+@pytest.mark.parametrize("h,kv,hd", [(8, 2, 64), (4, 4, 128), (7, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(s, h, kv, hd, dtype):
+    key = jax.random.PRNGKey(s + h)
+    b = 2
+    q = jax.random.normal(key, (b, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd),
+                          jnp.float32).astype(dtype)
+    length = jnp.asarray([s, max(1, s // 3)], jnp.int32)
+    out = flash_decode(q, k, v, length)
+    ref = flash_decode_ref(q, k, v, length)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_decode_sliding_window():
+    key = jax.random.PRNGKey(7)
+    b, h, kv, hd, s = 2, 4, 2, 64, 2048
+    q = jax.random.normal(key, (b, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    length = jnp.asarray([2048, 1500], jnp.int32)
+    for w in (128, 512, 4096):
+        out = flash_decode(q, k, v, length, window=w)
+        ref = flash_decode_ref(q, k, v, length, window=w)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-4)
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(
+    s=st.integers(min_value=8, max_value=2048),
+    length_frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_flash_decode_property(s, length_frac, seed):
+    """Property: softmax weights sum to 1 ⇒ output is inside the convex
+    hull of V rows (per channel min/max bound), and kernel == oracle."""
+    key = jax.random.PRNGKey(seed)
+    b, h, kv, hd = 1, 2, 1, 32
+    q = jax.random.normal(key, (b, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    length = jnp.asarray([max(1, int(s * length_frac))], jnp.int32)
+    out = flash_decode(q, k, v, length)
+    ref = flash_decode_ref(q, k, v, length)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-3)
+    vv = np.asarray(v[0, : int(length[0]), 0])
+    assert (np.asarray(out[0, 0]) <= vv.max(0) + 1e-4).all()
+    assert (np.asarray(out[0, 0]) >= vv.min(0) - 1e-4).all()
+
+
+# ----------------------------------------------------------- rglru_scan ---
+@pytest.mark.parametrize("s,d", [(64, 128), (300, 130), (1024, 256),
+                                 (513, 64)])
+def test_rglru_scan_sweep(s, d):
+    key = jax.random.PRNGKey(s * d)
+    a = jax.nn.sigmoid(jax.random.normal(key, (2, s, d)))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2, s, d))
+    out = rglru_scan(a, b)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-4)
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(
+    s=st.integers(min_value=1, max_value=700),
+    d=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rglru_scan_property(s, d, seed):
+    """Properties: a=0 ⇒ h=b; a=1,b=0 ⇒ h=0; kernel == oracle."""
+    key = jax.random.PRNGKey(seed)
+    b_arr = jax.random.normal(key, (1, s, d))
+    np.testing.assert_allclose(
+        rglru_scan(jnp.zeros((1, s, d)), b_arr), b_arr, atol=1e-6)
+    np.testing.assert_allclose(
+        rglru_scan(jnp.ones((1, s, d)), jnp.zeros((1, s, d))),
+        jnp.zeros((1, s, d)), atol=1e-6)
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (1, s, d)))
+    np.testing.assert_allclose(rglru_scan(a, b_arr),
+                               rglru_scan_ref(a, b_arr),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_block_uses_kernel_path():
+    """models.recurrent.rglru_block(use_pallas=True) must match the jnp
+    path (kernel integration)."""
+    from repro.configs import get_config
+    from repro.models import recurrent as R
+
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = R.rglru_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model),
+                          jnp.float32)
+    out_ref = R.rglru_block(params, x, use_pallas=False)
+    out_ker = R.rglru_block(params, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out_ker, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=2e-3, rtol=1e-2)

@@ -1,0 +1,172 @@
+"""Unit tests for the RWSADMM core math (paper Eq. 9/10/11/13/14/15)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rwsadmm, tree
+from repro.core.rwsadmm import ClientState, RWSADMMHparams
+
+
+@pytest.fixture
+def hp():
+    return RWSADMMHparams(beta=2.0, kappa=0.01, epsilon=1e-3)
+
+
+def _rand_tree(key, like_shapes=((5,), (3, 4))):
+    ks = jax.random.split(key, len(like_shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, like_shapes))}
+
+
+def test_init_states_zero(hp):
+    template = _rand_tree(jax.random.PRNGKey(0))
+    client, server = rwsadmm.init_states(template, hp, n_clients=3)
+    assert float(tree.sq_norm(client.x)) == 0.0
+    assert float(tree.sq_norm(server.y)) == 0.0  # Eq. (32)
+    # stacked leading axis
+    assert client.x["p0"].shape == (3, 5)
+
+
+def test_x_update_reduces_subproblem_objective(hp):
+    """The derived x-update must (weakly) decrease the linearized
+    subproblem objective of Eq. (10) vs staying at x'."""
+    key = jax.random.PRNGKey(1)
+    y = _rand_tree(key)
+    x_prev = tree.add_scaled(y, _rand_tree(jax.random.PRNGKey(2)), 0.1)
+    z = tree.scale(_rand_tree(jax.random.PRNGKey(3)), 0.01)
+    g = _rand_tree(jax.random.PRNGKey(4))
+
+    def obj(x):
+        beta, eps = hp.beta, hp.eps_half
+        val = tree.dot(g, tree.sub(x, x_prev))
+        r = jax.tree_util.tree_map(
+            lambda yy, xx: jnp.abs(yy - xx) - eps, y, x)
+        val += tree.dot(z, r)
+        val += (beta / 2.0) * tree.sq_norm(r)
+        return float(val)
+
+    x_new = rwsadmm.x_update(y, x_prev, z, g, hp)
+    assert obj(x_new) <= obj(x_prev) + 1e-6
+
+
+def test_x_update_first_visit_is_prox_gradient_step(hp):
+    """With x' = y (t' = 0) and z = 0, the derived solver reduces to the
+    stochastic proximal step x = y − g/β."""
+    y = _rand_tree(jax.random.PRNGKey(0))
+    z = tree.zeros_like(y)
+    g = _rand_tree(jax.random.PRNGKey(5))
+    x_new = rwsadmm.x_update(y, y, z, g, hp)
+    expected = tree.add_scaled(y, g, -1.0 / hp.beta)
+    np.testing.assert_allclose(
+        tree.flatten(x_new), tree.flatten(expected), rtol=1e-6)
+
+
+def test_literal_eq11_degenerate_at_init(hp):
+    """Documents the paper bug: the printed Eq. (11) with the paper's own
+    initialization (t' = 0) produces x = y' — no movement, ever."""
+    y = _rand_tree(jax.random.PRNGKey(0))
+    g = _rand_tree(jax.random.PRNGKey(5))
+    x_new = rwsadmm.x_update(y, y, tree.zeros_like(y), g, hp,
+                             literal_eq11=True)
+    np.testing.assert_allclose(tree.flatten(x_new), tree.flatten(y))
+
+
+def test_z_update_matches_eq15(hp):
+    x = _rand_tree(jax.random.PRNGKey(6))
+    y = _rand_tree(jax.random.PRNGKey(7))
+    z = _rand_tree(jax.random.PRNGKey(8))
+    kappa = 0.5
+    z_new = rwsadmm.z_update(x, y, z, hp, kappa)
+    expected = jax.tree_util.tree_map(
+        lambda zz, xx, yy: zz + kappa * hp.beta * (xx - yy - hp.eps_half),
+        z, x, y)
+    np.testing.assert_allclose(
+        tree.flatten(z_new), tree.flatten(expected), rtol=1e-6)
+
+
+def test_y_update_maintains_running_average(hp):
+    """y must track (1/n)Σ c_j under incremental replacement (the Eq. 32
+    invariant; see y_update docstring on the 1/n vs 1/n_i fix)."""
+    n = 6
+    key = jax.random.PRNGKey(9)
+    contribs = [_rand_tree(jax.random.fold_in(key, i)) for i in range(n)]
+    y = tree.mean(contribs)
+    # replace contribution of client 2
+    new_c2 = _rand_tree(jax.random.fold_in(key, 100))
+    y_new = rwsadmm.y_update(y, new_c2, contribs[2], n_total=n)
+    contribs[2] = new_c2
+    np.testing.assert_allclose(
+        tree.flatten(y_new), tree.flatten(tree.mean(contribs)), rtol=1e-5)
+
+
+def test_zone_round_masks_and_shapes(hp):
+    """Multi-client zone update (Eq. 31): stacked states update, y folds."""
+    template = _rand_tree(jax.random.PRNGKey(0))
+    client, server = rwsadmm.init_states(template, hp, n_clients=4)
+    grads = jax.tree_util.tree_map(
+        lambda l: jnp.ones((4,) + l.shape[1:], l.dtype), client.x)
+    new_clients, y_new = rwsadmm.zone_round(
+        client, server.y, grads, hp, kappa=0.01, n_total=10)
+    assert new_clients.x["p0"].shape == (4, 5)
+    assert not bool(tree.any_nan(y_new))
+
+
+def test_subproblem_grad_zero_at_unconstrained_min(hp):
+    """∇F from Eq. (9) with z=0, ε=0: zero iff g + β(x−y) = 0."""
+    hp0 = RWSADMMHparams(beta=2.0, kappa=0.0, epsilon=0.0)
+    y = _rand_tree(jax.random.PRNGKey(1))
+    g = _rand_tree(jax.random.PRNGKey(2))
+    x_star = tree.add_scaled(y, g, -1.0 / hp0.beta)
+    gf = rwsadmm.subproblem_grad(x_star, y, tree.zeros_like(y), g, hp0)
+    assert float(tree.linf(gf)) < 1e-5
+
+
+def test_constraint_violation_metric(hp):
+    y = {"p": jnp.zeros((4,))}
+    xs = {"p": jnp.stack([jnp.full((4,), 0.0), jnp.full((4,), 1.0)])}
+    v = rwsadmm.constraint_violation(y, xs, hp)
+    assert abs(float(v) - (1.0 - hp.eps_half)) < 1e-6
+
+
+def test_beta_lower_bound():
+    assert rwsadmm.beta_lower_bound(1.0) == 5.0  # 2L²+L+2
+
+
+def test_convergence_on_convex_quadratics():
+    """End-to-end core sanity: RWSADMM on n quadratic clients converges to
+    a point where the average gradient at y vanishes (Theorem 4.8's
+    stationarity) and the hard constraints are satisfied."""
+    n, d = 6, 8
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    hp = RWSADMMHparams(beta=4.0, kappa=0.01, epsilon=1e-3)
+
+    template = {"w": jnp.zeros((d,))}
+    client, server = rwsadmm.init_states(template, hp, n_clients=n)
+    kappa = hp.kappa
+    y = server.y
+    for k in range(600):
+        i = k % n  # cyclic visiting (a valid ergodic chain)
+        xi = jax.tree_util.tree_map(lambda l: l[i], client.x)
+        zi = jax.tree_util.tree_map(lambda l: l[i], client.z)
+        grad = {"w": xi["w"] - targets[i]}
+        (new_c, c_new, c_old) = rwsadmm.client_round(
+            rwsadmm.ClientState(xi, zi), y, grad, hp, kappa)
+        y = rwsadmm.y_update(y, c_new, c_old, n_total=n)
+        client = rwsadmm.ClientState(
+            x=jax.tree_util.tree_map(
+                lambda full, newv: full.at[i].set(newv),
+                client.x, new_c.x),
+            z=jax.tree_util.tree_map(
+                lambda full, newv: full.at[i].set(newv),
+                client.z, new_c.z),
+        )
+        kappa *= hp.kappa_decay
+    avg_grad = jnp.mean(client.x["w"] - targets, axis=0)
+    assert float(jnp.max(jnp.abs(avg_grad))) < 0.05
+    # personalized x_i stay close to their targets relative to consensus
+    mean_target = jnp.mean(targets, axis=0)
+    err_pers = float(jnp.mean(jnp.abs(client.x["w"] - targets)))
+    err_consensus = float(jnp.mean(jnp.abs(mean_target[None] - targets)))
+    assert err_pers < err_consensus  # personalization beats consensus
