@@ -11,7 +11,10 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_decode.ref import flash_decode_ref
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
-from repro.kernels.rwsadmm_update.ref import rwsadmm_fused_update_ref
+from repro.kernels.rwsadmm_update.ref import (
+    rwsadmm_fused_update_ref,
+    rwsadmm_zone_fused_update_ref,
+)
 
 from .common import emit
 
@@ -37,6 +40,18 @@ def run() -> None:
     dt = _time(f, x, x * 0.1, x + 0.01, x * 0.3)
     emit("kernel/rwsadmm_update_10M", dt * 1e6,
          f"GBps={(7 * n * 4) / dt / 1e9:.1f}")
+
+    # masked multi-client zone update (Eq. 31), Z=8 × 1M params
+    zone, n_z = 8, 1_000_000
+    xs = jax.random.normal(key, (zone, n_z))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n_z,))
+    mask = jnp.ones((zone,))
+    f = jax.jit(lambda x_, z_, y_, g_: rwsadmm_zone_fused_update_ref(
+        x_, z_, y_, g_, mask, 0.01, beta=1.0, eps_half=5e-6, n_total=20.0))
+    dt = _time(f, xs, xs * 0.1, y, xs * 0.3)
+    traffic = (5 * zone + 2) * n_z * 4   # (3Z+1) read + (2Z+1) write
+    emit("kernel/rwsadmm_zone_update_8x1M", dt * 1e6,
+         f"GBps={traffic / dt / 1e9:.1f}")
 
     # flash decode, 32k cache
     b, h, kv, hd, s = 4, 8, 2, 128, 32768

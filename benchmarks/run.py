@@ -25,6 +25,7 @@ def main() -> None:
         kernels_bench,
         mixing,
         roofline_report,
+        scan_scaling,
         table1,
         table2_scaling,
     )
@@ -32,6 +33,8 @@ def main() -> None:
     jobs = [
         ("mixing", lambda: mixing.run()),
         ("kernels", lambda: kernels_bench.run()),
+        ("scan_scaling",
+         lambda: scan_scaling.run(rounds=min(rounds, 200))),
         ("convergence", lambda: convergence.run(rounds=rounds)),
         ("table1", lambda: table1.run(rounds=max(rounds, 120))),
         ("table2", lambda: table2_scaling.run()),

@@ -1,0 +1,106 @@
+"""Rounds-per-second scaling: eager vs scan vs scan_fused drivers.
+
+The paper's headline claims (fast convergence, O(1) communication,
+scalability) are wall-clock claims at thousands-of-rounds scale; this
+benchmark measures the simulator's round throughput at n ∈ {20, 100, 500}
+clients for the three RWSADMM execution engines:
+
+  eager      — one XLA dispatch + one host sync per round (seed driver),
+  scan       — whole chunk of R rounds as ONE lax.scan executable,
+  scan_fused — scan + the masked multi-client Pallas zone kernel.
+
+Timed region for scan engines includes the host-side schedule
+precomputation (graphs, random walk, zone padding, keys) — the honest
+end-to-end cost per chunk. Emits CSV rows:
+
+  scan_scaling/n{N}/{engine},{us_per_round},rounds_per_s=...
+  scan_scaling/n{N}/speedup,...,scan_vs_eager=...x
+
+Smoke (CI, <2 min):  python -m benchmarks.scan_scaling --rounds 30 \
+    --clients 20
+Full:                python -m benchmarks.scan_scaling
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.fl.rwsadmm_trainer import ENGINES, RWSADMMTrainer
+from repro.models.small import get_model
+
+from .common import emit, synthetic_fed
+
+
+def make_trainer(n_clients: int, seed: int = 0) -> RWSADMMTrainer:
+    # The paper's Synthetic(0.5, 0.5) MLR setting (§5): the strongly
+    # convex workload whose per-round compute is small enough that the
+    # eager loop is dispatch-bound — the regime the scan driver targets.
+    data, shape = synthetic_fed(n_clients, seed=seed)
+    model = get_model("mlr", shape)
+    return RWSADMMTrainer(
+        model, data, RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
+        zone_size=8, batch_size=20, solver="closed_form", seed=seed,
+    )
+
+
+def bench_engine(trainer: RWSADMMTrainer, engine: str, rounds: int) -> float:
+    """Returns measured rounds/sec (after a warmup pass that compiles)."""
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    if engine == "eager":
+        state, _ = trainer.round(state, 0, rng)          # compile
+        jax.block_until_ready(state.server.y)
+        t0 = time.perf_counter()
+        for r in range(1, rounds + 1):
+            state, _ = trainer.round(state, r, rng)
+        jax.block_until_ready(state.server.y)
+        dt = time.perf_counter() - t0
+    else:
+        sched = trainer.schedule(rounds, rng, start_round=0)
+        state, _ = trainer.run_chunk(state, sched, engine=engine)  # compile
+        jax.block_until_ready(state.server.y)
+        t0 = time.perf_counter()
+        sched = trainer.schedule(rounds, rng, start_round=rounds)
+        state, stacked = trainer.run_chunk(state, sched, engine=engine)
+        jax.block_until_ready(stacked["train_loss"])
+        dt = time.perf_counter() - t0
+    return rounds / dt
+
+
+def run(rounds: int = 200, clients=(20, 100, 500)) -> dict:
+    """Prints CSV rows; returns {n: {engine: rounds_per_s}}."""
+    results: dict = {}
+    for n in clients:
+        per_engine: dict = {}
+        for engine in ENGINES:
+            trainer = make_trainer(n)
+            rps = bench_engine(trainer, engine, rounds)
+            per_engine[engine] = rps
+            emit(f"scan_scaling/n{n}/{engine}", 1e6 / rps,
+                 f"rounds_per_s={rps:.1f}")
+        speed = per_engine["scan"] / per_engine["eager"]
+        speed_f = per_engine["scan_fused"] / per_engine["eager"]
+        emit(f"scan_scaling/n{n}/speedup", 0.0,
+             f"scan_vs_eager={speed:.1f}x "
+             f"scan_fused_vs_eager={speed_f:.1f}x")
+        results[n] = per_engine
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=200,
+                    help="timed rounds per engine (after compile warmup)")
+    ap.add_argument("--clients", type=int, nargs="+",
+                    default=[20, 100, 500])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(rounds=args.rounds, clients=tuple(args.clients))
+
+
+if __name__ == "__main__":
+    main()

@@ -30,13 +30,17 @@ def main():
     model = get_model("mlp", (28, 28, 1))
 
     # 2. RWSADMM: mobile server + hard-constraint personalization.
+    # engine="scan" compiles each eval window into ONE lax.scan
+    # executable (~5x rounds/sec vs the per-round eager loop, identical
+    # trajectory); use engine="eager" to step round-by-round.
     trainer = RWSADMMTrainer(
         model, data,
         RWSADMMHparams(beta=1.0, kappa=0.001, epsilon=1e-5),
         zone_size=8, batch_size=32, min_degree=5, regen_every=10,
     )
     print("== RWSADMM (mobile server, personalized) ==")
-    res = run_simulation(trainer, rounds=300, eval_every=50, verbose=True)
+    res = run_simulation(trainer, rounds=300, eval_every=50, verbose=True,
+                         engine="scan")
 
     # 3. FedAvg benchmark on the same data.
     print("== FedAvg (stationary server, consensus) ==")

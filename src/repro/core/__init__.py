@@ -1,7 +1,12 @@
 """Core: the paper's contribution — RWSADMM + random-walk machinery."""
 from . import graph, markov, rwsadmm, tree, walkman  # noqa: F401
 from .graph import ClientGraph, DynamicGraph, random_geometric_graph  # noqa: F401
-from .markov import RandomWalkServer, mixing_time  # noqa: F401
+from .markov import (  # noqa: F401
+    RandomWalkServer,
+    ZoneSchedule,
+    mixing_time,
+    zone_schedule,
+)
 from .rwsadmm import (  # noqa: F401
     ClientState,
     RWSADMMHparams,
@@ -10,4 +15,5 @@ from .rwsadmm import (  # noqa: F401
     init_states,
     init_states_warm,
     zone_round,
+    zone_round_masked,
 )

@@ -51,17 +51,16 @@ class ClientGraph:
         return int(self.adjacency.sum()) // 2
 
     def is_connected(self) -> bool:
-        n = self.n
-        seen = np.zeros(n, dtype=bool)
-        stack = [0]
+        # Vectorized frontier expansion (runs at every regeneration
+        # epoch; a Python-loop BFS dominates schedule precomputation at
+        # n ≳ 500).
+        seen = np.zeros(self.n, dtype=bool)
         seen[0] = True
-        while stack:
-            u = stack.pop()
-            for v in np.flatnonzero(self.adjacency[u]):
-                if not seen[v]:
-                    seen[v] = True
-                    stack.append(int(v))
-        return bool(seen.all())
+        while True:
+            new = self.adjacency[seen].any(axis=0) & ~seen
+            if not new.any():
+                return bool(seen.all())
+            seen |= new
 
 
 def random_geometric_graph(
@@ -75,12 +74,16 @@ def random_geometric_graph(
     rng = rng or np.random.default_rng(0)
     min_degree = min(min_degree, n - 1)
     pos = rng.uniform(0.0, 1.0, size=(n, 2))
-    d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+    # ‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b: one (n,2)@(2,n) matmul instead of an
+    # (n,n,2) broadcast — regeneration runs every ``regen_every`` rounds.
+    sq = (pos * pos).sum(axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (pos @ pos.T)
     np.fill_diagonal(d2, np.inf)
     adj = np.zeros((n, n), dtype=bool)
-    order = np.argsort(d2, axis=1)
-    for i in range(n):
-        adj[i, order[i, :min_degree]] = True
+    # k nearest neighbors per row; argpartition is O(n²) vs argsort's
+    # O(n² log n) — this runs at every regeneration epoch.
+    nearest = np.argpartition(d2, min_degree - 1, axis=1)[:, :min_degree]
+    np.put_along_axis(adj, nearest, True, axis=1)
     adj = adj | adj.T
 
     # Patch connectivity: link nearest nodes across components.
@@ -147,6 +150,25 @@ class DynamicGraph:
             )
             self.n_regens += 1
         return self.graph
+
+    def schedule(self, rounds: int,
+                 *, include_current: bool = False) -> list[ClientGraph]:
+        """Batch variant of :meth:`step`: the next ``rounds`` graphs.
+
+        Consumes the generator state exactly as ``rounds`` successive
+        ``step()`` calls would, so an eager per-round driver and a
+        precomputed-schedule driver see identical topologies (including
+        regeneration epochs). ``include_current=True`` makes the first
+        entry the *current* graph without advancing — the round-0
+        convention of the trainers, which use ``current()`` before the
+        first ``step()``.
+        """
+        graphs: list[ClientGraph] = []
+        if include_current:
+            graphs.append(self.current())
+        while len(graphs) < rounds:
+            graphs.append(self.step())
+        return graphs
 
 
 def line_graph(n: int) -> ClientGraph:

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import weakref
+from typing import Any, Sequence
 
 import numpy as np
 
@@ -137,13 +139,24 @@ class RandomWalkServer:
         self.position: int | None = None
         self.visit_counts: np.ndarray | None = None
         self.history: list[int] = []
+        self._matrix_cache: tuple[Any, np.ndarray] | None = None
 
     def matrix(self, graph: ClientGraph) -> np.ndarray:
+        # The graph object only changes at regeneration epochs (every
+        # ``regen_every`` rounds), but step() runs every round — cache
+        # the O(n²) transition matrix per graph instance (weakref so a
+        # recycled id can never alias a dead graph).
+        if self._matrix_cache is not None \
+                and self._matrix_cache[0]() is graph:
+            return self._matrix_cache[1]
         if self.transition == "degree":
-            return degree_transition_matrix(graph)
-        if self.transition == "metropolis":
-            return metropolis_transition_matrix(graph)
-        raise ValueError(f"unknown transition kind {self.transition!r}")
+            p = degree_transition_matrix(graph)
+        elif self.transition == "metropolis":
+            p = metropolis_transition_matrix(graph)
+        else:
+            raise ValueError(f"unknown transition kind {self.transition!r}")
+        self._matrix_cache = (weakref.ref(graph), p)
+        return p
 
     def reset(self, graph: ClientGraph, start: int | None = None) -> int:
         self.visit_counts = np.zeros(graph.n, dtype=np.int64)
@@ -175,3 +188,133 @@ class RandomWalkServer:
             if len(seen) == len(self.visit_counts):
                 return k
         return None
+
+    def walk_schedule(self, graphs: Sequence[ClientGraph],
+                      *, advance_first: bool = True) -> np.ndarray:
+        """Batch variant of :meth:`step`: the visited sequence (i_k) over a
+        precomputed graph schedule (one graph per round).
+
+        Consumes the walk RNG exactly as per-round ``step()`` calls would,
+        so eager and compiled-schedule drivers visit identical clients.
+        ``advance_first=False`` keeps the first entry at the current
+        position (the round-0 convention: the server starts *at* a client
+        before its first move).
+        """
+        positions = np.empty(len(graphs), dtype=np.int64)
+        for k, graph in enumerate(graphs):
+            if k == 0 and not advance_first:
+                assert self.position is not None, "call reset() first"
+                positions[k] = self.position
+            else:
+                positions[k] = self.step(graph)
+        return positions
+
+
+# ---------------------------------------------------------------------------
+# Precomputed zone schedules — the host-side half of the compiled
+# multi-round (lax.scan) driver. Everything data-dependent that the random
+# walk decides (which client, which zone members, which PRNG key) is
+# resolved here into fixed-shape arrays; the device then runs R rounds as
+# one XLA executable with no host round-trips.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneSchedule:
+    """R precomputed zone rounds as fixed-shape host arrays.
+
+    idx:     (R, Z) int32 — active-client ids, padded with 0.
+    mask:    (R, Z) float32 — 1 for live slots, 0 for padding.
+    n_i:     (R,) float32 — |N(i_k)| zone sizes (pre-subsampling).
+    keys:    (R, 2) uint32 — per-round PRNG keys (minibatch sampling).
+    clients: (R,) int32 — the visited client i_k per round.
+    active:  (R,) int32 — number of live slots per round (≤ Z).
+    """
+
+    idx: np.ndarray
+    mask: np.ndarray
+    n_i: np.ndarray
+    keys: np.ndarray
+    clients: np.ndarray
+    active: np.ndarray
+
+    @property
+    def rounds(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def zone_size(self) -> int:
+        return int(self.idx.shape[1])
+
+
+def plan_zone_round(
+    graph: ClientGraph,
+    i_k: int,
+    zone_size: int,
+    rng: np.random.Generator,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Form the active zone S(i_k) ⊆ N(i_k) for one round (Eq. 31 subset).
+
+    Returns (idx (Z,), mask (Z,), n_i). Zones larger than ``zone_size``
+    are subsampled: i_k plus random neighbors, drawn from ``rng`` — the
+    single host RNG shared with per-round key generation, so schedule
+    precomputation replays the eager driver's draw sequence exactly.
+    """
+    zone = graph.neighborhood(i_k)
+    n_i = len(zone)
+    if n_i > zone_size:
+        others = zone[zone != i_k]
+        pick = rng.choice(others, size=zone_size - 1, replace=False)
+        active = np.concatenate([[i_k], pick])
+    else:
+        active = zone
+    mask = np.zeros(zone_size, np.float32)
+    mask[: len(active)] = 1.0
+    idx = np.zeros(zone_size, np.int32)
+    idx[: len(active)] = active
+    return idx, mask, n_i
+
+
+def zone_schedule(
+    dyn_graph,
+    walker: RandomWalkServer,
+    rounds: int,
+    zone_size: int,
+    rng: np.random.Generator,
+    *,
+    start_round: int = 0,
+) -> ZoneSchedule:
+    """Precompute ``rounds`` zone rounds: graphs (covering regeneration
+    epochs), random-walk positions, padded zone membership, and PRNG keys.
+
+    Advances ``dyn_graph``, ``walker``, and ``rng`` exactly as the same
+    number of eager per-round calls would, so chunked schedules compose:
+    ``zone_schedule(..., R1) + zone_schedule(..., R2, start_round=R1)``
+    reproduces one eager run of R1+R2 rounds draw-for-draw.
+    """
+    first = start_round == 0
+    graphs = dyn_graph.schedule(rounds, include_current=first)
+    positions = walker.walk_schedule(graphs, advance_first=not first)
+
+    z = zone_size
+    idx = np.zeros((rounds, z), np.int32)
+    mask = np.zeros((rounds, z), np.float32)
+    n_i = np.zeros((rounds,), np.float32)
+    seeds = np.zeros((rounds,), np.int64)
+    active = np.zeros((rounds,), np.int32)
+    for k in range(rounds):
+        idx[k], mask[k], n_i[k] = plan_zone_round(
+            graphs[k], int(positions[k]), z, rng
+        )
+        active[k] = int(mask[k].sum())
+        seeds[k] = rng.integers(2**31 - 1)
+
+    # One batched dispatch for the key block (threefry init is jit-traced,
+    # so vmap over seeds matches per-seed PRNGKey bit-for-bit).
+    import jax
+
+    keys = np.asarray(jax.vmap(jax.random.PRNGKey)(seeds))
+    return ZoneSchedule(
+        idx=idx, mask=mask, n_i=n_i, keys=keys,
+        clients=positions.astype(np.int32), active=active,
+    )

@@ -267,6 +267,43 @@ def zone_round(clients: ClientState, y_prev: PyTree, grads: PyTree,
     return new_clients, y_new
 
 
+def zone_round_masked(clients: ClientState, y_prev: PyTree, grads: PyTree,
+                      mask: jnp.ndarray, hp: RWSADMMHparams, kappa, n_total):
+    """Masked fixed-shape variant of :func:`zone_round` (paper Eq. 31).
+
+    clients / grads carry a padded leading ``Z`` axis; ``mask`` (Z,) marks
+    live slots. Padded slots pass their x/z through unchanged and
+    contribute zero to the y fold, so a whole run reuses one executable
+    regardless of the realized zone size. This is the pure-jnp oracle for
+    the fused Pallas kernel (``kernels.rwsadmm_update.ops.
+    rwsadmm_zone_fused_update``), which computes the same math in a
+    single HBM pass.
+    """
+    upd = jax.vmap(
+        lambda c, g: client_round(c, y_prev, g, hp, kappa),
+        in_axes=(0, 0),
+    )
+    new_act, c_new, c_old = upd(clients, grads)
+
+    def mexpand(leaf):
+        return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    keep = tree.tree_map(
+        lambda new, old: mexpand(new) * new + (1.0 - mexpand(new)) * old,
+        new_act.x, clients.x,
+    )
+    keep_z = tree.tree_map(
+        lambda new, old: mexpand(new) * new + (1.0 - mexpand(new)) * old,
+        new_act.z, clients.z,
+    )
+    y_new = tree.tree_map(
+        lambda y, cn, co: y + jnp.sum(
+            mexpand(cn) * (cn - co), axis=0) / n_total,
+        y_prev, c_new, c_old,
+    )
+    return ClientState(x=keep, z=keep_z), y_new
+
+
 def server_round_done(server: ServerState, y_new: PyTree,
                       hp: RWSADMMHparams) -> ServerState:
     """Advance the server token: store y, decay κ (Algorithm 1)."""

@@ -148,9 +148,16 @@ class TrainerBase:
         raise NotImplementedError  # pragma: no cover
 
     # -- communication accounting ------------------------------------------
+    def params_bytes(self) -> int:
+        """Bytes of one model copy (cached — init is host-side and slow)."""
+        cached = getattr(self, "_params_bytes", None)
+        if cached is None:
+            from ..core import tree as t
+
+            cached = t.n_bytes(self.model.init(jax.random.PRNGKey(0)))
+            self._params_bytes = cached
+        return cached
+
     def comm_bytes_per_round(self, participants: int) -> int:
         """Default: each participant downloads + uploads one model copy."""
-        from ..core import tree as t
-
-        p_bytes = t.n_bytes(self.model.init(jax.random.PRNGKey(0)))
-        return int(2 * participants * p_bytes)
+        return int(2 * participants * self.params_bytes())

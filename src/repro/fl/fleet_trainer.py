@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import markov
 from ..core.graph import DynamicGraph
 from ..core.markov import RandomWalkServer
 from ..core.rwsadmm import RWSADMMHparams, ServerState
@@ -62,19 +63,9 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         walker = self.walkers[k]
         i_k = walker.step(graph) if rnd >= self.n_walkers \
             else walker.position
-        zone = graph.neighborhood(i_k)
-        n_i = len(zone)
-        if n_i > self.zone_size:
-            others = zone[zone != i_k]
-            pick = rng.choice(others, size=self.zone_size - 1,
-                              replace=False)
-            active = np.concatenate([[i_k], pick])
-        else:
-            active = zone
-        mask = np.zeros(self.zone_size, np.float32)
-        mask[: len(active)] = 1.0
-        idx = np.zeros(self.zone_size, np.int32)
-        idx[: len(active)] = active
+        idx, mask, n_i = markov.plan_zone_round(
+            graph, int(i_k), self.zone_size, rng)
+        n_active = int(mask.sum())
 
         # run the zone step against walker k's token
         base = RWSADMMState(
@@ -99,10 +90,22 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         metrics = {
             "round": rnd, "walker": k, "client": int(i_k),
             "train_loss": float(zone_loss),
-            "comm_bytes": self.comm_bytes_per_round(len(active)),
+            "comm_bytes": self.comm_bytes_per_round(n_active),
         }
         return FleetState(base=base, tokens=tuple(tokens),
                           kappa=base.server.kappa), metrics
+
+    # The fleet round interleaves K walkers and host-side token averaging;
+    # the single-walker schedule/run_chunk drivers do not model that.
+    def schedule(self, *args, **kwargs):
+        raise NotImplementedError(
+            "FleetRWSADMMTrainer has per-walker host state; "
+            "use engine='eager'")
+
+    def run_chunk(self, *args, **kwargs):
+        raise NotImplementedError(
+            "FleetRWSADMMTrainer has per-walker host state; "
+            "use engine='eager'")
 
     def personalized_params(self, state: FleetState):
         return super().personalized_params(state.base)

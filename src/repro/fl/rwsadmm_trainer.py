@@ -11,6 +11,18 @@ Host side per round k:
 The compiled round has *fixed shapes*: zones are padded to ``zone_size``
 with a mask; padded slots contribute zero deltas via scatter-add, so a
 whole training run reuses a single XLA executable.
+
+Two drivers share that round body:
+
+* **eager** — :meth:`round`: one XLA dispatch + one host sync per round
+  (the classic loop; dispatch overhead dominates for small models).
+* **scan** — :meth:`schedule` precomputes the whole random-walk / zone /
+  key schedule as fixed-shape arrays (``core.markov.zone_schedule``),
+  then :meth:`run_chunk` runs R rounds as ONE ``lax.scan`` executable
+  with no per-round host round-trips; metrics come back stacked.
+  ``engine="scan_fused"`` additionally routes the closed-form triple
+  update through the masked multi-client Pallas kernel
+  (``kernels.rwsadmm_update``) so the Eq. 31 zone round is one HBM pass.
 """
 from __future__ import annotations
 
@@ -21,11 +33,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import rwsadmm
+from ..core import markov, rwsadmm
 from ..core.graph import DynamicGraph
-from ..core.markov import RandomWalkServer
+from ..core.markov import RandomWalkServer, ZoneSchedule
 from ..core.rwsadmm import ClientState, RWSADMMHparams, ServerState
+from ..kernels.rwsadmm_update import ops as fused_ops
 from .base import DeviceData, TrainerBase, sample_batch
+
+SCAN_ENGINES = ("scan", "scan_fused")      # compiled lax.scan drivers
+ENGINES = ("eager",) + SCAN_ENGINES        # everything run_simulation takes
 
 
 class RWSADMMState(NamedTuple):
@@ -74,6 +90,7 @@ class RWSADMMTrainer(TrainerBase):
         self.walker = RandomWalkServer(transition=transition, seed=seed + 1)
         self.walker.reset(self.dyn_graph.current())
         self._round_fn = jax.jit(functools.partial(self._round_impl))
+        self._chunk_fns: dict = {}   # engine -> jitted lax.scan driver
 
     # ------------------------------------------------------------------
     def init_state(self, key) -> RWSADMMState:
@@ -93,7 +110,7 @@ class RWSADMMTrainer(TrainerBase):
 
     # ------------------------------------------------------------------
     def _round_impl(self, state: RWSADMMState, zone_idx, zone_mask, n_i,
-                    key):
+                    key, *, use_fused: bool = False):
         clients, server = state.clients, state.server
         hp, kappa = self.hp, server.kappa
 
@@ -102,6 +119,7 @@ class RWSADMMTrainer(TrainerBase):
         act = ClientState(x=gather(clients.x), z=gather(clients.z))
 
         keys = jax.random.split(key, self.zone_size)
+        y_new = None   # set early by the fused kernel, late by the jnp fold
 
         if self.solver == "closed_form":
             # One-step stochastic linearization (Eq. 10/11).
@@ -110,10 +128,21 @@ class RWSADMMTrainer(TrainerBase):
                 return self.value_and_grad_fn(params, xb, yb, k)
 
             losses, grads = jax.vmap(one_grad)(act.x, zone_idx, keys)
-            upd = jax.vmap(
-                lambda c, g: rwsadmm.client_round(c, server.y, g, hp, kappa)
-            )
-            new_act, c_new, c_old = upd(act, grads)
+            if use_fused:
+                # Whole zone round (Eq. 31) in one HBM pass: x/z updates
+                # for every active client + the masked y fold.
+                x_f, z_f, y_new = fused_ops.rwsadmm_zone_fused_update(
+                    act.x, act.z, server.y, grads, zone_mask, kappa,
+                    beta=hp.beta, eps_half=hp.eps_half,
+                    n_total=float(self.n_clients),
+                )
+                new_act = ClientState(x=x_f, z=z_f)
+            else:
+                upd = jax.vmap(
+                    lambda c, g: rwsadmm.client_round(c, server.y, g, hp,
+                                                      kappa)
+                )
+                new_act, c_new, c_old = upd(act, grads)
         else:
             # Iterative solver of the x-subproblem (Eq. 9): K stochastic
             # subgradient steps, warm-started at the client's stored x'.
@@ -147,27 +176,28 @@ class RWSADMMTrainer(TrainerBase):
         m = zone_mask  # (Z,)
         n_total = float(self.n_clients)
 
-        if self.dp_clip is not None:
-            # DP uploads: clip + noise each active client's Δc before it
-            # reaches the walking token (core/privacy.py).
-            from ..core import privacy
+        if y_new is None:
+            if self.dp_clip is not None:
+                # DP uploads: clip + noise each active client's Δc before
+                # it reaches the walking token (core/privacy.py).
+                from ..core import privacy
 
-            dkeys = jax.random.split(jax.random.fold_in(key, 97),
-                                     self.zone_size)
-            deltas = jax.vmap(
-                lambda k_, cn, co: privacy.privatize_delta(
-                    k_, cn, co, clip=self.dp_clip,
-                    noise_multiplier=self.dp_noise)
-            )(dkeys, c_new, c_old)
-        else:
-            deltas = jax.tree_util.tree_map(
-                lambda cn, co: cn - co, c_new, c_old)
+                dkeys = jax.random.split(jax.random.fold_in(key, 97),
+                                         self.zone_size)
+                deltas = jax.vmap(
+                    lambda k_, cn, co: privacy.privatize_delta(
+                        k_, cn, co, clip=self.dp_clip,
+                        noise_multiplier=self.dp_noise)
+                )(dkeys, c_new, c_old)
+            else:
+                deltas = jax.tree_util.tree_map(
+                    lambda cn, co: cn - co, c_new, c_old)
 
-        def fold(y, d):
-            mm = m.reshape((-1,) + (1,) * (d.ndim - 1))
-            return y + jnp.sum(mm * d, axis=0) / n_total
+            def fold(y, d):
+                mm = m.reshape((-1,) + (1,) * (d.ndim - 1))
+                return y + jnp.sum(mm * d, axis=0) / n_total
 
-        y_new = jax.tree_util.tree_map(fold, server.y, deltas)
+            y_new = jax.tree_util.tree_map(fold, server.y, deltas)
 
         # Scatter active deltas back (duplicate-free: zone indices unique,
         # padded slots masked to zero so .add is a no-op for them).
@@ -190,21 +220,13 @@ class RWSADMMTrainer(TrainerBase):
 
     # ------------------------------------------------------------------
     def round(self, state: RWSADMMState, rnd: int, rng: np.random.Generator):
+        """Eager driver: one dispatch + one host sync per round."""
         graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()
         i_k = self.walker.step(graph) if rnd > 0 else self.walker.position
-        zone = graph.neighborhood(i_k)
-        n_i = len(zone)
-        if n_i > self.zone_size:
-            # S(i_k) ⊂ N(i_k): i_k + random neighbors (Eq. 31 subset).
-            others = zone[zone != i_k]
-            pick = rng.choice(others, size=self.zone_size - 1, replace=False)
-            active = np.concatenate([[i_k], pick])
-        else:
-            active = zone
-        mask = np.zeros(self.zone_size, np.float32)
-        mask[: len(active)] = 1.0
-        idx = np.zeros(self.zone_size, np.int32)
-        idx[: len(active)] = active
+        idx, mask, n_i = markov.plan_zone_round(
+            graph, int(i_k), self.zone_size, rng
+        )
+        n_active = int(mask.sum())
 
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
         state, zone_loss = self._round_fn(
@@ -214,13 +236,73 @@ class RWSADMMTrainer(TrainerBase):
         metrics = {
             "round": rnd,
             "client": int(i_k),
-            "zone": int(len(active)),
-            "n_i": n_i,
+            "zone": n_active,
+            "n_i": int(n_i),
             "train_loss": float(zone_loss),
             "kappa": float(state.server.kappa),
-            "comm_bytes": self.comm_bytes_per_round(len(active)),
+            "comm_bytes": self.comm_bytes_per_round(n_active),
         }
         return state, metrics
+
+    # ------------------------------------------------------------------
+    # Compiled multi-round (lax.scan) driver.
+    # ------------------------------------------------------------------
+    def schedule(self, rounds: int, rng: np.random.Generator,
+                 *, start_round: int = 0) -> ZoneSchedule:
+        """Precompute the next ``rounds`` zone rounds as fixed-shape
+        arrays, consuming the graph/walker/sim RNGs exactly as the eager
+        driver would (so chunked scans replay eager runs draw-for-draw).
+        """
+        return markov.zone_schedule(
+            self.dyn_graph, self.walker, rounds, self.zone_size, rng,
+            start_round=start_round,
+        )
+
+    def run_chunk(self, state: RWSADMMState, sched: ZoneSchedule,
+                  engine: str = "scan"):
+        """Run a whole schedule chunk as ONE compiled ``lax.scan``.
+
+        No host sync inside the chunk; per-round metrics come back as
+        stacked device arrays. Returns (state, {"train_loss": (R,),
+        "kappa": (R,)}).
+        """
+        if engine not in SCAN_ENGINES:
+            raise ValueError(
+                f"engine must be one of {'|'.join(SCAN_ENGINES)}, "
+                f"got {engine}")
+        use_fused = engine == "scan_fused"
+        if use_fused and self.solver != "closed_form":
+            raise ValueError(
+                "scan_fused fuses the closed-form triple update; use "
+                "solver='closed_form' (prox_sgd has no closed-form x step)")
+        if use_fused and self.dp_clip is not None:
+            raise ValueError("scan_fused does not support DP uploads; "
+                             "use engine='scan'")
+
+        fn = self._chunk_fns.get(engine)
+        if fn is None:
+            round_fn = functools.partial(self._round_impl,
+                                         use_fused=use_fused)
+
+            def chunk(state, idx, mask, n_i, keys):
+                def body(carry, per_round):
+                    i_r, m_r, ni_r, k_r = per_round
+                    new_state, loss = round_fn(carry, i_r, m_r, ni_r, k_r)
+                    return new_state, (loss, new_state.server.kappa)
+
+                final, stacked = jax.lax.scan(
+                    body, state, (idx, mask, n_i, keys)
+                )
+                return final, stacked
+
+            fn = jax.jit(chunk)
+            self._chunk_fns[engine] = fn
+
+        final, (losses, kappas) = fn(
+            state, jnp.asarray(sched.idx), jnp.asarray(sched.mask),
+            jnp.asarray(sched.n_i), jnp.asarray(sched.keys),
+        )
+        return final, {"train_loss": losses, "kappa": kappas}
 
     # ------------------------------------------------------------------
     def personalized_params(self, state: RWSADMMState):
@@ -238,10 +320,7 @@ class RWSADMMTrainer(TrainerBase):
     def comm_bytes_per_round(self, participants: int) -> int:
         # Server broadcasts y once into the zone; each active client
         # uploads its contribution delta. O(1) in n — the paper's claim.
-        from ..core import tree as t
-
-        p_bytes = t.n_bytes(self.model.init(jax.random.PRNGKey(0)))
-        return int((1 + participants) * p_bytes)
+        return int((1 + participants) * self.params_bytes())
 
     # -- diagnostics -----------------------------------------------------
     def lyapunov(self, state: RWSADMMState, key) -> dict:

@@ -1,5 +1,18 @@
 """Generic FL simulation runner: drives any trainer for R rounds, records
-convergence history, communication totals, and wall time."""
+convergence history, communication totals, and wall time.
+
+Two execution engines:
+
+* ``engine="eager"`` (default, any trainer): one ``trainer.round`` call —
+  i.e. one XLA dispatch plus one blocking host sync — per round.
+* ``engine="scan" | "scan_fused"`` (trainers exposing ``schedule`` /
+  ``run_chunk``, currently RWSADMM): the random-walk / zone schedule for a
+  whole eval window is precomputed host-side, then the window runs as ONE
+  compiled ``lax.scan`` executable; per-round metrics come back as stacked
+  arrays with a single device→host sync per window. Same trajectories as
+  eager (the schedule replays the eager driver's RNG draws), minus the
+  per-round dispatch overhead that dominates wall-clock for small models.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -27,6 +40,31 @@ class SimulationResult:
         return rounds, vals
 
 
+def _snapshot(trainer, state, rnd: int, total_comm: int,
+              history: list[dict], verbose: bool, tag: str) -> None:
+    """Eval the current state and append the snapshot (shared by both
+    engines so the history shape can never diverge between them)."""
+    snap = trainer.evaluate(state)
+    snap["round"] = rnd
+    snap["comm_bytes_total"] = total_comm
+    history.append(snap)
+    if verbose:
+        print(f"[{tag}] round {rnd:4d}  acc={snap['acc']:.4f}  "
+              f"comm={total_comm / 1e6:.1f}MB")
+
+
+def _result(trainer, history, round_metrics, total_comm,
+            wall: float) -> SimulationResult:
+    return SimulationResult(
+        algo=trainer.name,
+        history=history,
+        round_metrics=round_metrics,
+        final=history[-1] if history else {},
+        total_comm_bytes=total_comm,
+        wall_time_s=wall,
+    )
+
+
 def run_simulation(
     trainer: TrainerBase,
     *,
@@ -34,7 +72,13 @@ def run_simulation(
     eval_every: int = 10,
     seed: int = 0,
     verbose: bool = False,
+    engine: str = "eager",
 ) -> SimulationResult:
+    if engine != "eager":
+        return _run_simulation_scan(
+            trainer, rounds=rounds, eval_every=eval_every, seed=seed,
+            verbose=verbose, engine=engine,
+        )
     rng = np.random.default_rng(seed)
     state = trainer.init_state(jax.random.PRNGKey(seed))
     history: list[dict] = []
@@ -46,21 +90,57 @@ def run_simulation(
         total_comm += int(metrics.get("comm_bytes", 0))
         round_metrics.append(metrics)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
-            snap = trainer.evaluate(state)
-            snap["round"] = r + 1
-            snap["comm_bytes_total"] = total_comm
-            history.append(snap)
-            if verbose:
-                print(
-                    f"[{trainer.name}] round {r + 1:4d}  "
-                    f"acc={snap['acc']:.4f}  comm={total_comm / 1e6:.1f}MB"
-                )
+            _snapshot(trainer, state, r + 1, total_comm, history, verbose,
+                      trainer.name)
     wall = time.perf_counter() - t0
-    return SimulationResult(
-        algo=trainer.name,
-        history=history,
-        round_metrics=round_metrics,
-        final=history[-1] if history else {},
-        total_comm_bytes=total_comm,
-        wall_time_s=wall,
-    )
+    return _result(trainer, history, round_metrics, total_comm, wall)
+
+
+def _run_simulation_scan(
+    trainer: Any,
+    *,
+    rounds: int,
+    eval_every: int,
+    seed: int,
+    verbose: bool,
+    engine: str,
+) -> SimulationResult:
+    """Chunked scan driver: one compiled executable per eval window."""
+    if not (hasattr(trainer, "schedule") and hasattr(trainer, "run_chunk")):
+        raise ValueError(
+            f"trainer {trainer.name!r} has no scan driver "
+            "(needs .schedule/.run_chunk); use engine='eager'")
+    rng = np.random.default_rng(seed)
+    state = trainer.init_state(jax.random.PRNGKey(seed))
+    history: list[dict] = []
+    round_metrics: list[dict] = []
+    total_comm = 0
+    t0 = time.perf_counter()
+    r = 0
+    while r < rounds:
+        # Align chunks to eval boundaries so snapshots land on the same
+        # rounds as the eager driver.
+        r_next = min(((r // eval_every) + 1) * eval_every, rounds)
+        sched = trainer.schedule(r_next - r, rng, start_round=r)
+        state, stacked = trainer.run_chunk(state, sched, engine=engine)
+        losses = np.asarray(stacked["train_loss"])   # the one sync/window
+        kappas = np.asarray(stacked["kappa"])
+        for j in range(sched.rounds):
+            n_active = int(sched.active[j])
+            comm = trainer.comm_bytes_per_round(n_active)
+            total_comm += comm
+            round_metrics.append({
+                "round": r + j,
+                "client": int(sched.clients[j]),
+                "zone": n_active,
+                "n_i": int(sched.n_i[j]),
+                "train_loss": float(losses[j]),
+                "kappa": float(kappas[j]),
+                "comm_bytes": comm,
+            })
+        r = r_next
+        if r % eval_every == 0 or r == rounds:
+            _snapshot(trainer, state, r, total_comm, history, verbose,
+                      f"{trainer.name}/{engine}")
+    wall = time.perf_counter() - t0
+    return _result(trainer, history, round_metrics, total_comm, wall)

@@ -57,3 +57,67 @@ def fused_update_flat(x, z, y, g, kappa, *, beta: float, eps_half: float,
         out_shape=out_shape,
         interpret=interpret,
     )(x, z, y, g, kappa)
+
+
+# ---------------------------------------------------------------------------
+# Masked multi-client zone variant (paper Eq. 31): all Z active clients'
+# x/z updates plus the server's folded y update in ONE HBM pass. Per block
+# of P parameters the pass reads (3Z+1)·P (x, z, g per client + y) and
+# writes (2Z+1)·P (x⁺, z⁺ per client + y⁺) — the roofline floor; the
+# unfused zone round streams every per-client intermediate (s', c, c⁺, Δ)
+# through HBM. The Z loop is unrolled at trace time (Z ≤ ~16), all
+# operands VMEM-resident.
+# ---------------------------------------------------------------------------
+
+ZONE_BLOCK = 2 * 1024  # elements/program: (5Z+2) arrays ≈ 42 × 8 KB @ Z=8
+
+
+def _zone_kernel(x_ref, z_ref, y_ref, g_ref, mask_ref, kappa_ref,
+                 x_out, z_out, y_out, *, beta, eps_half, n_total, zone):
+    y = y_ref[...]
+    kappa = kappa_ref[0]
+    acc = jnp.zeros_like(y)
+    for j in range(zone):          # static unroll over the padded zone
+        m = mask_ref[j]
+        x = x_ref[j]
+        z = z_ref[j]
+        g = g_ref[j]
+        s_prev = jnp.sign(y - x)
+        x_new = y - g / beta + s_prev * (z - beta * eps_half) / beta
+        z_new = z + kappa * beta * (x_new - y - eps_half)
+        c_old = x - (z / beta + eps_half) * s_prev
+        c_new = x_new - (z_new / beta + eps_half) * jnp.sign(y - x_new)
+        # Padded slots (m=0) pass through untouched and fold zero into y.
+        x_out[j] = m * x_new + (1.0 - m) * x
+        z_out[j] = m * z_new + (1.0 - m) * z
+        acc = acc + m * (c_new - c_old)
+    y_out[...] = y + acc / n_total
+
+
+def zone_fused_update_flat(x, z, y, g, mask, kappa, *, beta: float,
+                           eps_half: float, n_total: float,
+                           interpret: bool = True, block: int = ZONE_BLOCK):
+    """x/z/g: (Z, N) stacked active clients; y: (N,); mask: (Z,);
+    kappa: (1,). N a multiple of ``block`` (ops.py pads). Returns
+    (x⁺ (Z, N), z⁺ (Z, N), y⁺ (N,))."""
+    zone, n = x.shape
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    mspec = pl.BlockSpec((zone, block), lambda i: (0, i))
+    vspec = pl.BlockSpec((block,), lambda i: (i,))
+    maskspec = pl.BlockSpec((zone,), lambda i: (0,))
+    kspec = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((zone, n), x.dtype),
+        jax.ShapeDtypeStruct((zone, n), x.dtype),
+        jax.ShapeDtypeStruct((n,), x.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_zone_kernel, beta=beta, eps_half=eps_half,
+                          n_total=n_total, zone=zone),
+        grid=grid,
+        in_specs=[mspec, mspec, vspec, mspec, maskspec, kspec],
+        out_specs=[mspec, mspec, vspec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, z, y, g, mask, kappa)

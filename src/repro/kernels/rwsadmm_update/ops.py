@@ -42,3 +42,38 @@ def rwsadmm_fused_update(x, z, y, g, kappa, *, beta: float, eps_half: float,
     return (tree_util.unflatten(x, x_new),
             tree_util.unflatten(z, z_new),
             tree_util.unflatten(y, y_new))
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "eps_half", "n_total",
+                                             "block"))
+def rwsadmm_zone_fused_update(x, z, y, g, mask, kappa, *, beta: float,
+                              eps_half: float, n_total: float,
+                              block: int = kernel.ZONE_BLOCK):
+    """Masked multi-client zone update (Eq. 31) via the fused kernel.
+
+    x/z/g: pytrees with a padded leading ``Z`` axis (stacked active
+    clients); y: the server token pytree; mask: (Z,) float (0 = padding).
+    Returns (x⁺, z⁺, y⁺) with the same layouts — one HBM pass for the
+    whole zone round. Oracle: ``core.rwsadmm.zone_round_masked``.
+    """
+    xf = jax.vmap(tree_util.flatten)(x)   # (Z, N)
+    zf = jax.vmap(tree_util.flatten)(z)
+    gf = jax.vmap(tree_util.flatten)(g)
+    yf = tree_util.flatten(y)             # (N,)
+    n = yf.shape[0]
+    pad = (-n) % block
+    if pad:
+        xf, zf, gf = (jnp.pad(a, ((0, 0), (0, pad))) for a in (xf, zf, gf))
+        yf = jnp.pad(yf, (0, pad))
+    kappa_arr = jnp.reshape(jnp.asarray(kappa, yf.dtype), (1,))
+    mask_arr = jnp.asarray(mask, yf.dtype)
+    x_new, z_new, y_new = kernel.zone_fused_update_flat(
+        xf, zf, yf, gf, mask_arr, kappa_arr, beta=beta, eps_half=eps_half,
+        n_total=n_total, interpret=_interpret(), block=block,
+    )
+    if pad:
+        x_new, z_new = (a[:, :n] for a in (x_new, z_new))
+        y_new = y_new[:n]
+    template = jax.tree_util.tree_map(lambda l: l[0], x)
+    unstack = jax.vmap(lambda f: tree_util.unflatten(template, f))
+    return (unstack(x_new), unstack(z_new), tree_util.unflatten(y, y_new))

@@ -24,3 +24,20 @@ def rwsadmm_fused_update_ref(x, z, y, g, kappa, *, beta: float,
     c_new = x_new - (z_new / beta + eps_half) * jnp.sign(y - x_new)
     y_new = y + (c_new - c_old) / n_total
     return x_new, z_new, y_new
+
+
+def rwsadmm_zone_fused_update_ref(x, z, y, g, mask, kappa, *, beta: float,
+                                  eps_half: float, n_total: float):
+    """Masked multi-client zone oracle (Eq. 31): x/z/g (Z, N) stacked
+    active clients, y (N,), mask (Z,). Padded slots (mask=0) pass x/z
+    through unchanged and contribute zero to the y fold."""
+    m = mask[:, None]
+    s_prev = jnp.sign(y[None] - x)
+    x_new = y[None] - g / beta + s_prev * (z - beta * eps_half) / beta
+    z_new = z + kappa * beta * (x_new - y[None] - eps_half)
+    c_old = x - (z / beta + eps_half) * s_prev
+    c_new = x_new - (z_new / beta + eps_half) * jnp.sign(y[None] - x_new)
+    y_new = y + jnp.sum(m * (c_new - c_old), axis=0) / n_total
+    return (m * x_new + (1.0 - m) * x,
+            m * z_new + (1.0 - m) * z,
+            y_new)

@@ -1,11 +1,11 @@
 """Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps
 vs the pure-jnp oracles + hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import tree as T
 from repro.kernels.flash_decode.ops import flash_decode

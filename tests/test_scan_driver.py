@@ -1,0 +1,264 @@
+"""Compiled multi-round scan driver: schedule precomputation, lax.scan
+chunk execution, and the fused-kernel hot path must reproduce the eager
+per-round driver exactly (scan) or to fp tolerance (scan_fused).
+
+Covers the acceptance bar: ≥20 rounds, both solvers, chunk boundaries
+crossing a graph-regeneration epoch (regen_every=10), plus the masked
+multi-client zone kernel vs its jnp oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import markov
+from repro.core.graph import DynamicGraph
+from repro.core.markov import RandomWalkServer
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.data import make_image_dataset, pathological_split
+from repro.data.loader import build_federated
+from repro.fl.base import to_device_data
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.fl.simulation import run_simulation
+from repro.models.small import get_model
+
+ROUNDS = 25  # crosses regen boundaries at rounds 10 and 20
+
+
+@pytest.fixture(scope="module")
+def fed():
+    imgs, labels = make_image_dataset(600, seed=0)
+    parts = pathological_split(labels, 10, seed=0)
+    data = to_device_data(build_federated(imgs, labels, parts))
+    model = get_model("mlr", (28, 28, 1))
+    return data, model
+
+
+def make_trainer(fed, solver):
+    data, model = fed
+    return RWSADMMTrainer(
+        model, data, RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
+        zone_size=4, batch_size=20, regen_every=10, solver=solver, seed=0,
+    )
+
+
+def run_eager(tr, rounds=ROUNDS):
+    rng = np.random.default_rng(0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    losses = []
+    for r in range(rounds):
+        state, m = tr.round(state, r, rng)
+        losses.append(m["train_loss"])
+    return state, np.asarray(losses)
+
+
+def run_scan(tr, engine, chunks=(10, 10, 5)):
+    rng = np.random.default_rng(0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    losses = []
+    r = 0
+    for n in chunks:
+        sched = tr.schedule(n, rng, start_round=r)
+        state, stacked = tr.run_chunk(state, sched, engine=engine)
+        losses.extend(np.asarray(stacked["train_loss"]).tolist())
+        r += n
+    return state, np.asarray(losses)
+
+
+def assert_trees_close(a, b, atol=0.0, rtol=0.0):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol, rtol=rtol)
+
+
+# ------------------------------------------------------- schedule APIs ---
+def test_graph_schedule_matches_stepping():
+    a = DynamicGraph(12, min_degree=3, regen_every=4, seed=7)
+    b = DynamicGraph(12, min_degree=3, regen_every=4, seed=7)
+    graphs = a.schedule(9, include_current=True)
+    manual = [b.current()] + [b.step() for _ in range(8)]
+    assert len(graphs) == 9
+    for ga, gb in zip(graphs, manual):
+        np.testing.assert_array_equal(ga.adjacency, gb.adjacency)
+    # regen epochs were crossed (rounds 4 and 8)
+    assert a.n_regens == b.n_regens == 2
+
+
+def test_walk_schedule_matches_stepping():
+    g = DynamicGraph(10, min_degree=3, seed=3)
+    graphs = g.schedule(8, include_current=True)
+    wa = RandomWalkServer(seed=1)
+    wa.reset(graphs[0])
+    wb = RandomWalkServer(seed=1)
+    wb.reset(graphs[0])
+    batch = wa.walk_schedule(graphs, advance_first=False)
+    manual = [wb.position] + [wb.step(gr) for gr in graphs[1:]]
+    np.testing.assert_array_equal(batch, np.asarray(manual))
+    np.testing.assert_array_equal(wa.visit_counts, wb.visit_counts)
+
+
+def test_zone_schedule_shapes_and_chunking():
+    """Two chunked schedules replay one long schedule draw-for-draw."""
+    def build(chunks):
+        g = DynamicGraph(15, min_degree=4, regen_every=10, seed=5)
+        w = RandomWalkServer(seed=6)
+        w.reset(g.current())
+        rng = np.random.default_rng(9)
+        out, r = [], 0
+        for n in chunks:
+            out.append(markov.zone_schedule(g, w, n, 4, rng, start_round=r))
+            r += n
+        return out
+
+    (one,) = build([24])
+    parts = build([10, 14])
+    assert one.idx.shape == (24, 4)
+    assert one.keys.shape == (24, 2)
+    cat = np.concatenate([p.idx for p in parts])
+    np.testing.assert_array_equal(one.idx, cat)
+    np.testing.assert_array_equal(
+        one.keys, np.concatenate([p.keys for p in parts]))
+    np.testing.assert_array_equal(
+        one.clients, np.concatenate([p.clients for p in parts]))
+    # padded slots masked out, active counts consistent
+    assert (one.active == one.mask.sum(axis=1)).all()
+    assert ((one.mask == 0) | (one.mask == 1)).all()
+
+
+def test_schedule_keys_match_eager_key_sequence():
+    """keys[k] == PRNGKey(k-th rng.integers draw) given identical zone
+    subsampling draws in between."""
+    g = DynamicGraph(8, min_degree=7, seed=2)   # complete-ish: no subsample
+    w = RandomWalkServer(seed=3)
+    w.reset(g.current())
+    rng = np.random.default_rng(11)
+    sched = markov.zone_schedule(g, w, 5, 8, rng, start_round=0)
+    rng2 = np.random.default_rng(11)
+    for k in range(5):
+        expect = np.asarray(jax.random.PRNGKey(rng2.integers(2**31 - 1)))
+        np.testing.assert_array_equal(sched.keys[k], expect)
+
+
+# ------------------------------------------------- driver equivalence ----
+@pytest.mark.parametrize("solver", ["closed_form", "prox_sgd"])
+def test_scan_driver_equals_eager(fed, solver):
+    """scan ≡ eager: identical client/server states and per-round losses
+    over 25 rounds, chunk boundaries crossing a regeneration epoch."""
+    st_e, losses_e = run_eager(make_trainer(fed, solver))
+    st_s, losses_s = run_scan(make_trainer(fed, solver), "scan")
+    assert_trees_close(st_e.clients.x, st_s.clients.x, atol=1e-6)
+    assert_trees_close(st_e.clients.z, st_s.clients.z, atol=1e-6)
+    assert_trees_close(st_e.server.y, st_s.server.y, atol=1e-6)
+    np.testing.assert_allclose(losses_e, losses_s, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st_e.visited),
+                                  np.asarray(st_s.visited))
+    assert int(st_s.server.round) == ROUNDS
+
+
+def test_scan_fused_matches_eager_closed_form(fed):
+    """scan_fused (masked zone Pallas kernel) tracks the eager closed-form
+    trajectory to fp tolerance over 25 rounds."""
+    st_e, losses_e = run_eager(make_trainer(fed, "closed_form"))
+    st_f, losses_f = run_scan(make_trainer(fed, "closed_form"),
+                              "scan_fused", chunks=(25,))
+    assert_trees_close(st_e.clients.x, st_f.clients.x, atol=5e-6)
+    assert_trees_close(st_e.server.y, st_f.server.y, atol=5e-6)
+    np.testing.assert_allclose(losses_e, losses_f, atol=1e-4)
+
+
+def test_scan_fused_rejects_prox_sgd(fed):
+    tr = make_trainer(fed, "prox_sgd")
+    state = tr.init_state(jax.random.PRNGKey(0))
+    sched = tr.schedule(2, np.random.default_rng(0))
+    with pytest.raises(ValueError, match="closed_form"):
+        tr.run_chunk(state, sched, engine="scan_fused")
+
+
+def test_run_simulation_engines_agree(fed):
+    """run_simulation(engine=scan) reproduces the eager history/metrics."""
+    data, model = fed
+
+    def mk():
+        return RWSADMMTrainer(
+            model, data, RWSADMMHparams(beta=1.0), zone_size=4,
+            batch_size=20, regen_every=10, seed=0)
+
+    res_e = run_simulation(mk(), rounds=22, eval_every=10, seed=0)
+    res_s = run_simulation(mk(), rounds=22, eval_every=10, seed=0,
+                           engine="scan")
+    assert [h["round"] for h in res_e.history] \
+        == [h["round"] for h in res_s.history] == [10, 20, 22]
+    for he, hs in zip(res_e.history, res_s.history):
+        np.testing.assert_allclose(he["acc_personalized"],
+                                   hs["acc_personalized"], atol=1e-6)
+    assert res_e.total_comm_bytes == res_s.total_comm_bytes
+    for me, ms in zip(res_e.round_metrics, res_s.round_metrics):
+        assert me["client"] == ms["client"]
+        assert me["zone"] == ms["zone"]
+        np.testing.assert_allclose(me["train_loss"], ms["train_loss"],
+                                   atol=1e-5)
+
+
+# ------------------------------------------------- masked zone kernel ----
+def test_zone_kernel_matches_oracle():
+    from repro.core import tree as T
+    from repro.kernels.rwsadmm_update.ops import rwsadmm_zone_fused_update
+    from repro.kernels.rwsadmm_update.ref import (
+        rwsadmm_zone_fused_update_ref,
+    )
+
+    key = jax.random.PRNGKey(0)
+    Z, N = 5, 3000
+    ks = jax.random.split(key, 4)
+    x, z, g = (jax.random.normal(k, (Z, N)) for k in ks[:3])
+    y = jax.random.normal(ks[3], (N,))
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+
+    def split(a):
+        return {"a": a[..., :1000].reshape(a.shape[:-1] + (10, 100)),
+                "b": a[..., 1000:]}
+
+    xk, zk, yk = rwsadmm_zone_fused_update(
+        split(x), split(z), split(y), split(g), mask, 0.01,
+        beta=2.0, eps_half=5e-4, n_total=8.0)
+    xr, zr, yr = rwsadmm_zone_fused_update_ref(
+        x, z, y, g, mask, 0.01, beta=2.0, eps_half=5e-4, n_total=8.0)
+    np.testing.assert_allclose(np.asarray(jax.vmap(T.flatten)(xk)), xr,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jax.vmap(T.flatten)(zk)), zr,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(T.flatten(yk)), yr, atol=1e-6)
+    # padding invariants: masked-out clients pass through, zero y-fold
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(T.flatten)(xk))[3:], np.asarray(x)[3:])
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(T.flatten)(zk))[3:], np.asarray(z)[3:])
+
+
+def test_zone_kernel_matches_masked_zone_round():
+    """Kernel vs core.rwsadmm.zone_round_masked (pytree-level oracle)."""
+    from repro.core import rwsadmm
+    from repro.core.rwsadmm import ClientState
+    from repro.kernels.rwsadmm_update.ops import rwsadmm_zone_fused_update
+
+    hp = RWSADMMHparams(beta=4.0, kappa=0.02, epsilon=1e-4)
+    key = jax.random.PRNGKey(1)
+    Z = 6
+    template = {"w": jnp.zeros((Z, 37, 5)), "b": jnp.zeros((Z, 11))}
+    ks = jax.random.split(key, 4)
+    mk = lambda k: jax.tree_util.tree_map(
+        lambda l: jax.random.normal(jax.random.fold_in(k, l.ndim), l.shape),
+        template)
+    x, z, g = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    y = jax.tree_util.tree_map(lambda l: l[0] * 0.5, mk(ks[3]))
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+
+    ref_c, ref_y = rwsadmm.zone_round_masked(
+        ClientState(x=x, z=z), y, g, mask, hp, 0.02, n_total=9.0)
+    xk, zk, yk = rwsadmm_zone_fused_update(
+        x, z, y, g, mask, 0.02, beta=hp.beta, eps_half=hp.eps_half,
+        n_total=9.0)
+    assert_trees_close(ref_c.x, xk, atol=1e-6)
+    assert_trees_close(ref_c.z, zk, atol=1e-6)
+    assert_trees_close(ref_y, yk, atol=1e-6)

@@ -7,11 +7,11 @@ These validate the three paper headlines on offline data:
   3. its per-round communication is O(1) in the client count (§4).
 Plus: hypothesis property tests on system invariants.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st
 
 from repro.baselines import FedAvgTrainer
 from repro.core.rwsadmm import RWSADMMHparams
