@@ -77,12 +77,13 @@ class APFLTrainer(TrainerBase):
         return APFLState(w=w, v=v)
 
     def round(self, state, rnd: int, rng: np.random.Generator):
-        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        sel = self.select_clients(rnd, rng, self.m)
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
         w, v = self._round_fn(state.w, state.v, jnp.asarray(sel), key)
         return APFLState(w=w, v=v), {
             "round": rnd,
             "comm_bytes": self.comm_bytes_per_round(self.m),
+            **self.scenario_round_costs(sel),
         }
 
     def personalized_params(self, state):

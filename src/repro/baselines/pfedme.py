@@ -86,12 +86,13 @@ class PFedMeTrainer(TrainerBase):
         return PFedMeState(w=self.model.init(key))
 
     def round(self, state, rnd: int, rng: np.random.Generator):
-        sel = rng.choice(self.n_clients, size=self.m, replace=False)
+        sel = self.select_clients(rnd, rng, self.m)
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
         w = self._round_fn(state.w, jnp.asarray(sel), key)
         return PFedMeState(w=w), {
             "round": rnd,
             "comm_bytes": self.comm_bytes_per_round(self.m),
+            **self.scenario_round_costs(sel),
         }
 
     def personalized_params(self, state):

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import walkman
-from ..core.graph import DynamicGraph
 from ..core.markov import RandomWalkServer
 from ..fl.base import DeviceData, TrainerBase, sample_batch
 
@@ -30,15 +29,13 @@ class WalkmanTrainer(TrainerBase):
 
     def __init__(self, model, data: DeviceData, *, beta: float = 3.0,
                  min_degree: int = 5, regen_every: int = 10,
-                 batch_size: int = 20, seed: int = 0):
+                 batch_size: int = 20, scenario=None, seed: int = 0):
         super().__init__(model, data, batch_size)
         self.beta = beta
-        self.dyn_graph = DynamicGraph(
-            self.n_clients, min_degree=min_degree,
-            regen_every=regen_every, seed=seed,
-        )
-        self.walker = RandomWalkServer(seed=seed + 1)
-        self.walker.reset(self.dyn_graph.current())
+        self._seed = int(seed)
+        self._min_degree = int(min_degree)
+        self._regen_every = int(regen_every)
+        self.attach_scenario(scenario, seed=seed)
 
         def round_fn(clients, y, i_k, key):
             x_i = jax.tree_util.tree_map(lambda l: l[i_k], clients.x)
@@ -75,6 +72,21 @@ class WalkmanTrainer(TrainerBase):
         return WalkmanState(clients=clients, y=params,
                             round=jnp.asarray(0, jnp.int32))
 
+    def attach_scenario(self, spec, seed: int | None = None) -> None:
+        """Walkman walks the same environment as RWSADMM: the scenario
+        drives its dynamic graph (mobility + link dropouts)."""
+        from ..scenarios import build_scenario
+
+        seed = self._seed if seed is None else seed
+        self._seed = seed   # later re-attaches reuse the latest seed
+        self.scenario = build_scenario(
+            spec, self.n_clients, seed=seed,
+            min_degree=self._min_degree, regen_every=self._regen_every,
+        )
+        self.dyn_graph = self.scenario
+        self.walker = RandomWalkServer(seed=seed + 1)
+        self.walker.reset(self.dyn_graph.current())
+
     def round(self, state, rnd: int, rng: np.random.Generator):
         graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()
         i_k = self.walker.step(graph) if rnd > 0 else self.walker.position
@@ -82,11 +94,18 @@ class WalkmanTrainer(TrainerBase):
         clients, y, loss = self._round_fn(
             state.clients, state.y, jnp.asarray(i_k), key
         )
+        # Walkman exchanges the token with the one client the server is
+        # physically at: a wired/near-field hand-off, not a radio hop,
+        # so the wireless ledger prices it at zero (the vehicle's
+        # movement is the transport). Bytes still move — comm_bytes
+        # counts the exchange; latency/energy count radio only.
         return WalkmanState(clients, y, state.round + 1), {
             "round": rnd,
             "client": int(i_k),
             "train_loss": float(loss),
             "comm_bytes": self.comm_bytes_per_round(1),
+            "latency_s": 0.0,
+            "energy_j": 0.0,
         }
 
     def global_params(self, state):

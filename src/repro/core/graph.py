@@ -51,16 +51,92 @@ class ClientGraph:
         return int(self.adjacency.sum()) // 2
 
     def is_connected(self) -> bool:
-        # Vectorized frontier expansion (runs at every regeneration
-        # epoch; a Python-loop BFS dominates schedule precomputation at
-        # n ≳ 500).
-        seen = np.zeros(self.n, dtype=bool)
-        seen[0] = True
-        while True:
-            new = self.adjacency[seen].any(axis=0) & ~seen
-            if not new.any():
-                return bool(seen.all())
-            seen |= new
+        return adjacency_connected(self.adjacency)
+
+
+def adjacency_connected(adj: np.ndarray) -> bool:
+    """Connectivity of a boolean adjacency matrix.
+
+    Vectorized frontier expansion (runs at every regeneration epoch —
+    and every round under link-dropout scenarios; a Python-loop BFS
+    dominates schedule precomputation at n ≳ 500). The matvec avoids
+    the row-gather copy a boolean index would make each iteration;
+    accumulate in intp — a uint8 dot would wrap at 256 seen neighbors
+    and misreport dense graphs.
+    """
+    a = adj.view(np.uint8)
+    seen = np.zeros(adj.shape[0], dtype=bool)
+    seen[0] = True
+    while True:
+        new = (a @ seen.astype(np.intp) > 0) & ~seen
+        if not new.any():
+            return bool(seen.all())
+        seen |= new
+
+
+# One-entry distance-matrix cache: producers (range_graph, the mobility
+# models) seed it for the graph they return; consumers in the same round
+# (link layer, comm pricing) hit it instead of recomputing the O(n²)
+# matrix. Weakref-keyed so a recycled id can never alias a dead graph.
+_SQ_DIST_CACHE: tuple | None = None
+
+
+def seed_sq_dist_cache(graph: "ClientGraph", d2: np.ndarray) -> None:
+    global _SQ_DIST_CACHE
+    import weakref
+
+    _SQ_DIST_CACHE = (weakref.ref(graph), d2)
+
+
+def graph_sq_dists(graph: "ClientGraph") -> np.ndarray:
+    """Squared pairwise distances for a graph's positions (cached)."""
+    if _SQ_DIST_CACHE is not None and _SQ_DIST_CACHE[0]() is graph:
+        return _SQ_DIST_CACHE[1]
+    d2 = pairwise_sq_dists(graph.positions)
+    seed_sq_dist_cache(graph, d2)
+    return d2
+
+
+def pairwise_sq_dists(pos: np.ndarray) -> np.ndarray:
+    """(n, n) squared distances with +inf diagonal.
+
+    ‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b: one (n,2)@(2,n) matmul instead of an
+    (n,n,2) broadcast — this runs at every regeneration/mobility epoch.
+    """
+    sq = (pos * pos).sum(axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (pos @ pos.T)
+    np.fill_diagonal(d2, np.inf)
+    return np.maximum(d2, 0.0)
+
+
+def knn_adjacency(d2: np.ndarray, k: int) -> np.ndarray:
+    """Symmetrized k-nearest-neighbor adjacency from squared distances.
+
+    argpartition is O(n²) vs argsort's O(n² log n) — this runs at every
+    regeneration epoch.
+    """
+    n = d2.shape[0]
+    k = min(k, n - 1)
+    adj = np.zeros((n, n), dtype=bool)
+    if k > 0:
+        nearest = np.argpartition(d2, k - 1, axis=1)[:, :k]
+        np.put_along_axis(adj, nearest, True, axis=1)
+    return adj | adj.T
+
+
+def patch_connected(adj: np.ndarray, d2: np.ndarray) -> np.ndarray:
+    """Deterministically link nearest nodes across components until the
+    graph is connected (Assumption 3.1 requires an irreducible chain).
+    Mutates and returns ``adj``.
+    """
+    while not adjacency_connected(adj):
+        comp = _component_labels(adj)
+        a = np.flatnonzero(comp == comp[0])
+        b = np.flatnonzero(comp != comp[0])
+        sub = d2[np.ix_(a, b)]
+        ia, ib = np.unravel_index(np.argmin(sub), sub.shape)
+        adj[a[ia], b[ib]] = adj[b[ib], a[ia]] = True
+    return adj
 
 
 def random_geometric_graph(
@@ -72,31 +148,11 @@ def random_geometric_graph(
     nearest neighbors (paper App. D.2), then symmetrized and patched to be
     connected (Assumption 3.1 requires an irreducible chain)."""
     rng = rng or np.random.default_rng(0)
-    min_degree = min(min_degree, n - 1)
     pos = rng.uniform(0.0, 1.0, size=(n, 2))
-    # ‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b: one (n,2)@(2,n) matmul instead of an
-    # (n,n,2) broadcast — regeneration runs every ``regen_every`` rounds.
-    sq = (pos * pos).sum(axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (pos @ pos.T)
-    np.fill_diagonal(d2, np.inf)
-    adj = np.zeros((n, n), dtype=bool)
-    # k nearest neighbors per row; argpartition is O(n²) vs argsort's
-    # O(n² log n) — this runs at every regeneration epoch.
-    nearest = np.argpartition(d2, min_degree - 1, axis=1)[:, :min_degree]
-    np.put_along_axis(adj, nearest, True, axis=1)
-    adj = adj | adj.T
-
-    # Patch connectivity: link nearest nodes across components.
-    g = ClientGraph(adjacency=adj, positions=pos)
-    while not g.is_connected():
-        comp = _component_labels(adj)
-        a = np.flatnonzero(comp == comp[0])
-        b = np.flatnonzero(comp != comp[0])
-        sub = d2[np.ix_(a, b)]
-        ia, ib = np.unravel_index(np.argmin(sub), sub.shape)
-        adj[a[ia], b[ib]] = adj[b[ib], a[ia]] = True
-        g = ClientGraph(adjacency=adj, positions=pos)
-    return g
+    d2 = pairwise_sq_dists(pos)
+    adj = knn_adjacency(d2, min_degree)
+    adj = patch_connected(adj, d2)
+    return ClientGraph(adjacency=adj, positions=pos)
 
 
 def _component_labels(adj: np.ndarray) -> np.ndarray:

@@ -34,16 +34,17 @@ def metropolis_transition_matrix(graph: ClientGraph) -> np.ndarray:
     """Metropolis-Hastings weights: uniform stationary distribution.
 
     P_ij = min(1/deg(i), 1/deg(j)) for j~i; self-loop absorbs the rest.
+
+    Vectorized: one (n, n) elementwise min instead of a Python double
+    loop (this runs at every regeneration epoch, and every round under
+    link-dropout scenarios). Pinned against the loop form in
+    ``tests/test_graph_markov.py``.
     """
     adj = graph.adjacency.astype(np.float64)
     deg = adj.sum(axis=1)
-    n = graph.n
-    p = np.zeros((n, n))
-    for i in range(n):
-        nbrs = np.flatnonzero(adj[i])
-        for j in nbrs:
-            p[i, j] = min(1.0 / deg[i], 1.0 / deg[j])
-        p[i, i] = 1.0 - p[i].sum()
+    inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1.0), 0.0)
+    p = adj * np.minimum(inv[:, None], inv[None, :])
+    np.fill_diagonal(p, 1.0 - p.sum(axis=1))
     return p
 
 
@@ -229,6 +230,13 @@ class ZoneSchedule:
     keys:    (R, 2) uint32 — per-round PRNG keys (minibatch sampling).
     clients: (R,) int32 — the visited client i_k per round.
     active:  (R,) int32 — number of live slots per round (≤ Z).
+
+    When the schedule is built from a scenario with a wireless comm
+    model (``scenarios/``), two extra host-side columns price each
+    round; they never enter the compiled scan (control-plane only):
+
+    latency_s: (R,) float64 — expected round latency, or None.
+    energy_j:  (R,) float64 — expected round radio energy, or None.
     """
 
     idx: np.ndarray
@@ -237,6 +245,8 @@ class ZoneSchedule:
     keys: np.ndarray
     clients: np.ndarray
     active: np.ndarray
+    latency_s: np.ndarray | None = None
+    energy_j: np.ndarray | None = None
 
     @property
     def rounds(self) -> int:
@@ -252,6 +262,7 @@ def plan_zone_round(
     i_k: int,
     zone_size: int,
     rng: np.random.Generator,
+    avail: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray, int]:
     """Form the active zone S(i_k) ⊆ N(i_k) for one round (Eq. 31 subset).
 
@@ -259,8 +270,16 @@ def plan_zone_round(
     are subsampled: i_k plus random neighbors, drawn from ``rng`` — the
     single host RNG shared with per-round key generation, so schedule
     precomputation replays the eager driver's draw sequence exactly.
+
+    ``avail`` is an optional (n,) bool client-availability mask (churn /
+    duty-cycling, ``scenarios/``): offline neighbors are dropped from the
+    zone before subsampling. The visited client i_k always participates —
+    the server is physically at its location. ``avail=None`` (the default)
+    consumes ``rng`` identically to the pre-scenario code path.
     """
     zone = graph.neighborhood(i_k)
+    if avail is not None:
+        zone = zone[avail[zone] | (zone == i_k)]
     n_i = len(zone)
     if n_i > zone_size:
         others = zone[zone != i_k]
@@ -283,6 +302,7 @@ def zone_schedule(
     rng: np.random.Generator,
     *,
     start_round: int = 0,
+    price=None,
 ) -> ZoneSchedule:
     """Precompute ``rounds`` zone rounds: graphs (covering regeneration
     epochs), random-walk positions, padded zone membership, and PRNG keys.
@@ -291,9 +311,20 @@ def zone_schedule(
     number of eager per-round calls would, so chunked schedules compose:
     ``zone_schedule(..., R1) + zone_schedule(..., R2, start_round=R1)``
     reproduces one eager run of R1+R2 rounds draw-for-draw.
+
+    ``dyn_graph`` is either a plain ``graph.DynamicGraph`` or a
+    ``scenarios.Scenario``. A scenario additionally yields per-round
+    client-availability masks (churn) via ``pop_avail_trace()``, which
+    feed zone planning, and — when ``price`` is given — per-round
+    latency/energy columns. ``price(graphs, clients, idx, mask) ->
+    ((R,), (R,))`` prices the whole window in one vectorized call and
+    must be deterministic (no RNG) so eager and scan engines price
+    identically.
     """
     first = start_round == 0
     graphs = dyn_graph.schedule(rounds, include_current=first)
+    pop_trace = getattr(dyn_graph, "pop_avail_trace", None)
+    avails = pop_trace() if pop_trace is not None else None
     positions = walker.walk_schedule(graphs, advance_first=not first)
 
     z = zone_size
@@ -304,10 +335,14 @@ def zone_schedule(
     active = np.zeros((rounds,), np.int32)
     for k in range(rounds):
         idx[k], mask[k], n_i[k] = plan_zone_round(
-            graphs[k], int(positions[k]), z, rng
+            graphs[k], int(positions[k]), z, rng,
+            avail=None if avails is None else avails[k],
         )
         active[k] = int(mask[k].sum())
         seeds[k] = rng.integers(2**31 - 1)
+    latency = energy = None
+    if price is not None:
+        latency, energy = price(graphs, positions, idx, mask)
 
     # One batched dispatch for the key block (threefry init is jit-traced,
     # so vmap over seeds matches per-seed PRNGKey bit-for-bit).
@@ -317,4 +352,5 @@ def zone_schedule(
     return ZoneSchedule(
         idx=idx, mask=mask, n_i=n_i, keys=keys,
         clients=positions.astype(np.int32), active=active,
+        latency_s=latency, energy_j=energy,
     )

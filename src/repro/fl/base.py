@@ -65,6 +65,7 @@ class TrainerBase:
         self.data = data
         self.batch_size = int(batch_size)
         self.n_clients = data.n_clients
+        self.scenario = None   # attach_scenario() / trainer kwarg
 
         def loss_fn(params, xb, yb, rng):
             logits = model.apply(params, xb, train=True, rng=rng)
@@ -138,6 +139,50 @@ class TrainerBase:
             out["loss_global"] = float(jnp.mean(loss))
         out["acc"] = out.get("acc_personalized", out.get("acc_global", 0.0))
         return out
+
+    # -- scenario plumbing (mobility / links / churn, scenarios/) ---------
+    def attach_scenario(self, spec, seed: int = 0) -> None:
+        """Attach an environment scenario (name or ScenarioConfig).
+
+        For the infrastructure-based baselines the scenario contributes
+        client churn (availability gates selection) and wireless round
+        pricing against a central base station; graph-walking trainers
+        override this to drive their dynamic graph from it too.
+        """
+        from ..scenarios import build_scenario
+
+        self.scenario = build_scenario(spec, self.n_clients, seed=seed)
+
+    def select_clients(self, rnd: int, rng: np.random.Generator,
+                       m: int) -> np.ndarray:
+        """Uniform client selection, churn-aware when a scenario is
+        attached. Without a scenario this consumes ``rng`` exactly like
+        the legacy ``rng.choice(n, m, replace=False)`` call."""
+        if self.scenario is None:
+            return rng.choice(self.n_clients, size=m, replace=False)
+        if rnd > 0:
+            self.scenario.step()
+        avail = self.scenario.availability()
+        pool = (np.flatnonzero(avail) if avail is not None
+                else np.arange(self.n_clients))
+        if len(pool) == 0:
+            pool = np.arange(self.n_clients)
+        # Jitted round bodies need fixed shapes: when churn leaves fewer
+        # than m clients awake, fill the cohort by resampling the pool
+        # (duplicates just reweight the average).
+        replace = len(pool) < m
+        return rng.choice(pool, size=m, replace=replace)
+
+    def scenario_round_costs(self, members: np.ndarray) -> dict:
+        """Wireless latency/energy for one baseline round (base-station
+        topology); {} when no scenario is attached. Priced over all
+        cohort slots — duplicates from churn resampling count as
+        distinct transfers, matching comm_bytes_per_round's ledger."""
+        if self.scenario is None:
+            return {}
+        lat, en = self.scenario.price_star_round(
+            np.asarray(members), self.params_bytes())
+        return {"latency_s": lat, "energy_j": en}
 
     # -- abstract ----------------------------------------------------------
     def init_state(self, key):  # pragma: no cover - interface

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import markov
-from ..core.graph import DynamicGraph
 from ..core.markov import RandomWalkServer
 from ..core.rwsadmm import RWSADMMHparams, ServerState
 from .base import DeviceData
@@ -40,15 +39,23 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
     def __init__(self, model, data: DeviceData,
                  hp: RWSADMMHparams = RWSADMMHparams(), *,
                  n_walkers: int = 3, sync_every: int = 20, **kw):
-        super().__init__(model, data, hp, **kw)
         self.n_walkers = int(n_walkers)
         self.sync_every = int(sync_every)
-        seed = kw.get("seed", 0)
+        # super().__init__ attaches the scenario, which (via our
+        # attach_scenario override) also builds the walker fleet.
+        super().__init__(model, data, hp, **kw)
+
+    def _reset_fleet(self) -> None:
         self.walkers = [RandomWalkServer(transition=self.walker.transition,
-                                         seed=seed + 10 + k)
+                                         seed=self._seed + 10 + k)
                         for k in range(self.n_walkers)]
         for w in self.walkers:
             w.reset(self.dyn_graph.current())
+
+    def attach_scenario(self, spec, seed: int | None = None) -> None:
+        super().attach_scenario(spec, seed=seed)
+        if hasattr(self, "n_walkers"):   # re-attach after construction
+            self._reset_fleet()
 
     def init_state(self, key) -> FleetState:
         base = super().init_state(key)
@@ -64,8 +71,10 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         i_k = walker.step(graph) if rnd >= self.n_walkers \
             else walker.position
         idx, mask, n_i = markov.plan_zone_round(
-            graph, int(i_k), self.zone_size, rng)
+            graph, int(i_k), self.zone_size, rng,
+            avail=self.scenario.availability())
         n_active = int(mask.sum())
+        latency_s, energy_j = self._price(graph, i_k, idx, mask)
 
         # run the zone step against walker k's token
         base = RWSADMMState(
@@ -89,8 +98,11 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
 
         metrics = {
             "round": rnd, "walker": k, "client": int(i_k),
+            "zone": n_active,
             "train_loss": float(zone_loss),
             "comm_bytes": self.comm_bytes_per_round(n_active),
+            "latency_s": latency_s,
+            "energy_j": energy_j,
         }
         return FleetState(base=base, tokens=tuple(tokens),
                           kappa=base.server.kappa), metrics

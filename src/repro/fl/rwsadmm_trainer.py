@@ -34,10 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import markov, rwsadmm
-from ..core.graph import DynamicGraph
 from ..core.markov import RandomWalkServer, ZoneSchedule
 from ..core.rwsadmm import ClientState, RWSADMMHparams, ServerState
 from ..kernels.rwsadmm_update import ops as fused_ops
+from ..scenarios import ScenarioConfig, build_scenario
 from .base import DeviceData, TrainerBase, sample_batch
 
 SCAN_ENGINES = ("scan", "scan_fused")      # compiled lax.scan drivers
@@ -72,6 +72,7 @@ class RWSADMMTrainer(TrainerBase):
         inner_lr: float = 0.05,
         dp_clip: float | None = None,     # l2 clip on uploaded Δc (DP)
         dp_noise: float = 1.0,            # Gaussian noise multiplier σ
+        scenario: ScenarioConfig | str | None = None,
         seed: int = 0,
     ):
         super().__init__(model, data, batch_size)
@@ -83,14 +84,44 @@ class RWSADMMTrainer(TrainerBase):
         self.inner_lr = float(inner_lr)
         self.zone_size = int(min(zone_size, self.n_clients))
         self.warm_init = warm_init
-        self.dyn_graph = DynamicGraph(
-            self.n_clients, min_degree=min_degree,
-            regen_every=regen_every, seed=seed,
-        )
-        self.walker = RandomWalkServer(transition=transition, seed=seed + 1)
-        self.walker.reset(self.dyn_graph.current())
+        self._seed = int(seed)
+        self._min_degree = int(min_degree)
+        self._regen_every = int(regen_every)
+        self._transition = transition
+        # The environment: mobility + links + churn behind the old
+        # DynamicGraph contract. scenario=None builds "static_regen"
+        # from the legacy min_degree/regen_every knobs — bit-for-bit
+        # the seed behavior. A named or explicit ScenarioConfig is
+        # authoritative: its own mobility knobs override those kwargs.
+        self.attach_scenario(scenario, seed=seed)
         self._round_fn = jax.jit(functools.partial(self._round_impl))
         self._chunk_fns: dict = {}   # engine -> jitted lax.scan driver
+
+    def attach_scenario(self, spec, seed: int | None = None) -> None:
+        """(Re)build the environment and reset the walker onto it.
+
+        ``seed`` (when given) becomes the trainer's RNG seed so every
+        derived stream — scenario layers, walker, fleet walkers —
+        reseeds consistently.
+        """
+        seed = self._seed if seed is None else seed
+        self._seed = seed
+        self.scenario = build_scenario(
+            spec, self.n_clients, seed=seed,
+            min_degree=self._min_degree, regen_every=self._regen_every,
+        )
+        self.dyn_graph = self.scenario   # DynamicGraph-compatible facade
+        self.walker = RandomWalkServer(transition=self._transition,
+                                       seed=seed + 1)
+        self.walker.reset(self.dyn_graph.current())
+
+    def _price(self, graph, i_k, idx, mask):
+        return self.scenario.price_round(graph, int(i_k), idx, mask,
+                                         self.params_bytes())
+
+    def _price_schedule(self, graphs, clients, idx, mask):
+        return self.scenario.price_schedule(graphs, clients, idx, mask,
+                                            self.params_bytes())
 
     # ------------------------------------------------------------------
     def init_state(self, key) -> RWSADMMState:
@@ -224,9 +255,11 @@ class RWSADMMTrainer(TrainerBase):
         graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()
         i_k = self.walker.step(graph) if rnd > 0 else self.walker.position
         idx, mask, n_i = markov.plan_zone_round(
-            graph, int(i_k), self.zone_size, rng
+            graph, int(i_k), self.zone_size, rng,
+            avail=self.scenario.availability(),
         )
         n_active = int(mask.sum())
+        latency_s, energy_j = self._price(graph, i_k, idx, mask)
 
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
         state, zone_loss = self._round_fn(
@@ -241,6 +274,8 @@ class RWSADMMTrainer(TrainerBase):
             "train_loss": float(zone_loss),
             "kappa": float(state.server.kappa),
             "comm_bytes": self.comm_bytes_per_round(n_active),
+            "latency_s": latency_s,
+            "energy_j": energy_j,
         }
         return state, metrics
 
@@ -255,7 +290,7 @@ class RWSADMMTrainer(TrainerBase):
         """
         return markov.zone_schedule(
             self.dyn_graph, self.walker, rounds, self.zone_size, rng,
-            start_round=start_round,
+            start_round=start_round, price=self._price_schedule,
         )
 
     def run_chunk(self, state: RWSADMMState, sched: ZoneSchedule,

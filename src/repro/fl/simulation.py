@@ -12,6 +12,15 @@ Two execution engines:
   arrays with a single device→host sync per window. Same trajectories as
   eager (the schedule replays the eager driver's RNG draws), minus the
   per-round dispatch overhead that dominates wall-clock for small models.
+
+Both engines emit ``round_metrics`` under one schema: every entry has at
+least ``round`` and ``comm_bytes``, plus whatever the trainer adds
+(``train_loss``, ``kappa``, wireless ``latency_s``/``energy_j`` from the
+scenario subsystem, …) — key sets are identical between engines for the
+same trainer (asserted in ``tests/test_scan_driver.py``).
+
+``scenario=`` overrides the trainer's environment (a name from the
+``scenarios`` registry or a ``ScenarioConfig``) before the run starts.
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ class SimulationResult:
     final: dict                     # last eval snapshot
     total_comm_bytes: int
     wall_time_s: float
+    total_latency_s: float = 0.0    # wireless cost totals (0 when the
+    total_energy_j: float = 0.0     # trainer prices no scenario comm)
 
     def curve(self, key: str = "acc") -> tuple[np.ndarray, np.ndarray]:
         rounds = np.array([h["round"] for h in self.history])
@@ -62,6 +73,10 @@ def _result(trainer, history, round_metrics, total_comm,
         final=history[-1] if history else {},
         total_comm_bytes=total_comm,
         wall_time_s=wall,
+        total_latency_s=float(sum(m.get("latency_s", 0.0)
+                                  for m in round_metrics)),
+        total_energy_j=float(sum(m.get("energy_j", 0.0)
+                                 for m in round_metrics)),
     )
 
 
@@ -73,7 +88,10 @@ def run_simulation(
     seed: int = 0,
     verbose: bool = False,
     engine: str = "eager",
+    scenario=None,
 ) -> SimulationResult:
+    if scenario is not None:
+        trainer.attach_scenario(scenario, seed=seed)
     if engine != "eager":
         return _run_simulation_scan(
             trainer, rounds=rounds, eval_every=eval_every, seed=seed,
@@ -87,7 +105,12 @@ def run_simulation(
     t0 = time.perf_counter()
     for r in range(rounds):
         state, metrics = trainer.round(state, r, rng)
-        total_comm += int(metrics.get("comm_bytes", 0))
+        # Normalize the schema: every engine's entries carry "round" and
+        # "comm_bytes" even if a trainer forgets them.
+        metrics = dict(metrics)
+        metrics.setdefault("round", r)
+        metrics.setdefault("comm_bytes", 0)
+        total_comm += int(metrics["comm_bytes"])
         round_metrics.append(metrics)
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             _snapshot(trainer, state, r + 1, total_comm, history, verbose,
@@ -129,7 +152,7 @@ def _run_simulation_scan(
             n_active = int(sched.active[j])
             comm = trainer.comm_bytes_per_round(n_active)
             total_comm += comm
-            round_metrics.append({
+            entry = {
                 "round": r + j,
                 "client": int(sched.clients[j]),
                 "zone": n_active,
@@ -137,7 +160,11 @@ def _run_simulation_scan(
                 "train_loss": float(losses[j]),
                 "kappa": float(kappas[j]),
                 "comm_bytes": comm,
-            })
+            }
+            if sched.latency_s is not None:
+                entry["latency_s"] = float(sched.latency_s[j])
+                entry["energy_j"] = float(sched.energy_j[j])
+            round_metrics.append(entry)
         r = r_next
         if r % eval_every == 0 or r == rounds:
             _snapshot(trainer, state, r, total_comm, history, verbose,

@@ -1,0 +1,50 @@
+"""Scenario subsystem: mobility models, wireless links, client churn.
+
+Composable, config-driven environments for the mobile-server random
+walk — all host-side control plane that compiles into the fixed-shape
+``ZoneSchedule`` arrays, keeping the ``engine="scan"``/``"scan_fused"``
+hot path scenario-agnostic. See ``docs/scenarios.md``.
+"""
+from .churn import ChurnModel
+from .config import (
+    ChurnConfig,
+    CommConfig,
+    LinkConfig,
+    MobilityConfig,
+    ScenarioConfig,
+    available_scenarios,
+    get_scenario_config,
+    register_scenario,
+)
+from .links import CommModel, LinkModel
+from .mobility import (
+    GaussMarkovMobility,
+    MobilityModel,
+    RandomWaypointMobility,
+    StaticRegenMobility,
+    build_mobility,
+    range_graph,
+)
+from .scenario import Scenario, build_scenario
+
+__all__ = [
+    "ChurnConfig",
+    "ChurnModel",
+    "CommConfig",
+    "CommModel",
+    "GaussMarkovMobility",
+    "LinkConfig",
+    "LinkModel",
+    "MobilityConfig",
+    "MobilityModel",
+    "RandomWaypointMobility",
+    "Scenario",
+    "ScenarioConfig",
+    "StaticRegenMobility",
+    "available_scenarios",
+    "build_mobility",
+    "build_scenario",
+    "get_scenario_config",
+    "range_graph",
+    "register_scenario",
+]

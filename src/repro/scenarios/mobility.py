@@ -1,0 +1,195 @@
+"""Mobility models: client positions → per-round connectivity graphs.
+
+All models run host-side (control plane) and share one contract:
+
+    reset(rng) -> ClientGraph     # round-0 graph
+    step(rng)  -> ClientGraph     # advance one round
+
+Connectivity for the smooth models derives from a radio range — an edge
+(i, j) exists iff ‖p_i − p_j‖ ≤ radio_range — then a ``min_degree``
+nearest-neighbor floor and a deterministic connected-components patch
+keep the walk chain irreducible (Assumption 3.1), matching the paper's
+"at least 5 neighboring nodes" App. D.2 construction.
+
+``static_regen`` reproduces the seed repo's ``DynamicGraph`` draw
+sequence bit-for-bit: i.i.d. ``random_geometric_graph`` redraws every
+``regen_every`` rounds and *no* RNG consumption in between.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import numpy as np
+
+from ..core.graph import (
+    ClientGraph,
+    pairwise_sq_dists,
+    patch_connected,
+    random_geometric_graph,
+    seed_sq_dist_cache,
+)
+from .config import MobilityConfig
+
+
+class MobilityModel(Protocol):
+    def reset(self, rng: np.random.Generator) -> ClientGraph: ...
+
+    def step(self, rng: np.random.Generator) -> ClientGraph: ...
+
+
+def range_graph(pos: np.ndarray, radio_range: float,
+                min_degree: int) -> ClientGraph:
+    """Geometric connectivity: radio-range disk graph with a min-degree
+    patch (nodes below the degree floor get their nearest neighbors
+    linked in), patched connected. Deterministic given positions; runs
+    every round for the smooth mobility models, so the k-NN work is
+    restricted to the deficient rows only.
+    """
+    n = pos.shape[0]
+    d2 = pairwise_sq_dists(pos)
+    adj = d2 <= radio_range * radio_range
+    np.fill_diagonal(adj, False)
+    k = min(min_degree, n - 1)
+    deficient = np.flatnonzero(adj.sum(axis=1) < k)
+    if len(deficient) and k > 0:
+        nearest = np.argpartition(d2[deficient], k - 1, axis=1)[:, :k]
+        adj[deficient[:, None], nearest] = True
+        adj[nearest, deficient[:, None]] = True
+    adj = patch_connected(adj, d2)
+    graph = ClientGraph(adjacency=adj, positions=pos)
+    seed_sq_dist_cache(graph, d2)
+    return graph
+
+
+class StaticRegenMobility:
+    """The seed behavior: positions redrawn i.i.d. every ``regen_every``
+    rounds (``core.graph.DynamicGraph``), static in between."""
+
+    def __init__(self, n: int, cfg: MobilityConfig):
+        self.n = n
+        self.cfg = cfg
+        self.regen_every = max(1, cfg.regen_every)
+        self._round = 0
+        self.n_regens = 0
+        self.graph: ClientGraph | None = None
+
+    def reset(self, rng: np.random.Generator) -> ClientGraph:
+        self._round = 0
+        self.n_regens = 0
+        self.graph = random_geometric_graph(self.n, self.cfg.min_degree, rng)
+        return self.graph
+
+    def step(self, rng: np.random.Generator) -> ClientGraph:
+        self._round += 1
+        if self._round % self.regen_every == 0:
+            self.graph = random_geometric_graph(
+                self.n, self.cfg.min_degree, rng
+            )
+            self.n_regens += 1
+        return self.graph
+
+
+class RandomWaypointMobility:
+    """Random waypoint: each client walks toward a uniform waypoint at a
+    per-leg speed ∈ [speed_min, speed_max], pauses ``pause_rounds`` on
+    arrival, then draws the next leg. The classic ad-hoc-network model
+    (Johnson & Maltz); positions move ≤ speed_max per round, so graphs
+    evolve smoothly instead of redrawing."""
+
+    def __init__(self, n: int, cfg: MobilityConfig):
+        self.n = n
+        self.cfg = cfg
+
+    def reset(self, rng: np.random.Generator) -> ClientGraph:
+        self.pos = rng.uniform(0.0, 1.0, size=(self.n, 2))
+        self.waypoint = rng.uniform(0.0, 1.0, size=(self.n, 2))
+        self.speed = rng.uniform(self.cfg.speed_min, self.cfg.speed_max,
+                                 size=self.n)
+        self.pause = np.zeros(self.n, dtype=np.int64)
+        return self._graph()
+
+    def step(self, rng: np.random.Generator) -> ClientGraph:
+        delta = self.waypoint - self.pos
+        dist = np.linalg.norm(delta, axis=1)
+        moving = (self.pause == 0) & (dist > 1e-12)
+        frac = np.where(dist > 1e-12,
+                        np.minimum(1.0, self.speed / np.maximum(dist, 1e-12)),
+                        0.0)
+        self.pos = self.pos + (moving * frac)[:, None] * delta
+        arrived = moving & (frac >= 1.0)
+        self.pause = np.maximum(self.pause - 1, 0)
+        self.pause[arrived] = self.cfg.pause_rounds
+        # Draw the next leg for every arrival (boolean indexing consumes
+        # the RNG in client order, so replays are deterministic).
+        if arrived.any():
+            k = int(arrived.sum())
+            self.waypoint[arrived] = rng.uniform(0.0, 1.0, size=(k, 2))
+            self.speed[arrived] = rng.uniform(
+                self.cfg.speed_min, self.cfg.speed_max, size=k)
+        return self._graph()
+
+    def _graph(self) -> ClientGraph:
+        return range_graph(self.pos, self.cfg.radio_range,
+                           self.cfg.min_degree)
+
+
+class GaussMarkovMobility:
+    """Gauss-Markov: temporally correlated velocities,
+
+        v_{t+1} = α v_t + (1 − α) v̄_i + σ √(1 − α²) w_t,
+
+    with per-client mean velocities v̄_i (magnitude ``mean_speed``,
+    uniform heading) and boundary reflection. α → 1 gives straight-line
+    motion, α → 0 memoryless Brownian drift (Camp et al. survey §2.5)."""
+
+    def __init__(self, n: int, cfg: MobilityConfig):
+        self.n = n
+        self.cfg = cfg
+
+    def reset(self, rng: np.random.Generator) -> ClientGraph:
+        self.pos = rng.uniform(0.0, 1.0, size=(self.n, 2))
+        heading = rng.uniform(0.0, 2 * np.pi, size=self.n)
+        self.mean_v = self.cfg.mean_speed * np.stack(
+            [np.cos(heading), np.sin(heading)], axis=1)
+        self.vel = self.mean_v.copy()
+        return self._graph()
+
+    def step(self, rng: np.random.Generator) -> ClientGraph:
+        a, s = self.cfg.alpha, self.cfg.sigma_speed
+        noise = rng.normal(size=(self.n, 2))
+        self.vel = (a * self.vel + (1.0 - a) * self.mean_v
+                    + s * np.sqrt(max(1.0 - a * a, 0.0)) * noise)
+        self.pos = self.pos + self.vel
+        # Reflect at the unit-square boundary (flip offending velocity
+        # components; mean heading reflects too so clients don't fight
+        # the wall forever).
+        for lo, hi in ((0.0, 1.0),):
+            under, over = self.pos < lo, self.pos > hi
+            self.pos = np.where(under, 2 * lo - self.pos, self.pos)
+            self.pos = np.where(over, 2 * hi - self.pos, self.pos)
+            flip = under | over
+            self.vel = np.where(flip, -self.vel, self.vel)
+            self.mean_v = np.where(flip, -self.mean_v, self.mean_v)
+        self.pos = np.clip(self.pos, 0.0, 1.0)
+        return self._graph()
+
+    def _graph(self) -> ClientGraph:
+        return range_graph(self.pos, self.cfg.radio_range,
+                           self.cfg.min_degree)
+
+
+_MODELS = {
+    "static_regen": StaticRegenMobility,
+    "random_waypoint": RandomWaypointMobility,
+    "gauss_markov": GaussMarkovMobility,
+}
+
+
+def build_mobility(n: int, cfg: MobilityConfig) -> MobilityModel:
+    try:
+        cls = _MODELS[cfg.model]
+    except KeyError:
+        raise ValueError(
+            f"unknown mobility model {cfg.model!r}; "
+            f"known: {sorted(_MODELS)}") from None
+    return cls(n, cfg)

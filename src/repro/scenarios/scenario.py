@@ -1,0 +1,155 @@
+"""Scenario: mobility + links + churn behind the DynamicGraph contract.
+
+A ``Scenario`` is a drop-in replacement for ``core.graph.DynamicGraph``
+(``current()`` / ``step()`` / ``schedule()``), so the random walker, the
+eager driver, and the compiled-schedule driver all work unchanged. Per
+round it:
+
+  1. advances the mobility model (positions → base connectivity),
+  2. applies stochastic link dropouts (link layer) to the adjacency,
+  3. advances the churn model (availability mask for zone planning),
+
+and offers deterministic comm pricing (latency/energy) for whatever
+zone the planner forms. Everything is host-side control plane; the
+fixed-shape ``ZoneSchedule`` arrays it compiles into are all the device
+ever sees, so ``engine="scan"``/``"scan_fused"`` keep the fused hot
+path under every scenario.
+
+Three independent RNG streams (mobility / links / churn) are derived
+from the seed, so toggling one layer never perturbs another layer's
+draw sequence. With the default ``static_regen`` config (links and
+churn off) the mobility stream consumes exactly like ``DynamicGraph``'s
+single RNG — bit-for-bit identical trajectories.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.graph import ClientGraph
+from .churn import ChurnModel
+from .config import ScenarioConfig, get_scenario_config
+from .links import CommModel, LinkModel
+from .mobility import build_mobility
+
+
+class Scenario:
+    def __init__(self, n: int, cfg: ScenarioConfig | str, seed: int = 0):
+        if isinstance(cfg, str):
+            cfg = get_scenario_config(cfg)
+        self.n = n
+        self.cfg = cfg
+        self.mobility = build_mobility(n, cfg.mobility)
+        # Stream 0 mirrors DynamicGraph(seed) exactly (static_regen
+        # bit-compat); links/churn get independent streams.
+        self._rng_mob = np.random.default_rng(seed)
+        self._rng_link = np.random.default_rng(
+            np.random.SeedSequence([max(seed, 0), 1]))
+        self._rng_churn = np.random.default_rng(
+            np.random.SeedSequence([max(seed, 0), 2]))
+        self.link = LinkModel(cfg.links) if cfg.links.enabled else None
+        self.churn = ChurnModel(n, cfg.churn) if cfg.churn.enabled else None
+        self.comm = CommModel(cfg.comm, self.link)
+        self._round = 0
+        self._base = self.mobility.reset(self._rng_mob)
+        self.graph = self._effective(self._base)
+        self.avail = (self.churn.reset(self._rng_churn)
+                      if self.churn is not None else None)
+        self._avail_trace: np.ndarray | None = None
+
+    # -- DynamicGraph contract -------------------------------------------
+    @property
+    def n_regens(self) -> int:
+        return getattr(self.mobility, "n_regens", 0)
+
+    def current(self) -> ClientGraph:
+        return self.graph
+
+    def step(self) -> ClientGraph:
+        """Advance one round: mobility, link dropouts, churn."""
+        self._round += 1
+        self._base = self.mobility.step(self._rng_mob)
+        self.graph = self._effective(self._base)
+        if self.churn is not None:
+            self.avail = self.churn.step(self._round, self._rng_churn)
+        return self.graph
+
+    def schedule(self, rounds: int,
+                 *, include_current: bool = False) -> list[ClientGraph]:
+        """Batch variant of :meth:`step` (same contract as
+        ``DynamicGraph.schedule``). Also records the per-round
+        availability masks for the same window; ``pop_avail_trace()``
+        hands them to ``markov.zone_schedule`` aligned with the graphs.
+        """
+        graphs: list[ClientGraph] = []
+        avails: list[np.ndarray] = []
+        if include_current:
+            graphs.append(self.current())
+            avails.append(self.avail)
+        while len(graphs) < rounds:
+            graphs.append(self.step())
+            avails.append(self.avail)
+        self._avail_trace = (np.stack(avails)
+                             if self.churn is not None else None)
+        return graphs
+
+    def pop_avail_trace(self) -> np.ndarray | None:
+        """(R, n) availability masks aligned with the last
+        :meth:`schedule` call (None when churn is disabled — the
+        planner then consumes RNG exactly like the pre-scenario path)."""
+        trace, self._avail_trace = self._avail_trace, None
+        return trace
+
+    # -- layers -----------------------------------------------------------
+    def _effective(self, base: ClientGraph) -> ClientGraph:
+        """Link-layer view of the mobility graph. Without a link model
+        this is ``base`` itself (same object — the walker's per-graph
+        transition-matrix cache keeps hitting between regens)."""
+        if self.link is None:
+            return base
+        return self.link.apply_dropouts(base, self._rng_link)
+
+    def availability(self) -> np.ndarray | None:
+        """(n,) bool mask for the current round, or None (all on)."""
+        return self.avail
+
+    def price_round(self, graph: ClientGraph, i_k: int, idx: np.ndarray,
+                    mask: np.ndarray, payload_bytes: int
+                    ) -> tuple[float, float]:
+        """(latency_s, energy_j) for one zone round — deterministic, so
+        eager rounds and precomputed schedules price identically."""
+        return self.comm.price_round(graph, i_k, idx, mask, payload_bytes)
+
+    def price_schedule(self, graphs, clients, idx, mask,
+                       payload_bytes: int):
+        """Vectorized pricing of a whole precomputed schedule window
+        (one pass — same math as R ``price_round`` calls)."""
+        return self.comm.price_schedule(graphs, clients, idx, mask,
+                                        payload_bytes)
+
+    def price_star_round(self, members: np.ndarray, payload_bytes: int
+                         ) -> tuple[float, float]:
+        """Baseline (base-station) pricing against current positions."""
+        return self.comm.price_star_round(
+            self.graph.positions, members, payload_bytes)
+
+
+def build_scenario(spec: ScenarioConfig | str | None, n: int,
+                   seed: int = 0, *, min_degree: int = 5,
+                   regen_every: int = 10) -> Scenario:
+    """Resolve a scenario spec (name, config, or None) into a Scenario.
+
+    ``None`` builds the default ``static_regen`` from the caller's
+    legacy graph knobs (min_degree/regen_every) — the exact seed-repo
+    ``DynamicGraph`` behavior. A named or explicit config is
+    authoritative: its own mobility knobs win over the legacy kwargs.
+    """
+    if spec is None:
+        import dataclasses
+
+        base = get_scenario_config("static_regen")
+        spec = dataclasses.replace(
+            base, mobility=dataclasses.replace(
+                base.mobility, min_degree=min_degree,
+                regen_every=regen_every),
+        )
+    return Scenario(n, spec, seed=seed)

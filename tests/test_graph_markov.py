@@ -43,6 +43,45 @@ def test_degree_transition_matrix_row_stochastic():
     assert (p >= 0).all()
 
 
+def test_is_connected_dense_no_overflow():
+    """A node whose seen-neighbor count hits a multiple of 256 must not
+    wrap the BFS matvec accumulator (dense radio-range graphs at large
+    n reach such degrees)."""
+    n = 258
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(256):                      # ring of 256
+        adj[i, (i + 1) % 256] = adj[(i + 1) % 256, i] = True
+    adj[257, :256] = adj[:256, 257] = True    # linked to exactly 256
+    adj[256, 0] = adj[0, 256] = True
+    g = G.ClientGraph(adjacency=adj, positions=np.zeros((n, 2)))
+    assert g.is_connected()
+
+
+def test_metropolis_vectorized_matches_loop():
+    """Pin the vectorized Metropolis-Hastings construction against the
+    literal double-loop form (P_ij = min(1/deg i, 1/deg j), self-loop
+    absorbs the remainder)."""
+    for seed in range(4):
+        g = G.random_geometric_graph(17, min_degree=4,
+                                     rng=np.random.default_rng(seed))
+        adj = g.adjacency.astype(np.float64)
+        deg = adj.sum(axis=1)
+        ref = np.zeros((g.n, g.n))
+        for i in range(g.n):
+            for j in np.flatnonzero(adj[i]):
+                ref[i, j] = min(1.0 / deg[i], 1.0 / deg[j])
+            ref[i, i] = 1.0 - ref[i].sum()
+        np.testing.assert_allclose(M.metropolis_transition_matrix(g), ref,
+                                   atol=1e-15)
+    # isolated node: self-loop of 1 (loop form's convention)
+    adj = np.zeros((3, 3), dtype=bool)
+    adj[0, 1] = adj[1, 0] = True
+    iso = G.ClientGraph(adjacency=adj, positions=np.zeros((3, 2)))
+    p = M.metropolis_transition_matrix(iso)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0)
+    assert p[2, 2] == 1.0
+
+
 def test_metropolis_uniform_stationary():
     g = G.random_geometric_graph(12, min_degree=4,
                                  rng=np.random.default_rng(3))

@@ -34,11 +34,12 @@ def fed():
     return data, model
 
 
-def make_trainer(fed, solver):
+def make_trainer(fed, solver, scenario=None):
     data, model = fed
     return RWSADMMTrainer(
         model, data, RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
-        zone_size=4, batch_size=20, regen_every=10, solver=solver, seed=0,
+        zone_size=4, batch_size=20, regen_every=10, solver=solver,
+        scenario=scenario, seed=0,
     )
 
 
@@ -173,6 +174,75 @@ def test_scan_fused_rejects_prox_sgd(fed):
     sched = tr.schedule(2, np.random.default_rng(0))
     with pytest.raises(ValueError, match="closed_form"):
         tr.run_chunk(state, sched, engine="scan_fused")
+
+
+# ------------------------------------------- scenario equivalence -------
+# All three mobility models, link dropouts on/off, churn on/off: the
+# compiled scan driver must replay the eager trajectory under every
+# scenario (the whole environment is host-side control plane).
+SCENARIOS = [
+    "random_waypoint",            # smooth mobility, links off, churn off
+    "gauss_markov",               # smooth mobility (correlated velocities)
+    "lossy_links",                # link dropouts ON
+    "duty_cycle",                 # churn ON
+    "field_trial",                # dropouts + churn together
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_scan_driver_equals_eager_under_scenario(fed, scenario):
+    st_e, losses_e = run_eager(
+        make_trainer(fed, "closed_form", scenario), rounds=13)
+    st_s, losses_s = run_scan(
+        make_trainer(fed, "closed_form", scenario), "scan", chunks=(6, 7))
+    assert_trees_close(st_e.clients.x, st_s.clients.x, atol=1e-6)
+    assert_trees_close(st_e.server.y, st_s.server.y, atol=1e-6)
+    np.testing.assert_allclose(losses_e, losses_s, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st_e.visited),
+                                  np.asarray(st_s.visited))
+
+
+def test_static_regen_scenario_is_trajectory_identical(fed):
+    """Acceptance bar: scenario='static_regen' is bit-for-bit identical
+    to the legacy DynamicGraph path (scenario=None), both engines."""
+    st_none, losses_none = run_eager(make_trainer(fed, "closed_form", None),
+                                     rounds=15)
+    st_name, losses_name = run_eager(
+        make_trainer(fed, "closed_form", "static_regen"), rounds=15)
+    np.testing.assert_array_equal(losses_none, losses_name)
+    assert_trees_close(st_none.clients.x, st_name.clients.x)
+    assert_trees_close(st_none.server.y, st_name.server.y)
+    st_scan, losses_scan = run_scan(
+        make_trainer(fed, "closed_form", "static_regen"), "scan",
+        chunks=(10, 5))
+    np.testing.assert_allclose(losses_none, losses_scan, atol=1e-5)
+    assert_trees_close(st_none.server.y, st_scan.server.y, atol=1e-6)
+
+
+def test_round_metrics_schema_parity(fed):
+    """Both engines emit the same round_metrics schema: identical key
+    sets per entry, aligned 'round' values, identical wireless costs."""
+    data, model = fed
+
+    def mk():
+        return RWSADMMTrainer(
+            model, data, RWSADMMHparams(beta=1.0), zone_size=4,
+            batch_size=20, regen_every=10, scenario="lossy_links", seed=0)
+
+    res_e = run_simulation(mk(), rounds=12, eval_every=6, seed=0)
+    res_s = run_simulation(mk(), rounds=12, eval_every=6, seed=0,
+                           engine="scan")
+    assert len(res_e.round_metrics) == len(res_s.round_metrics) == 12
+    for me, ms in zip(res_e.round_metrics, res_s.round_metrics):
+        assert set(me) == set(ms), (sorted(me), sorted(ms))
+        assert me["round"] == ms["round"]
+        assert me["client"] == ms["client"]
+        assert me["zone"] == ms["zone"]
+        assert me["comm_bytes"] == ms["comm_bytes"]
+        assert me["latency_s"] == ms["latency_s"]   # one pricing path
+        assert me["energy_j"] == ms["energy_j"]
+    assert res_e.total_latency_s == res_s.total_latency_s
+    assert res_e.total_energy_j == res_s.total_energy_j
 
 
 def test_run_simulation_engines_agree(fed):

@@ -1,0 +1,273 @@
+"""Scenario subsystem: mobility models, wireless link layer, churn,
+comm pricing, registry, and trainer wiring (src/repro/scenarios/)."""
+import numpy as np
+import pytest
+
+from repro.core.graph import DynamicGraph
+from repro.scenarios import (
+    ChurnConfig,
+    LinkConfig,
+    MobilityConfig,
+    Scenario,
+    ScenarioConfig,
+    available_scenarios,
+    build_scenario,
+    get_scenario_config,
+    range_graph,
+    register_scenario,
+)
+from repro.scenarios.churn import ChurnModel
+from repro.scenarios.links import LinkModel
+from repro.scenarios.mobility import build_mobility
+
+N = 20
+ROUNDS = 25
+
+
+# ----------------------------------------------------------- mobility ---
+def test_static_regen_bit_identical_to_dynamic_graph():
+    """Acceptance bar: scenario='static_regen' replays DynamicGraph's
+    draw sequence exactly (graphs, positions, regen epochs)."""
+    scn = build_scenario(None, 15, seed=3, min_degree=4, regen_every=5)
+    dg = DynamicGraph(15, min_degree=4, regen_every=5, seed=3)
+    gs = scn.schedule(22, include_current=True)
+    gd = dg.schedule(22, include_current=True)
+    for a, b in zip(gs, gd):
+        np.testing.assert_array_equal(a.adjacency, b.adjacency)
+        np.testing.assert_array_equal(a.positions, b.positions)
+    assert scn.n_regens == dg.n_regens == 4
+
+
+@pytest.mark.parametrize("model", ["random_waypoint", "gauss_markov"])
+def test_smooth_mobility_bounded_and_connected(model):
+    cfg = MobilityConfig(model=model)
+    mob = build_mobility(N, cfg)
+    rng = np.random.default_rng(0)
+    g = mob.reset(rng)
+    prev = g.positions.copy()
+    # generous bound: waypoint ≤ speed_max, gauss-markov ≈ |v| + 3σ
+    step_bound = max(cfg.speed_max,
+                     cfg.mean_speed + 4 * cfg.sigma_speed) + 1e-9
+    for _ in range(ROUNDS):
+        g = mob.step(rng)
+        assert (g.positions >= 0).all() and (g.positions <= 1).all()
+        moved = np.linalg.norm(g.positions - prev, axis=1)
+        assert moved.max() <= 2 * step_bound   # 2x: boundary reflection
+        assert g.is_connected()
+        assert (g.degree() >= min(cfg.min_degree, N - 1)).all()
+        prev = g.positions.copy()
+
+
+def test_random_waypoint_moves_toward_waypoint():
+    mob = build_mobility(5, MobilityConfig(model="random_waypoint",
+                                           speed_min=0.05, speed_max=0.05))
+    rng = np.random.default_rng(1)
+    mob.reset(rng)
+    before = np.linalg.norm(mob.waypoint - mob.pos, axis=1)
+    mob.step(rng)
+    after = np.linalg.norm(mob.waypoint - mob.pos, axis=1)
+    # distance shrinks for clients that haven't redrawn their waypoint
+    same = before > 0.05
+    assert (after[same] < before[same] + 1e-12).all()
+
+
+def test_range_graph_properties():
+    rng = np.random.default_rng(2)
+    pos = rng.uniform(size=(N, 2))
+    g = range_graph(pos, 0.3, 5)
+    assert g.is_connected()
+    assert (g.degree() >= 5).all()
+    # all in-range pairs are linked
+    d = np.linalg.norm(pos[:, None] - pos[None], axis=2)
+    in_range = (d <= 0.3) & ~np.eye(N, dtype=bool)
+    assert (g.adjacency[in_range]).all()
+
+
+def test_unknown_mobility_model_raises():
+    with pytest.raises(ValueError, match="unknown mobility"):
+        build_mobility(5, MobilityConfig(model="teleport"))
+
+
+# ---------------------------------------------------------- link layer ---
+def test_link_success_probability_monotone_and_bounded():
+    lm = LinkModel(LinkConfig(enabled=True))
+    d = np.linspace(0.0, 2.0, 300)
+    p = lm.success_probability(d)
+    assert (p >= lm.cfg.min_success - 1e-12).all() and (p <= 1.0).all()
+    assert (np.diff(p) <= 1e-12).all()          # decreasing in distance
+
+
+def test_link_power_form_matches_logistic_margin():
+    """success_probability_sq's algebraic form == the documented
+    logistic-of-margin formula."""
+    c = LinkConfig(enabled=True)
+    lm = LinkModel(c)
+    d = np.linspace(0.001, 1.5, 100)
+    pl = c.ref_loss_db + 10 * c.path_loss_exp * np.log10(
+        np.maximum(d, c.ref_distance) / c.ref_distance)
+    margin = c.tx_power_dbm - c.sensitivity_dbm - pl
+    ref = np.clip(1 / (1 + np.exp(-margin / c.shadowing_db)),
+                  c.min_success, 1.0)
+    np.testing.assert_allclose(lm.success_probability(d), ref, rtol=1e-10)
+
+
+def test_link_dropouts_subset_and_connected():
+    scn = Scenario(N, "lossy_links", seed=0)
+    base_extra = 0
+    for _ in range(20):
+        g = scn.step()
+        base = scn._base
+        # dropped graph ⊆ base graph ∪ connectivity patch
+        extra = g.adjacency & ~base.adjacency
+        base_extra += int(extra.sum())
+        assert g.is_connected()
+        assert (g.positions == base.positions).all()
+    # patching may add a few edges, but dropouts dominate
+    assert base_extra < 20 * N
+
+
+def test_link_matrix_zero_off_edges():
+    scn = Scenario(N, "lossy_links", seed=1)
+    g = scn.current()
+    p = scn.link.link_matrix(g)
+    assert (p[~g.adjacency] == 0).all()
+    assert (p[g.adjacency] > 0).all()
+    np.testing.assert_allclose(p, p.T)
+
+
+# --------------------------------------------------------------- churn ---
+def test_churn_duty_cycle_fraction():
+    cfg = ChurnConfig(enabled=True, duty_cycle=0.6, period=10)
+    cm = ChurnModel(500, cfg)
+    rng = np.random.default_rng(0)
+    avail = cm.reset(rng)
+    fracs = [avail.mean()]
+    for r in range(1, 40):
+        fracs.append(cm.step(r, rng).mean())
+    # phases are uniform, so ~duty_cycle of clients are awake each round
+    assert abs(np.mean(fracs) - 0.6) < 0.05
+
+
+def test_churn_stragglers_miss_rounds():
+    cfg = ChurnConfig(enabled=True, duty_cycle=1.0, period=10,
+                      straggler_frac=0.5, straggler_p=1.0)
+    cm = ChurnModel(100, cfg)
+    rng = np.random.default_rng(0)
+    avail = cm.reset(rng)
+    assert cm.stragglers.sum() == 50
+    assert (~avail[cm.stragglers]).all()       # p=1: all miss
+    assert avail[~cm.stragglers].all()
+
+
+def test_zone_planning_respects_availability():
+    from repro.core import markov
+
+    scn = Scenario(N, "duty_cycle", seed=0)
+    rng = np.random.default_rng(0)
+    g = scn.current()
+    avail = scn.availability()
+    offline = np.flatnonzero(~avail)
+    assert len(offline) > 0
+    i_k = int(offline[0])   # even an offline visited client participates
+    idx, mask, n_i = markov.plan_zone_round(g, i_k, 8, rng, avail=avail)
+    live = idx[mask > 0]
+    assert i_k in live
+    assert all(avail[c] or c == i_k for c in live)
+
+
+# ------------------------------------------------------------- pricing ---
+def test_price_round_matches_price_schedule():
+    scn = Scenario(N, "lossy_links", seed=0)
+    graphs = [scn.current()] + [scn.step() for _ in range(4)]
+    rng = np.random.default_rng(0)
+    from repro.core import markov
+
+    clients = np.asarray([1, 4, 7, 2, 9])
+    idx = np.zeros((5, 6), np.int32)
+    mask = np.zeros((5, 6), np.float32)
+    for k in range(5):
+        idx[k], mask[k], _ = markov.plan_zone_round(
+            graphs[k], int(clients[k]), 6, rng)
+    lat_b, en_b = scn.price_schedule(graphs, clients, idx, mask, 10_000)
+    for k in range(5):
+        lat, en = scn.price_round(graphs[k], int(clients[k]), idx[k],
+                                  mask[k], 10_000)
+        assert lat == lat_b[k] and en == en_b[k]   # one code path, exact
+
+
+def test_price_solo_zone_is_free():
+    scn = Scenario(N, "static_regen", seed=0)
+    g = scn.current()
+    lat, en = scn.price_round(g, 3, np.asarray([3], np.int32),
+                              np.ones(1, np.float32), 10_000)
+    assert lat == 0.0 and en == 0.0
+
+
+def test_price_scales_with_payload_and_links():
+    lossless = Scenario(N, "static_regen", seed=0)
+    lossy = Scenario(N, "lossy_links", seed=0)
+    g = lossless.current()
+    idx = np.asarray([3, 5, 8, 11], np.int32)
+    mask = np.ones(4, np.float32)
+    l1, e1 = lossless.price_round(g, 3, idx, mask, 10_000)
+    l2, e2 = lossless.price_round(g, 3, idx, mask, 20_000)
+    assert l2 > l1 and e2 > e1
+    # retransmissions make lossy links strictly more expensive
+    l3, e3 = lossy.price_round(lossy.current(), 3, idx, mask, 10_000)
+    assert l3 > 0 and e3 > 0
+
+
+# ---------------------------------------------------- registry + wiring ---
+def test_registry_roundtrip():
+    names = available_scenarios()
+    assert {"static_regen", "random_waypoint", "gauss_markov",
+            "lossy_links", "duty_cycle", "field_trial"} <= set(names)
+    cfg = get_scenario_config("field_trial")
+    assert cfg.links.enabled and cfg.churn.enabled
+    custom = register_scenario(ScenarioConfig(
+        name="test_custom", links=LinkConfig(enabled=True)))
+    assert get_scenario_config("test_custom") is custom
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario_config("no_such_scenario")
+
+
+def test_scenario_layer_independence():
+    """Toggling churn must not perturb the mobility stream (separate
+    RNG streams per layer)."""
+    a = Scenario(N, "random_waypoint", seed=0)
+    b = Scenario(N, ScenarioConfig(
+        name="rwp+churn",
+        mobility=MobilityConfig(model="random_waypoint"),
+        churn=ChurnConfig(enabled=True)), seed=0)
+    for _ in range(10):
+        ga, gb = a.step(), b.step()
+        np.testing.assert_array_equal(ga.positions, gb.positions)
+        np.testing.assert_array_equal(ga.adjacency, gb.adjacency)
+
+
+def test_baseline_trainer_scenario_wiring():
+    """FedAvg-family selection is churn-aware and rounds carry wireless
+    costs when a scenario is attached."""
+    import jax
+
+    from repro.baselines import FedAvgTrainer
+    from repro.data import make_image_dataset, pathological_split
+    from repro.data.loader import build_federated
+    from repro.fl.base import to_device_data
+    from repro.models.small import get_model
+
+    imgs, labels = make_image_dataset(200, seed=0)
+    parts = pathological_split(labels, 10, seed=0)
+    data = to_device_data(build_federated(imgs, labels, parts))
+    tr = FedAvgTrainer(get_model("mlr", (28, 28, 1)), data,
+                       clients_per_round=4)
+    tr.attach_scenario("duty_cycle", seed=0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for r in range(3):
+        state, m = tr.round(state, r, rng)
+        assert "latency_s" in m and "energy_j" in m
+        assert m["latency_s"] > 0
+    sel = tr.select_clients(3, rng, 4)
+    avail = tr.scenario.availability()   # select_clients stepped churn
+    assert all(avail[c] for c in sel)
