@@ -69,42 +69,50 @@ def grid(dropout_settings=(False, True)) -> list[ScenarioConfig]:
 
 
 def measure_speedup(n_clients: int, scenario: ScenarioConfig,
-                    rounds: int, reps: int = 2) -> float:
+                    rounds: int, reps: int = 6) -> float:
     """scan vs eager rounds/sec on this scenario (after compile warmup).
 
-    Best-of-``reps`` per engine: rounds/sec on a loaded box is noisy in
-    one direction only (slowdowns), so the max is the stable estimate.
+    Noise control on a loaded box: the two engines' timing windows are
+    *interleaved* rep by rep so slow phases of the machine hit both
+    estimates alike; each estimate is best-of-``reps`` (noise is
+    one-sided — slowdowns only — so the max is the stable statistic);
+    and every scan rep runs several chunks, because a lone chunk of
+    ≲150 rounds is mostly per-chunk fixed cost (schedule-array
+    assembly, one device sync), which under-reports the scan engine.
     """
+    tr_e = make_trainer(n_clients, scenario)
+    state_e = tr_e.init_state(jax.random.PRNGKey(0))
+    rng_e = np.random.default_rng(0)
+    state_e, _ = tr_e.round(state_e, 0, rng_e)          # compile
+    jax.block_until_ready(state_e.server.y)
+
+    tr_s = make_trainer(n_clients, scenario)
+    state_s = tr_s.init_state(jax.random.PRNGKey(0))
+    rng_s = np.random.default_rng(0)
+    sched = tr_s.schedule(rounds, rng_s)                # compile
+    state_s, _ = tr_s.run_chunk(state_s, sched, engine="scan")
+    jax.block_until_ready(state_s.server.y)
+
     rates = {"eager": 0.0, "scan": 0.0}
-    for engine in ("eager", "scan"):
-        tr = make_trainer(n_clients, scenario)
-        state = tr.init_state(jax.random.PRNGKey(0))
-        rng = np.random.default_rng(0)
-        if engine == "eager":
-            state, _ = tr.round(state, 0, rng)          # compile
-            jax.block_until_ready(state.server.y)
-            r = 1
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                for _ in range(rounds):
-                    state, _ = tr.round(state, r, rng)
-                    r += 1
-                jax.block_until_ready(state.server.y)
-                rates[engine] = max(rates[engine],
-                                    rounds / (time.perf_counter() - t0))
-        else:
-            sched = tr.schedule(rounds, rng)            # compile
-            state, _ = tr.run_chunk(state, sched, engine="scan")
-            jax.block_until_ready(state.server.y)
-            r = rounds
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                sched = tr.schedule(rounds, rng, start_round=r)
-                r += rounds
-                state, stacked = tr.run_chunk(state, sched, engine="scan")
-                jax.block_until_ready(stacked["train_loss"])
-                rates[engine] = max(rates[engine],
-                                    rounds / (time.perf_counter() - t0))
+    r_e, r_s, chunks = 1, rounds, 3
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            state_e, _ = tr_e.round(state_e, r_e, rng_e)
+            r_e += 1
+        jax.block_until_ready(state_e.server.y)
+        rates["eager"] = max(rates["eager"],
+                             rounds / (time.perf_counter() - t0))
+
+        t0 = time.perf_counter()
+        for _ in range(chunks):
+            sched = tr_s.schedule(rounds, rng_s, start_round=r_s)
+            r_s += rounds
+            state_s, stacked = tr_s.run_chunk(state_s, sched,
+                                              engine="scan")
+        jax.block_until_ready(stacked["train_loss"])
+        rates["scan"] = max(rates["scan"],
+                            chunks * rounds / (time.perf_counter() - t0))
     return rates["scan"] / rates["eager"]
 
 
@@ -112,11 +120,16 @@ def run(n_clients: int = 20, rounds: int = 150, speedup_rounds: int = 200,
         smoke: bool = False, out_dir: str = "results/bench") -> list[dict]:
     os.makedirs(out_dir, exist_ok=True)
     rows = []
+    # Speedups first, accuracy after: the timing phase runs in a fresh
+    # process state instead of after the accuracy simulations have
+    # churned the heap (which was measurably inflating the noise).
+    speedups = {cfg.name: measure_speedup(n_clients, cfg, speedup_rounds)
+                for cfg in grid()}
     for cfg in grid():
         tr = make_trainer(n_clients, cfg)
         res = run_simulation(tr, rounds=rounds, eval_every=rounds,
                              seed=0, engine="scan")
-        speedup = measure_speedup(n_clients, cfg, speedup_rounds)
+        speedup = speedups[cfg.name]
         rows.append({
             "scenario": cfg.name,
             "mobility": cfg.mobility.model,
@@ -133,6 +146,22 @@ def run(n_clients: int = 20, rounds: int = 150, speedup_rounds: int = 200,
              f"latency_s={rows[-1]['latency_s']} "
              f"energy_j={rows[-1]['energy_j']} "
              f"scan_vs_eager={speedup:.1f}x")
+
+    # Dropout scenarios pay the per-round link-layer stack; the batched
+    # rollout amortizes it on the scan side while the eager driver still
+    # steps it round-by-round — so the scan-vs-eager win under dropout
+    # must be at least the pure-mobility win (the PR-3 acceptance bar).
+    # ok allows 10% measurement noise on the 3-vs-3 sample means (each
+    # a best-of-reps on a loaded box; observed run-to-run sigma ~0.06):
+    # pre-rollout the ratio sat at ~0.75–0.8 (4–5x vs 5–6x),
+    # post-rollout it hovers around 0.95–1.1, so 0.9 separates the
+    # regimes without flaking.
+    drop = np.mean([r["scan_vs_eager"] for r in rows if r["link_dropout"]])
+    pure = np.mean([r["scan_vs_eager"] for r in rows
+                    if not r["link_dropout"]])
+    emit("scenario_sweep/dropout_vs_mobility", 0.0,
+         f"dropout_speedup={drop:.2f}x mobility_speedup={pure:.2f}x "
+         f"ratio={drop / pure:.2f} ok={int(drop / pure >= 0.9)}")
 
     if not smoke:
         # Mobility-speed × link-reliability sweeps (gauss_markov): how
@@ -179,10 +208,10 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=None)
     args = ap.parse_args()
     rounds = args.rounds or (30 if args.smoke else 150)
-    # Speedup windows shorter than ~60 rounds are dominated by
+    # Speedup windows shorter than ~100 rounds are dominated by
     # per-chunk fixed costs and box noise; keep them longer than the
     # accuracy runs even in smoke mode.
-    speedup_rounds = 60 if args.smoke else 200
+    speedup_rounds = 150 if args.smoke else 300
     print("name,us_per_call,derived")
     run(n_clients=args.clients, rounds=rounds,
         speedup_rounds=speedup_rounds, smoke=args.smoke)

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import walkman
-from ..core.markov import RandomWalkServer
 from ..fl.base import DeviceData, TrainerBase, sample_batch
 
 
@@ -74,18 +73,14 @@ class WalkmanTrainer(TrainerBase):
 
     def attach_scenario(self, spec, seed: int | None = None) -> None:
         """Walkman walks the same environment as RWSADMM: the scenario
-        drives its dynamic graph (mobility + link dropouts)."""
-        from ..scenarios import build_scenario
-
+        drives its dynamic graph (mobility + link dropouts) via the
+        shared graph-walking attach path."""
         seed = self._seed if seed is None else seed
         self._seed = seed   # later re-attaches reuse the latest seed
-        self.scenario = build_scenario(
-            spec, self.n_clients, seed=seed,
-            min_degree=self._min_degree, regen_every=self._regen_every,
+        self._attach_walking_scenario(
+            spec, seed, min_degree=self._min_degree,
+            regen_every=self._regen_every,
         )
-        self.dyn_graph = self.scenario
-        self.walker = RandomWalkServer(seed=seed + 1)
-        self.walker.reset(self.dyn_graph.current())
 
     def round(self, state, rnd: int, rng: np.random.Generator):
         graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()

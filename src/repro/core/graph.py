@@ -74,26 +74,23 @@ def adjacency_connected(adj: np.ndarray) -> bool:
         seen |= new
 
 
-# One-entry distance-matrix cache: producers (range_graph, the mobility
-# models) seed it for the graph they return; consumers in the same round
-# (link layer, comm pricing) hit it instead of recomputing the O(n²)
-# matrix. Weakref-keyed so a recycled id can never alias a dead graph.
-_SQ_DIST_CACHE: tuple | None = None
-
-
+# Distance-matrix cache: producers (range_graph, the mobility models,
+# the batched rollout) seed the graph they return; consumers in the same
+# round (link layer, comm pricing) hit it instead of recomputing the
+# O(n²) matrix. The cache lives ON the graph object (set via
+# object.__setattr__ to sidestep the frozen dataclass), so any number of
+# live graphs — e.g. a whole rollout window — keep their matrices
+# simultaneously, and a graph's cache dies with it.
 def seed_sq_dist_cache(graph: "ClientGraph", d2: np.ndarray) -> None:
-    global _SQ_DIST_CACHE
-    import weakref
-
-    _SQ_DIST_CACHE = (weakref.ref(graph), d2)
+    object.__setattr__(graph, "_sq_dists", d2)
 
 
 def graph_sq_dists(graph: "ClientGraph") -> np.ndarray:
     """Squared pairwise distances for a graph's positions (cached)."""
-    if _SQ_DIST_CACHE is not None and _SQ_DIST_CACHE[0]() is graph:
-        return _SQ_DIST_CACHE[1]
-    d2 = pairwise_sq_dists(graph.positions)
-    seed_sq_dist_cache(graph, d2)
+    d2 = getattr(graph, "_sq_dists", None)
+    if d2 is None:
+        d2 = pairwise_sq_dists(graph.positions)
+        seed_sq_dist_cache(graph, d2)
     return d2
 
 
@@ -107,6 +104,63 @@ def pairwise_sq_dists(pos: np.ndarray) -> np.ndarray:
     d2 = sq[:, None] + sq[None, :] - 2.0 * (pos @ pos.T)
     np.fill_diagonal(d2, np.inf)
     return np.maximum(d2, 0.0)
+
+
+def pairwise_sq_dists_batch(pos: np.ndarray) -> np.ndarray:
+    """(R, n, n) squared distances with +inf diagonals for a stack of
+    position frames (R, n, 2).
+
+    Same expansion as :func:`pairwise_sq_dists` — the inner dimension is
+    2, so the per-frame matmul and the batched matmul reduce in the same
+    order and the result is bit-identical to R per-frame calls (pinned
+    in the rollout equivalence tests).
+    """
+    sq = np.einsum("rij,rij->ri", pos, pos)
+    d2 = sq[:, :, None] + sq[:, None, :] - 2.0 * (pos @ pos.transpose(0, 2, 1))
+    idx = np.arange(pos.shape[1])
+    d2 = np.maximum(d2, 0.0)
+    d2[:, idx, idx] = np.inf
+    return d2
+
+
+def adjacency_connected_batch(adj: np.ndarray) -> np.ndarray:
+    """(R,) connectivity flags for a stack of adjacency matrices (R, n, n).
+
+    One frontier expansion for the whole batch: ~graph-diameter
+    iterations of a single (R, n, n) @ (R, n, 1) matmul, instead of R
+    independent BFS loops — this is the hot check of the batched
+    link-dropout path, which re-validates every round's surviving graph.
+    """
+    a = adj.view(np.uint8)
+    seen = np.zeros(adj.shape[:2], dtype=bool)
+    seen[:, 0] = True
+    while True:
+        new = (np.matmul(a, seen[..., None].astype(np.intp))[..., 0] > 0) \
+            & ~seen
+        if not new.any():
+            return seen.all(axis=1)
+        seen |= new
+
+
+def graphs_from_stack(adj: np.ndarray, d2s, positions) -> "list[ClientGraph]":
+    """Assemble per-round ``ClientGraph``s from a batched adjacency
+    stack: one batched connectivity check, a component re-patch only
+    for the rounds that need it, and each graph seeded with its
+    distance matrix. The shared tail of every batched-rollout lane
+    (range/kNN mobility graphs, link-dropout survivors) — change the
+    patch or cache protocol here and every lane follows.
+
+    ``d2s`` and ``positions`` are per-round indexables (stacked arrays
+    or lists); ``adj`` is (R, n, n) and is patched in place.
+    """
+    for r in np.flatnonzero(~adjacency_connected_batch(adj)):
+        patch_connected(adj[r], d2s[r])
+    out = []
+    for r in range(adj.shape[0]):
+        g = ClientGraph(adjacency=adj[r], positions=positions[r])
+        seed_sq_dist_cache(g, d2s[r])
+        out.append(g)
+    return out
 
 
 def knn_adjacency(d2: np.ndarray, k: int) -> np.ndarray:

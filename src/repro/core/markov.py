@@ -167,11 +167,27 @@ class RandomWalkServer:
         self.history = [self.position]
         return self.position
 
+    def transition_row(self, graph: ClientGraph, i: int) -> np.ndarray:
+        """Row i of P(k) — all one walk step needs. A cached full matrix
+        is reused when present (static graphs between regens); otherwise
+        the degree chain builds just the O(n) row, so link-dropout
+        scenarios (a fresh surviving graph every round) skip the O(n²)
+        full-matrix rebuild per round. The row values are bit-identical
+        to the matrix row (0/1 sums are exact, one division either way).
+        Metropolis rows need every node's degree, so that chain still
+        goes through the cached matrix."""
+        if self._matrix_cache is not None \
+                and self._matrix_cache[0]() is graph:
+            return self._matrix_cache[1][i]
+        if self.transition == "degree":
+            row = graph.adjacency[i].astype(np.float64)
+            return row / max(row.sum(), 1.0)
+        return self.matrix(graph)[i]
+
     def step(self, graph: ClientGraph) -> int:
         """One random-walk move: i_{k+1} ~ [P(k)]_{i_k, ·} (Eq. 2)."""
         assert self.position is not None, "call reset() first"
-        p = self.matrix(graph)
-        row = p[self.position]
+        row = self.transition_row(graph, self.position)
         # The dynamic graph may have disconnected the current node from its
         # old neighbors; row always sums to 1 on the *current* graph.
         self.position = int(self._rng.choice(graph.n, p=row))

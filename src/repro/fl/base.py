@@ -146,12 +146,35 @@ class TrainerBase:
 
         For the infrastructure-based baselines the scenario contributes
         client churn (availability gates selection) and wireless round
-        pricing against a central base station; graph-walking trainers
-        override this to drive their dynamic graph from it too.
+        pricing against a central base station — they never read the
+        connectivity graph, so the scenario runs in **positions-only**
+        mode: mobility advances positions (identical RNG stream) but the
+        O(n²) adjacency/degree/component stack is skipped entirely.
+        Graph-walking trainers override this with
+        :meth:`_attach_walking_scenario`.
         """
         from ..scenarios import build_scenario
 
-        self.scenario = build_scenario(spec, self.n_clients, seed=seed)
+        self.scenario = build_scenario(spec, self.n_clients, seed=seed,
+                                       positions_only=True)
+
+    def _attach_walking_scenario(self, spec, seed: int, *,
+                                 min_degree: int = 5, regen_every: int = 10,
+                                 transition: str = "degree") -> None:
+        """Shared attach path for the graph-walking trainers (RWSADMM,
+        Walkman, fleets): build the full-stack scenario, expose it under
+        the DynamicGraph contract, and reset a random-walk server on it.
+        Callers that track a seed should update it before delegating."""
+        from ..core.markov import RandomWalkServer
+        from ..scenarios import build_scenario
+
+        self.scenario = build_scenario(
+            spec, self.n_clients, seed=seed,
+            min_degree=min_degree, regen_every=regen_every,
+        )
+        self.dyn_graph = self.scenario   # DynamicGraph-compatible facade
+        self.walker = RandomWalkServer(transition=transition, seed=seed + 1)
+        self.walker.reset(self.dyn_graph.current())
 
     def select_clients(self, rnd: int, rng: np.random.Generator,
                        m: int) -> np.ndarray:

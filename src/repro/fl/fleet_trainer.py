@@ -53,6 +53,9 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             w.reset(self.dyn_graph.current())
 
     def attach_scenario(self, spec, seed: int | None = None) -> None:
+        # The RWSADMM attach path (shared _attach_walking_scenario
+        # helper) builds the full-stack scenario + lead walker; the
+        # fleet then fans out K walkers over the same graph.
         super().attach_scenario(spec, seed=seed)
         if hasattr(self, "n_walkers"):   # re-attach after construction
             self._reset_fleet()

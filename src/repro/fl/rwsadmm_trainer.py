@@ -34,10 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import markov, rwsadmm
-from ..core.markov import RandomWalkServer, ZoneSchedule
+from ..core.markov import ZoneSchedule
 from ..core.rwsadmm import ClientState, RWSADMMHparams, ServerState
 from ..kernels.rwsadmm_update import ops as fused_ops
-from ..scenarios import ScenarioConfig, build_scenario
+from ..scenarios import ScenarioConfig
 from .base import DeviceData, TrainerBase, sample_batch
 
 SCAN_ENGINES = ("scan", "scan_fused")      # compiled lax.scan drivers
@@ -106,14 +106,10 @@ class RWSADMMTrainer(TrainerBase):
         """
         seed = self._seed if seed is None else seed
         self._seed = seed
-        self.scenario = build_scenario(
-            spec, self.n_clients, seed=seed,
-            min_degree=self._min_degree, regen_every=self._regen_every,
+        self._attach_walking_scenario(
+            spec, seed, min_degree=self._min_degree,
+            regen_every=self._regen_every, transition=self._transition,
         )
-        self.dyn_graph = self.scenario   # DynamicGraph-compatible facade
-        self.walker = RandomWalkServer(transition=self._transition,
-                                       seed=seed + 1)
-        self.walker.reset(self.dyn_graph.current())
 
     def _price(self, graph, i_k, idx, mask):
         return self.scenario.price_round(graph, int(i_k), idx, mask,

@@ -24,6 +24,7 @@ from .mobility import (
     StaticRegenMobility,
     build_mobility,
     range_graph,
+    range_graphs_batch,
 )
 from .scenario import Scenario, build_scenario
 
@@ -46,5 +47,6 @@ __all__ = [
     "build_scenario",
     "get_scenario_config",
     "range_graph",
+    "range_graphs_batch",
     "register_scenario",
 ]

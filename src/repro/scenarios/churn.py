@@ -36,6 +36,20 @@ class ChurnModel:
     def step(self, round_idx: int, rng: np.random.Generator) -> np.ndarray:
         return self._avail(round_idx, rng)
 
+    def rollout(self, start_round: int, rounds: int,
+                rng: np.random.Generator) -> np.ndarray:
+        """(rounds, n) availability masks for rounds ``start_round ..
+        start_round + rounds - 1`` in one vectorized pass. The straggler
+        tensor is one (rounds, n) draw — bit-identical to ``rounds``
+        sequential per-round draws, so batched and stepped schedules
+        replay each other exactly."""
+        c = self.cfg
+        rs = np.arange(start_round, start_round + rounds)
+        on = ((rs[:, None] + self.phase[None, :]) % c.period) \
+            < c.duty_cycle * c.period
+        miss = rng.uniform(size=(rounds, self.n)) < c.straggler_p
+        return on & ~(self.stragglers[None, :] & miss)
+
     def _avail(self, round_idx: int,
                rng: np.random.Generator) -> np.ndarray:
         c = self.cfg

@@ -110,6 +110,12 @@ class ScenarioConfig:
     links: LinkConfig = LinkConfig()
     comm: CommConfig = CommConfig()
     churn: ChurnConfig = ChurnConfig()
+    # Batched-rollout chunk: Scenario.schedule materializes at most this
+    # many rounds of (R, n, n) link/geometry tensors at once — the
+    # memory/speed trade-off knob for large windows (docs/scenarios.md).
+    # RNG consumption is chunk-size-invariant, so changing it never
+    # changes trajectories.
+    rollout_chunk: int = 128
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.graph import ClientGraph, graph_sq_dists, patch_connected
+from ..core.graph import (
+    ClientGraph,
+    graph_sq_dists,
+    graphs_from_stack,
+    patch_connected,
+    seed_sq_dist_cache,
+)
 from .config import CommConfig, LinkConfig
 
 
@@ -95,7 +101,56 @@ class LinkModel:
         u = u + u.T                      # symmetric uniforms
         adj = graph.adjacency & (u < p)
         adj = patch_connected(adj, d2)
-        return ClientGraph(adjacency=adj, positions=graph.positions)
+        out = ClientGraph(adjacency=adj, positions=graph.positions)
+        seed_sq_dist_cache(out, d2)      # same positions → same distances
+        return out
+
+    def apply_dropouts_batch(self, graphs: list[ClientGraph],
+                             rng: np.random.Generator) -> list[ClientGraph]:
+        """Batched :meth:`apply_dropouts` for a whole rollout window.
+
+        Samples the full (R, n, n) uniform tensor in one draw (bit-
+        identical to R sequential (n, n) draws), applies every round's
+        Bernoulli edge survival elementwise, then checks connectivity of
+        all R survivors with one batched frontier expansion — only the
+        rounds that actually disconnect pay the per-graph component
+        patch. Link success probabilities are computed once per distinct
+        base graph (consecutive rounds share the mobility graph under
+        ``static_regen``).
+        """
+        if not self.cfg.dropout:
+            return list(graphs)
+        rounds = len(graphs)
+        if rounds == 0:
+            return []
+        n = graphs[0].n
+        u = rng.uniform(size=(rounds, n, n))
+        u = np.triu(u, 1)
+        u = u + u.transpose(0, 2, 1)     # symmetric uniforms, per round
+        # Geometry once per *distinct* base graph (static_regen shares
+        # one graph per regen epoch; smooth mobility has one per round),
+        # with the success-probability curve evaluated over the whole
+        # distinct-graph stack in a single vectorized pass.
+        runs: list[tuple[int, int, ClientGraph]] = []
+        start = 0
+        while start < rounds:
+            g = graphs[start]
+            stop = start + 1
+            while stop < rounds and graphs[stop] is g:
+                stop += 1
+            runs.append((start, stop, g))
+            start = stop
+        d2_stack = np.stack([graph_sq_dists(g) for _, _, g in runs])
+        adj_stack = np.stack([g.adjacency for _, _, g in runs])
+        finite = np.where(np.isfinite(d2_stack), d2_stack, 0.0)
+        p_stack = np.where(adj_stack,
+                           self.success_probability_sq(finite), 0.0)
+        ri = np.repeat(np.arange(len(runs)),
+                       [b - a for a, b, _ in runs])
+        surv = adj_stack[ri] & (u < p_stack[ri])
+        d2s = [d2_stack[j] for j in ri]
+        return graphs_from_stack(surv, d2s,
+                                 [g.positions for g in graphs])
 
 
 class CommModel:
@@ -119,6 +174,27 @@ class CommModel:
         self.eta = link.cfg.path_loss_exp if link is not None \
             else path_loss_exp
 
+    def _link_costs(self, d: np.ndarray, retries: np.ndarray,
+                    payload: float
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-link (latency, tx energy, rx energy) of one ``payload``-
+        byte transmission over distance ``d``, scaled by the expected
+        transmission count ``retries`` — the one radio-cost formula
+        shared by zone pricing and base-station pricing."""
+        c = self.cfg
+        t = (c.base_latency_s + payload / c.bandwidth_bytes_per_s) * retries
+        e_tx = payload * (c.e_elec_j_per_byte
+                          + c.e_amp_j_per_byte * d ** self.eta) * retries
+        e_rx = payload * c.e_elec_j_per_byte * retries
+        return t, e_tx, e_rx
+
+    def _retries(self, d: np.ndarray, base: np.ndarray) -> np.ndarray:
+        """Expected transmissions per link: base/p(d) under the link
+        model (capped by its ``min_success``), ``base`` without one."""
+        if self.link is None:
+            return base
+        return base / self.link.success_probability(d)
+
     def price_rounds(self, pos_ik: np.ndarray, mem_pos: np.ndarray,
                      mem_mask: np.ndarray, payload_bytes: int
                      ) -> tuple[np.ndarray, np.ndarray]:
@@ -137,16 +213,10 @@ class CommModel:
         serves both the eager per-round driver (R = 1) and whole
         precomputed schedules, so the engines price identically.
         """
-        c = self.cfg
         payload = float(payload_bytes)
         d = np.linalg.norm(mem_pos - pos_ik[:, None, :], axis=2)  # (R, Z)
         m = np.asarray(mem_mask, dtype=np.float64)
-        retries = (m / self.link.success_probability(d)
-                   if self.link is not None else m)
-        t = (c.base_latency_s + payload / c.bandwidth_bytes_per_s) * retries
-        e_tx = payload * (c.e_elec_j_per_byte
-                          + c.e_amp_j_per_byte * d ** self.eta) * retries
-        e_rx = payload * c.e_elec_j_per_byte * retries
+        t, e_tx, e_rx = self._link_costs(d, self._retries(d, m), payload)
         latency = t.max(axis=1) + t.sum(axis=1)
         energy = (e_tx.max(axis=1) + e_rx.sum(axis=1)      # broadcast
                   + e_tx.sum(axis=1) + e_rx.sum(axis=1))   # uploads
@@ -183,15 +253,10 @@ class CommModel:
         members = np.asarray(members)
         if len(members) == 0:
             return 0.0, 0.0
-        c = self.cfg
         payload = float(payload_bytes)
         d = np.linalg.norm(positions[members] - 0.5, axis=1)
-        retries = (1.0 / self.link.success_probability(d)
-                   if self.link is not None else np.ones_like(d))
-        t = (c.base_latency_s + payload / c.bandwidth_bytes_per_s) * retries
-        e_tx = payload * (c.e_elec_j_per_byte
-                          + c.e_amp_j_per_byte * d ** self.eta) * retries
-        e_rx = payload * c.e_elec_j_per_byte * retries
+        t, e_tx, e_rx = self._link_costs(
+            d, self._retries(d, np.ones_like(d)), payload)
         # Download + upload per client; uplink slots shared (sum), the
         # broadcast downlink gated by the worst client.
         latency = float(t.max() + t.sum())

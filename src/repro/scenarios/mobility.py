@@ -4,6 +4,23 @@ All models run host-side (control plane) and share one contract:
 
     reset(rng) -> ClientGraph     # round-0 graph
     step(rng)  -> ClientGraph     # advance one round
+    rollout(rounds, rng) -> list[ClientGraph]   # batched step×rounds
+
+plus a positions-only lane for consumers that never touch connectivity
+(the FedAvg-family base-station baselines — ``scenarios.Scenario``'s
+``positions_only`` mode):
+
+    reset_positions(rng) -> (n, 2)
+    step_positions(rng)  -> (n, 2)
+
+``rollout`` and the positions-only lane consume the RNG exactly as the
+same number of ``step()`` calls would, so every lane replays every other
+lane draw-for-draw (pinned in ``tests/test_scenario_rollout.py``).
+``rollout`` batches the O(n²) work — pairwise distances, range/kNN
+adjacency, degree patching, connectivity checks — across the whole
+window in a few vectorized passes; position *advancement* stays a cheap
+O(n) per-round recurrence (it is inherently sequential: waypoint
+arrivals and boundary reflections depend on the previous round).
 
 Connectivity for the smooth models derives from a radio range — an edge
 (i, j) exists iff ‖p_i − p_j‖ ≤ radio_range — then a ``min_degree``
@@ -23,7 +40,10 @@ import numpy as np
 
 from ..core.graph import (
     ClientGraph,
+    graphs_from_stack,
+    knn_adjacency,
     pairwise_sq_dists,
+    pairwise_sq_dists_batch,
     patch_connected,
     random_geometric_graph,
     seed_sq_dist_cache,
@@ -35,6 +55,13 @@ class MobilityModel(Protocol):
     def reset(self, rng: np.random.Generator) -> ClientGraph: ...
 
     def step(self, rng: np.random.Generator) -> ClientGraph: ...
+
+    def rollout(self, rounds: int,
+                rng: np.random.Generator) -> list[ClientGraph]: ...
+
+    def reset_positions(self, rng: np.random.Generator) -> np.ndarray: ...
+
+    def step_positions(self, rng: np.random.Generator) -> np.ndarray: ...
 
 
 def range_graph(pos: np.ndarray, radio_range: float,
@@ -61,6 +88,42 @@ def range_graph(pos: np.ndarray, radio_range: float,
     return graph
 
 
+def range_graphs_batch(pos: np.ndarray, radio_range: float,
+                       min_degree: int) -> list[ClientGraph]:
+    """Batched :func:`range_graph`: R graphs from (R, n, 2) positions.
+
+    One (R, n, n) distance pass, one vectorized degree patch over all
+    deficient rows of all rounds at once, one batched connectivity
+    check; only rounds that actually come out disconnected pay the
+    per-graph component patch. Deterministic and bit-identical to R
+    per-round ``range_graph`` calls (same argpartition per row, same
+    patch order) — pinned in ``tests/test_scenario_rollout.py``.
+    """
+    n = pos.shape[1]
+    d2 = pairwise_sq_dists_batch(pos)
+    adj = d2 <= radio_range * radio_range       # inf diagonal → False
+    k = min(min_degree, n - 1)
+    if k > 0:
+        r_idx, i_idx = np.nonzero(adj.sum(axis=2) < k)
+        if len(r_idx):
+            nearest = np.argpartition(d2[r_idx, i_idx], k - 1,
+                                      axis=1)[:, :k]
+            adj[r_idx[:, None], i_idx[:, None], nearest] = True
+            adj[r_idx[:, None], nearest, i_idx[:, None]] = True
+    return graphs_from_stack(adj, d2, pos)
+
+
+def _knn_graphs_batch(pos: np.ndarray, min_degree: int) -> list[ClientGraph]:
+    """Batched ``random_geometric_graph`` body for pre-drawn positions:
+    kNN adjacency + connectivity patch per frame, distances in one pass.
+    Bit-identical to per-frame construction (rows partition independently).
+    """
+    d2 = pairwise_sq_dists_batch(pos)
+    adj = np.stack([knn_adjacency(d2[r], min_degree)
+                    for r in range(pos.shape[0])])
+    return graphs_from_stack(adj, d2, pos)
+
+
 class StaticRegenMobility:
     """The seed behavior: positions redrawn i.i.d. every ``regen_every``
     rounds (``core.graph.DynamicGraph``), static in between."""
@@ -72,11 +135,13 @@ class StaticRegenMobility:
         self._round = 0
         self.n_regens = 0
         self.graph: ClientGraph | None = None
+        self.pos: np.ndarray | None = None
 
     def reset(self, rng: np.random.Generator) -> ClientGraph:
         self._round = 0
         self.n_regens = 0
         self.graph = random_geometric_graph(self.n, self.cfg.min_degree, rng)
+        self.pos = self.graph.positions
         return self.graph
 
     def step(self, rng: np.random.Generator) -> ClientGraph:
@@ -85,8 +150,50 @@ class StaticRegenMobility:
             self.graph = random_geometric_graph(
                 self.n, self.cfg.min_degree, rng
             )
+            self.pos = self.graph.positions
             self.n_regens += 1
         return self.graph
+
+    def rollout(self, rounds: int,
+                rng: np.random.Generator) -> list[ClientGraph]:
+        """``rounds`` steps in one pass: draw every regen epoch's
+        positions as one (K, n, 2) block (bit-identical to K sequential
+        draws), build the K graphs batched, repeat objects in between
+        (so downstream per-graph caches keep hitting)."""
+        rs = np.arange(self._round + 1, self._round + rounds + 1)
+        regen = rs % self.regen_every == 0
+        k = int(regen.sum())
+        fresh: list[ClientGraph] = []
+        if k:
+            pos = rng.uniform(0.0, 1.0, size=(k, self.n, 2))
+            fresh = _knn_graphs_batch(pos, self.cfg.min_degree)
+        out: list[ClientGraph] = []
+        j = 0
+        cur = self.graph
+        for flag in regen:
+            if flag:
+                cur = fresh[j]
+                j += 1
+                self.n_regens += 1
+            out.append(cur)
+        self._round += rounds
+        self.graph = cur
+        self.pos = cur.positions
+        return out
+
+    def reset_positions(self, rng: np.random.Generator) -> np.ndarray:
+        self._round = 0
+        self.n_regens = 0
+        self.graph = None
+        self.pos = rng.uniform(0.0, 1.0, size=(self.n, 2))
+        return self.pos
+
+    def step_positions(self, rng: np.random.Generator) -> np.ndarray:
+        self._round += 1
+        if self._round % self.regen_every == 0:
+            self.pos = rng.uniform(0.0, 1.0, size=(self.n, 2))
+            self.n_regens += 1
+        return self.pos
 
 
 class RandomWaypointMobility:
@@ -100,15 +207,15 @@ class RandomWaypointMobility:
         self.n = n
         self.cfg = cfg
 
-    def reset(self, rng: np.random.Generator) -> ClientGraph:
+    def reset_positions(self, rng: np.random.Generator) -> np.ndarray:
         self.pos = rng.uniform(0.0, 1.0, size=(self.n, 2))
         self.waypoint = rng.uniform(0.0, 1.0, size=(self.n, 2))
         self.speed = rng.uniform(self.cfg.speed_min, self.cfg.speed_max,
                                  size=self.n)
         self.pause = np.zeros(self.n, dtype=np.int64)
-        return self._graph()
+        return self.pos
 
-    def step(self, rng: np.random.Generator) -> ClientGraph:
+    def step_positions(self, rng: np.random.Generator) -> np.ndarray:
         delta = self.waypoint - self.pos
         dist = np.linalg.norm(delta, axis=1)
         moving = (self.pause == 0) & (dist > 1e-12)
@@ -126,10 +233,27 @@ class RandomWaypointMobility:
             self.waypoint[arrived] = rng.uniform(0.0, 1.0, size=(k, 2))
             self.speed[arrived] = rng.uniform(
                 self.cfg.speed_min, self.cfg.speed_max, size=k)
-        return self._graph()
+        return self.pos
 
-    def _graph(self) -> ClientGraph:
-        return range_graph(self.pos, self.cfg.radio_range,
+    def reset(self, rng: np.random.Generator) -> ClientGraph:
+        return self._graph(self.reset_positions(rng))
+
+    def step(self, rng: np.random.Generator) -> ClientGraph:
+        return self._graph(self.step_positions(rng))
+
+    def rollout(self, rounds: int,
+                rng: np.random.Generator) -> list[ClientGraph]:
+        """Advance positions round-by-round (O(n) each; waypoint-arrival
+        draws are data-dependent, so the RNG order must stay per-step),
+        then build all ``rounds`` graphs in one batched pass."""
+        pos = np.empty((rounds, self.n, 2))
+        for t in range(rounds):
+            pos[t] = self.step_positions(rng)
+        return range_graphs_batch(pos, self.cfg.radio_range,
+                                  self.cfg.min_degree)
+
+    def _graph(self, pos: np.ndarray) -> ClientGraph:
+        return range_graph(pos, self.cfg.radio_range,
                            self.cfg.min_degree)
 
 
@@ -146,17 +270,19 @@ class GaussMarkovMobility:
         self.n = n
         self.cfg = cfg
 
-    def reset(self, rng: np.random.Generator) -> ClientGraph:
+    def reset_positions(self, rng: np.random.Generator) -> np.ndarray:
         self.pos = rng.uniform(0.0, 1.0, size=(self.n, 2))
         heading = rng.uniform(0.0, 2 * np.pi, size=self.n)
         self.mean_v = self.cfg.mean_speed * np.stack(
             [np.cos(heading), np.sin(heading)], axis=1)
         self.vel = self.mean_v.copy()
-        return self._graph()
+        return self.pos
 
-    def step(self, rng: np.random.Generator) -> ClientGraph:
+    def step_positions(self, rng: np.random.Generator) -> np.ndarray:
+        return self._advance(rng.normal(size=(self.n, 2)))
+
+    def _advance(self, noise: np.ndarray) -> np.ndarray:
         a, s = self.cfg.alpha, self.cfg.sigma_speed
-        noise = rng.normal(size=(self.n, 2))
         self.vel = (a * self.vel + (1.0 - a) * self.mean_v
                     + s * np.sqrt(max(1.0 - a * a, 0.0)) * noise)
         self.pos = self.pos + self.vel
@@ -171,10 +297,28 @@ class GaussMarkovMobility:
             self.vel = np.where(flip, -self.vel, self.vel)
             self.mean_v = np.where(flip, -self.mean_v, self.mean_v)
         self.pos = np.clip(self.pos, 0.0, 1.0)
-        return self._graph()
+        return self.pos
 
-    def _graph(self) -> ClientGraph:
-        return range_graph(self.pos, self.cfg.radio_range,
+    def reset(self, rng: np.random.Generator) -> ClientGraph:
+        return self._graph(self.reset_positions(rng))
+
+    def step(self, rng: np.random.Generator) -> ClientGraph:
+        return self._graph(self.step_positions(rng))
+
+    def rollout(self, rounds: int,
+                rng: np.random.Generator) -> list[ClientGraph]:
+        """One (rounds, n, 2) normal block (bit-identical to per-round
+        draws), a cheap sequential velocity/reflection recurrence, then
+        one batched graph-construction pass."""
+        noise = rng.normal(size=(rounds, self.n, 2))
+        pos = np.empty((rounds, self.n, 2))
+        for t in range(rounds):
+            pos[t] = self._advance(noise[t])
+        return range_graphs_batch(pos, self.cfg.radio_range,
+                                  self.cfg.min_degree)
+
+    def _graph(self, pos: np.ndarray) -> ClientGraph:
+        return range_graph(pos, self.cfg.radio_range,
                            self.cfg.min_degree)
 
 

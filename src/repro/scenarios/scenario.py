@@ -15,11 +15,29 @@ fixed-shape ``ZoneSchedule`` arrays it compiles into are all the device
 ever sees, so ``engine="scan"``/``"scan_fused"`` keep the fused hot
 path under every scenario.
 
+``schedule()`` is a **batched rollout**, not R ``step()`` iterations:
+each layer generates its whole window in a few vectorized passes
+(mobility positions + graphs, the (R, n, n) link-dropout tensor, the
+(R, n) churn masks), chunked to ``cfg.rollout_chunk`` rounds so the
+O(R·n²) intermediates stay bounded for large windows. Every lane —
+``step()``, batched ``schedule()``, and stepped ``schedule(batched=
+False)`` — consumes the RNG streams identically, so they replay each
+other draw-for-draw (pinned in ``tests/test_scenario_rollout.py``).
+
 Three independent RNG streams (mobility / links / churn) are derived
 from the seed, so toggling one layer never perturbs another layer's
 draw sequence. With the default ``static_regen`` config (links and
 churn off) the mobility stream consumes exactly like ``DynamicGraph``'s
 single RNG — bit-for-bit identical trajectories.
+
+``positions_only=True`` drops the connectivity stack entirely: the
+mobility model advances positions (identical RNG consumption — the
+graph construction is RNG-free) but never builds adjacency, never
+patches degrees or components, and the link layer never samples
+dropouts. The FedAvg-family base-station baselines run in this mode:
+they only consume positions (pricing against the base station) and
+churn masks (selection), so the O(n²)-per-round graph work is pure
+waste for them.
 """
 from __future__ import annotations
 
@@ -33,25 +51,34 @@ from .mobility import build_mobility
 
 
 class Scenario:
-    def __init__(self, n: int, cfg: ScenarioConfig | str, seed: int = 0):
+    def __init__(self, n: int, cfg: ScenarioConfig | str, seed: int = 0,
+                 *, positions_only: bool = False):
         if isinstance(cfg, str):
             cfg = get_scenario_config(cfg)
         self.n = n
         self.cfg = cfg
+        self.positions_only = bool(positions_only)
         self.mobility = build_mobility(n, cfg.mobility)
         # Stream 0 mirrors DynamicGraph(seed) exactly (static_regen
-        # bit-compat); links/churn get independent streams.
+        # bit-compat); links/churn get independent streams. A negative
+        # seed never reaches the SeedSequence: default_rng(seed) above
+        # it already rejects one (pinned in the seed-stability test).
         self._rng_mob = np.random.default_rng(seed)
         self._rng_link = np.random.default_rng(
-            np.random.SeedSequence([max(seed, 0), 1]))
+            np.random.SeedSequence([seed, 1]))
         self._rng_churn = np.random.default_rng(
-            np.random.SeedSequence([max(seed, 0), 2]))
+            np.random.SeedSequence([seed, 2]))
         self.link = LinkModel(cfg.links) if cfg.links.enabled else None
         self.churn = ChurnModel(n, cfg.churn) if cfg.churn.enabled else None
         self.comm = CommModel(cfg.comm, self.link)
         self._round = 0
-        self._base = self.mobility.reset(self._rng_mob)
-        self.graph = self._effective(self._base)
+        if self.positions_only:
+            self._base = self.graph = None
+            self._pos = self.mobility.reset_positions(self._rng_mob)
+        else:
+            self._base = self.mobility.reset(self._rng_mob)
+            self.graph = self._effective(self._base)
+            self._pos = self._base.positions
         self.avail = (self.churn.reset(self._rng_churn)
                       if self.churn is not None else None)
         self._avail_trace: np.ndarray | None = None
@@ -61,33 +88,80 @@ class Scenario:
     def n_regens(self) -> int:
         return getattr(self.mobility, "n_regens", 0)
 
+    @property
+    def positions(self) -> np.ndarray:
+        """(n, 2) current client positions (works in every mode)."""
+        return self._pos
+
     def current(self) -> ClientGraph:
+        if self.graph is None:
+            raise RuntimeError(
+                "positions-only scenario has no connectivity graph; "
+                "rebuild with positions_only=False for graph walking")
         return self.graph
 
-    def step(self) -> ClientGraph:
-        """Advance one round: mobility, link dropouts, churn."""
+    def step(self) -> ClientGraph | None:
+        """Advance one round: mobility, link dropouts, churn. In
+        positions-only mode just positions and churn — the whole
+        connectivity stack (adjacency, degree floor, component patch,
+        dropout sampling) is skipped."""
         self._round += 1
-        self._base = self.mobility.step(self._rng_mob)
-        self.graph = self._effective(self._base)
+        if self.positions_only:
+            self._pos = self.mobility.step_positions(self._rng_mob)
+        else:
+            self._base = self.mobility.step(self._rng_mob)
+            self.graph = self._effective(self._base)
+            self._pos = self._base.positions
         if self.churn is not None:
             self.avail = self.churn.step(self._round, self._rng_churn)
         return self.graph
 
-    def schedule(self, rounds: int,
-                 *, include_current: bool = False) -> list[ClientGraph]:
+    def schedule(self, rounds: int, *, include_current: bool = False,
+                 batched: bool = True) -> list[ClientGraph]:
         """Batch variant of :meth:`step` (same contract as
         ``DynamicGraph.schedule``). Also records the per-round
         availability masks for the same window; ``pop_avail_trace()``
         hands them to ``markov.zone_schedule`` aligned with the graphs.
+
+        ``batched=True`` (default) runs the vectorized rollout engine:
+        one array program per layer per ≤``cfg.rollout_chunk``-round
+        chunk. ``batched=False`` keeps the legacy per-round stepping —
+        same RNG consumption, bit-identical output (the equivalence is
+        pinned in tests); it exists as the oracle for that pin.
         """
+        if self.positions_only:
+            raise RuntimeError(
+                "positions-only scenario cannot compile graph schedules; "
+                "rebuild with positions_only=False for graph walking")
         graphs: list[ClientGraph] = []
         avails: list[np.ndarray] = []
         if include_current:
             graphs.append(self.current())
             avails.append(self.avail)
-        while len(graphs) < rounds:
-            graphs.append(self.step())
-            avails.append(self.avail)
+        if batched:
+            chunk = max(1, int(self.cfg.rollout_chunk))
+            while len(graphs) < rounds:
+                m = min(rounds - len(graphs), chunk)
+                base = self.mobility.rollout(m, self._rng_mob)
+                if self.link is not None:
+                    eff = self.link.apply_dropouts_batch(
+                        base, self._rng_link)
+                else:
+                    eff = base
+                if self.churn is not None:
+                    block = self.churn.rollout(
+                        self._round + 1, m, self._rng_churn)
+                    avails.extend(block)
+                    self.avail = block[-1]
+                self._round += m
+                graphs.extend(eff)
+                self._base = base[-1]
+                self.graph = eff[-1]
+        else:
+            while len(graphs) < rounds:
+                graphs.append(self.step())
+                avails.append(self.avail)
+        self._pos = self._base.positions
         self._avail_trace = (np.stack(avails)
                              if self.churn is not None else None)
         return graphs
@@ -128,20 +202,26 @@ class Scenario:
 
     def price_star_round(self, members: np.ndarray, payload_bytes: int
                          ) -> tuple[float, float]:
-        """Baseline (base-station) pricing against current positions."""
+        """Baseline (base-station) pricing against current positions
+        (graph-free: works in positions-only mode)."""
         return self.comm.price_star_round(
-            self.graph.positions, members, payload_bytes)
+            self._pos, members, payload_bytes)
 
 
 def build_scenario(spec: ScenarioConfig | str | None, n: int,
                    seed: int = 0, *, min_degree: int = 5,
-                   regen_every: int = 10) -> Scenario:
+                   regen_every: int = 10,
+                   positions_only: bool = False) -> Scenario:
     """Resolve a scenario spec (name, config, or None) into a Scenario.
 
     ``None`` builds the default ``static_regen`` from the caller's
     legacy graph knobs (min_degree/regen_every) — the exact seed-repo
     ``DynamicGraph`` behavior. A named or explicit config is
     authoritative: its own mobility knobs win over the legacy kwargs.
+
+    ``positions_only=True`` skips the whole connectivity stack — for
+    base-station consumers (the FedAvg-family baselines) that only read
+    positions and churn masks.
     """
     if spec is None:
         import dataclasses
@@ -152,4 +232,4 @@ def build_scenario(spec: ScenarioConfig | str | None, n: int,
                 base.mobility, min_degree=min_degree,
                 regen_every=regen_every),
         )
-    return Scenario(n, spec, seed=seed)
+    return Scenario(n, spec, seed=seed, positions_only=positions_only)

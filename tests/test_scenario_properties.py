@@ -1,0 +1,269 @@
+"""Property-based tests for the scenario invariants the theory leans on
+(Assumption 3.1 irreducibility, App. D.2 degree floor, zone
+non-emptiness, Metropolis stochasticity) — over *sampled* environments,
+not just the handful of fixed seeds the example tests use.
+
+Runs under hypothesis when installed (``pip install -r
+requirements-dev.txt``; CI's property-tests job sets
+``HYPOTHESIS_PROFILE=smoke`` to cap examples). Without hypothesis the
+``@given`` tests skip via ``_hypothesis_compat`` — the deterministic
+``test_*_sampled`` twins below still exercise every invariant over a
+seed sweep, so minimal environments keep real coverage.
+"""
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
+
+from repro.core import markov
+from repro.core.graph import pairwise_sq_dists, patch_connected
+from repro.scenarios import (
+    ChurnConfig,
+    LinkConfig,
+    MobilityConfig,
+    Scenario,
+    ScenarioConfig,
+    build_mobility,
+    range_graph,
+)
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile(
+        "smoke", max_examples=20, deadline=None,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    hypothesis.settings.register_profile("default", deadline=None)
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "default"))
+
+MODELS = ("static_regen", "random_waypoint", "gauss_markov")
+
+
+def _mobility_cfg(model: str, radio_range: float,
+                  min_degree: int) -> MobilityConfig:
+    return MobilityConfig(model=model, radio_range=radio_range,
+                          min_degree=min_degree)
+
+
+def _rollout_graphs(model, n, rounds, seed, radio_range=0.3, min_degree=4):
+    mob = build_mobility(n, _mobility_cfg(model, radio_range, min_degree))
+    rng = np.random.default_rng(seed)
+    first = mob.reset(rng)
+    return [first] + mob.rollout(rounds, rng)
+
+
+# ----------------------------------------------- positions stay bounded ---
+def check_positions_in_bounds(model, n, rounds, seed):
+    for g in _rollout_graphs(model, n, rounds, seed):
+        assert (g.positions >= 0.0).all() and (g.positions <= 1.0).all()
+
+
+@hypothesis.given(model=st.sampled_from(MODELS),
+                  n=st.integers(min_value=5, max_value=25),
+                  rounds=st.integers(min_value=1, max_value=25),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rollout_positions_in_bounds(model, n, rounds, seed):
+    """Rolled-out positions stay in the unit square for every model."""
+    check_positions_in_bounds(model, n, rounds, seed)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("seed", range(4))
+def test_rollout_positions_in_bounds_sampled(model, seed):
+    check_positions_in_bounds(model, 12, 15, seed)
+
+
+# --------------------------------------- graphs connected, degree floor ---
+def check_graphs_connected_min_degree(model, n, rounds, seed,
+                                      radio_range, min_degree):
+    k = min(min_degree, n - 1)
+    for g in _rollout_graphs(model, n, rounds, seed,
+                             radio_range=radio_range,
+                             min_degree=min_degree):
+        assert g.is_connected()
+        assert (g.degree() >= k).all()
+
+
+@hypothesis.given(model=st.sampled_from(MODELS),
+                  n=st.integers(min_value=4, max_value=22),
+                  rounds=st.integers(min_value=1, max_value=15),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1),
+                  radio_range=st.floats(min_value=0.05, max_value=0.9),
+                  min_degree=st.integers(min_value=1, max_value=8))
+def test_rollout_graphs_connected_with_degree_floor(model, n, rounds, seed,
+                                                    radio_range, min_degree):
+    """Every patched graph is connected (Assumption 3.1) with the
+    min-degree floor satisfied (App. D.2), whatever the radio range."""
+    check_graphs_connected_min_degree(model, n, rounds, seed,
+                                      radio_range, min_degree)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("seed,radio_range,min_degree",
+                         [(0, 0.05, 5), (1, 0.35, 3), (2, 0.8, 1),
+                          (3, 0.15, 8)])
+def test_rollout_graphs_connected_sampled(model, seed, radio_range,
+                                          min_degree):
+    check_graphs_connected_min_degree(model, 14, 10, seed,
+                                      radio_range, min_degree)
+
+
+def check_dropout_graphs_connected(n, rounds, seed, sensitivity_dbm):
+    cfg = ScenarioConfig(
+        name="prop",
+        mobility=MobilityConfig(model="random_waypoint"),
+        links=LinkConfig(enabled=True, sensitivity_dbm=sensitivity_dbm),
+        rollout_chunk=7,
+    )
+    scn = Scenario(n, cfg, seed=seed)
+    for g in scn.schedule(rounds, include_current=True):
+        assert g.is_connected()
+
+
+@hypothesis.given(n=st.integers(min_value=4, max_value=20),
+                  rounds=st.integers(min_value=1, max_value=20),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1),
+                  sensitivity_dbm=st.floats(min_value=-90.0,
+                                            max_value=-50.0))
+def test_dropout_patched_graphs_stay_connected(n, rounds, seed,
+                                               sensitivity_dbm):
+    """However lossy the links, every post-dropout re-patched graph is
+    connected — the walk chain never strands."""
+    check_dropout_graphs_connected(n, rounds, seed, sensitivity_dbm)
+
+
+@pytest.mark.parametrize("seed,sens", [(0, -85.0), (1, -65.0), (2, -50.0)])
+def test_dropout_patched_graphs_stay_connected_sampled(seed, sens):
+    check_dropout_graphs_connected(15, 12, seed, sens)
+
+
+# --------------------------------------------- zones never churn empty ---
+def check_zone_nonempty(n, seed, avail_bits, zone_size):
+    rng = np.random.default_rng(seed)
+    g = range_graph(rng.uniform(size=(n, 2)), 0.3, 4)
+    avail = np.array([(avail_bits >> i) & 1 == 1 for i in range(n)])
+    for i_k in range(n):
+        idx, mask, n_i = markov.plan_zone_round(
+            g, i_k, zone_size, rng, avail=avail)
+        live = idx[mask > 0]
+        assert len(live) >= 1          # churn can never empty the zone
+        assert i_k in live             # the visited client always stays
+        assert n_i >= 1
+        # everyone else in the zone really was available
+        assert all(avail[c] or c == i_k for c in live)
+
+
+@hypothesis.given(n=st.integers(min_value=3, max_value=20),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1),
+                  avail_bits=st.integers(min_value=0, max_value=2**20 - 1),
+                  zone_size=st.integers(min_value=1, max_value=10))
+def test_churned_zone_never_below_one_client(n, seed, avail_bits,
+                                             zone_size):
+    """For ANY availability mask — including all-offline — the planned
+    zone keeps at least the visited client."""
+    check_zone_nonempty(n, seed, avail_bits, zone_size)
+
+
+@pytest.mark.parametrize("seed,avail_bits", [(0, 0), (1, 0b1010101010),
+                                             (2, 2**20 - 1), (3, 1)])
+def test_churned_zone_never_below_one_client_sampled(seed, avail_bits):
+    check_zone_nonempty(12, seed, avail_bits, 6)
+
+
+# ------------------------------------------- Metropolis stochasticity ---
+def check_metropolis_stochastic(graphs):
+    for g in graphs:
+        p = markov.metropolis_transition_matrix(g)
+        assert (p >= -1e-12).all()
+        np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-9)
+        # off-diagonal support == graph edges (irreducible on connected g)
+        off = p.copy()
+        np.fill_diagonal(off, 0.0)
+        assert ((off > 0) == g.adjacency).all()
+
+
+@hypothesis.given(model=st.sampled_from(MODELS),
+                  n=st.integers(min_value=4, max_value=20),
+                  rounds=st.integers(min_value=1, max_value=10),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1),
+                  radio_range=st.floats(min_value=0.05, max_value=0.9))
+def test_metropolis_rows_stochastic_on_sampled_graphs(model, n, rounds,
+                                                      seed, radio_range):
+    """Metropolis rows are a probability distribution on every graph
+    the rollout can produce (uniform stationary walk stays well-posed)."""
+    check_metropolis_stochastic(
+        _rollout_graphs(model, n, rounds, seed, radio_range=radio_range))
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("seed", range(3))
+def test_metropolis_rows_stochastic_sampled(model, seed):
+    check_metropolis_stochastic(_rollout_graphs(model, 13, 8, seed))
+
+
+# ------------------------------------------------ patcher postcondition ---
+def check_patch_connected(n, seed):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(size=(n, 2))
+    d2 = pairwise_sq_dists(pos)
+    # arbitrary sparse adjacency, possibly fully disconnected
+    adj = rng.uniform(size=(n, n)) < 0.08
+    adj = adj | adj.T
+    np.fill_diagonal(adj, False)
+    patched = patch_connected(adj.copy(), d2)
+    from repro.core.graph import adjacency_connected
+
+    assert adjacency_connected(patched)
+    assert (patched & ~adj).sum() >= 0      # only ever adds edges
+    assert (adj & ~patched).sum() == 0
+
+
+@hypothesis.given(n=st.integers(min_value=2, max_value=30),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_patch_connected_always_connects(n, seed):
+    """patch_connected terminates and connects ANY adjacency, adding
+    edges only."""
+    check_patch_connected(n, seed)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_patch_connected_always_connects_sampled(seed):
+    check_patch_connected(16, seed)
+
+
+# ----------------------------------------------- churn mask invariants ---
+def check_churn_fraction(n, seed, duty_cycle, period, rounds):
+    from repro.scenarios.churn import ChurnModel
+
+    cm = ChurnModel(n, ChurnConfig(enabled=True, duty_cycle=duty_cycle,
+                                   period=period))
+    rng = np.random.default_rng(seed)
+    cm.reset(rng)
+    block = cm.rollout(1, rounds, rng)
+    assert block.shape == (rounds, n)
+    assert block.dtype == bool
+    # duty cycling alone (no stragglers) wakes each client for exactly
+    # ceil(duty_cycle * period) of every `period` consecutive rounds
+    if rounds >= period:
+        per_client = block[:period].sum(axis=0)
+        # same comparison the model applies, over one full residue cycle
+        expect = int((np.arange(period) < duty_cycle * period).sum())
+        assert (per_client == expect).all()
+
+
+@hypothesis.given(n=st.integers(min_value=1, max_value=40),
+                  seed=st.integers(min_value=0, max_value=2**31 - 1),
+                  duty_cycle=st.floats(min_value=0.05, max_value=1.0),
+                  period=st.integers(min_value=1, max_value=30),
+                  rounds=st.integers(min_value=1, max_value=60))
+def test_churn_rollout_duty_cycle_exact(n, seed, duty_cycle, period,
+                                        rounds):
+    """Batched churn masks satisfy the duty-cycle contract exactly over
+    any full period window."""
+    check_churn_fraction(n, seed, duty_cycle, period, rounds)
+
+
+@pytest.mark.parametrize("seed,duty,period", [(0, 0.6, 10), (1, 0.25, 4),
+                                              (2, 1.0, 7)])
+def test_churn_rollout_duty_cycle_sampled(seed, duty, period):
+    check_churn_fraction(20, seed, duty, period, 2 * period)
