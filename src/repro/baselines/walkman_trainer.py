@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import walkman
+from ..core import markov, walkman
 from ..fl.base import DeviceData, TrainerBase, sample_batch
 
 
@@ -85,7 +85,7 @@ class WalkmanTrainer(TrainerBase):
     def round(self, state, rnd: int, rng: np.random.Generator):
         graph = self.dyn_graph.step() if rnd > 0 else self.dyn_graph.current()
         i_k = self.walker.step(graph) if rnd > 0 else self.walker.position
-        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        key = markov.round_key(rng)   # shared eager/scan key derivation
         clients, y, loss = self._round_fn(
             state.clients, state.y, jnp.asarray(i_k), key
         )

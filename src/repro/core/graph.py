@@ -85,6 +85,26 @@ def seed_sq_dist_cache(graph: "ClientGraph", d2: np.ndarray) -> None:
     object.__setattr__(graph, "_sq_dists", d2)
 
 
+def detach_rollout_views(graph: "ClientGraph") -> None:
+    """Copy-on-seed (memory): a graph assembled by the batched rollout
+    (:func:`graphs_from_stack`) holds *views* into its window's
+    (R, n, n) adjacency and distance stacks; a caller retaining one
+    graph past the chunk window (the scenario keeps the window's last
+    graph as its current state) would pin both whole stacks live.
+    Copying the retained graph's slices costs O(n²) once and lets the
+    O(R·n²) stacks be freed — values are unchanged, so everything
+    downstream stays bit-identical (regression-pinned in
+    ``tests/test_scenario_rollout.py``).
+    """
+    d2 = getattr(graph, "_sq_dists", None)
+    if d2 is not None and d2.base is not None:
+        object.__setattr__(graph, "_sq_dists", d2.copy())
+    if graph.adjacency.base is not None:
+        object.__setattr__(graph, "adjacency", graph.adjacency.copy())
+    if graph.positions.base is not None:
+        object.__setattr__(graph, "positions", graph.positions.copy())
+
+
 def graph_sq_dists(graph: "ClientGraph") -> np.ndarray:
     """Squared pairwise distances for a graph's positions (cached)."""
     d2 = getattr(graph, "_sq_dists", None)

@@ -226,6 +226,49 @@ class RandomWalkServer:
                 positions[k] = self.step(graph)
         return positions
 
+    def walk_schedule_batched(self, graphs: Sequence[ClientGraph],
+                              *, advance_first: bool = True) -> np.ndarray:
+        """Inverse-CDF variant of :meth:`walk_schedule`: all step uniforms
+        are pre-drawn in ONE ``rng.random`` call and each step maps its
+        uniform through the transition row's CDF — O(1) RNG dispatches
+        per window instead of one ``Generator.choice`` (which rebuilds a
+        CDF and re-enters the generator) per round.
+
+        RNG-STREAM BREAK: raw uniforms consume the walker's bit stream
+        differently from ``choice``, so a run mixing this with eager
+        ``step()`` calls diverges. It therefore ships opt-in (the
+        trainers' ``batched_walk`` flag); the stream it does produce is
+        deterministic, chunk-composable (``random(a)`` then ``random(b)``
+        equals ``random(a+b)`` for PCG64), and pinned by a seed-stability
+        test so it can never drift silently.
+        """
+        rounds = len(graphs)
+        positions = np.empty(rounds, dtype=np.int64)
+        start = 0
+        if rounds and not advance_first:
+            assert self.position is not None, "call reset() first"
+            positions[0] = self.position
+            start = 1
+        u = self._rng.random(rounds - start)
+        for k in range(start, rounds):
+            assert self.position is not None, "call reset() first"
+            row = self.transition_row(graphs[k], self.position)
+            cdf = np.cumsum(row)
+            # Scale by the realized total (≈1.0) so fp undershoot in the
+            # cumsum can never push the draw past the last bin.
+            j = int(np.searchsorted(cdf, u[k - start] * cdf[-1],
+                                    side="right"))
+            # A uniform within 1 ulp of 1.0 can land past the last
+            # positive-mass bin (trailing zero-probability states share
+            # cdf[-1]); clamp to the first bin reaching the total — the
+            # last state the row actually supports.
+            self.position = min(j, int(np.searchsorted(cdf, cdf[-1],
+                                                       side="left")))
+            self.visit_counts[self.position] += 1
+            self.history.append(self.position)
+            positions[k] = self.position
+        return positions
+
 
 # ---------------------------------------------------------------------------
 # Precomputed zone schedules — the host-side half of the compiled
@@ -234,6 +277,33 @@ class RandomWalkServer:
 # resolved here into fixed-shape arrays; the device then runs R rounds as
 # one XLA executable with no host round-trips.
 # ---------------------------------------------------------------------------
+
+
+def round_key_seed(rng: np.random.Generator) -> int:
+    """Draw one round's PRNG-key seed from the shared simulation RNG.
+
+    The single choke point for per-round key derivation: the eager
+    drivers (single-walker, fleet) and the schedule precompute all draw
+    through here, so their key streams are identical *by construction* —
+    the eager/scan equivalence pins are structural, not incidental.
+    """
+    return int(rng.integers(2**31 - 1))
+
+
+def round_key(rng: np.random.Generator):
+    """Eager-driver form: materialize the round's key on device."""
+    import jax
+
+    return jax.random.PRNGKey(round_key_seed(rng))
+
+
+def round_keys(seeds: np.ndarray) -> np.ndarray:
+    """Schedule form: one batched dispatch for a whole window's key block
+    (threefry init is jit-traced, so vmap over seeds matches per-seed
+    ``PRNGKey`` bit-for-bit)."""
+    import jax
+
+    return np.asarray(jax.vmap(jax.random.PRNGKey)(np.asarray(seeds)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -310,6 +380,31 @@ def plan_zone_round(
     return idx, mask, n_i
 
 
+def _plan_rounds(graphs, positions, zone_size, rng, avails):
+    """The shared per-round planning loop: zone membership + key seeds.
+
+    Inherently sequential in ``rng`` (subsample draws and key seeds
+    interleave in round order, replaying the eager drivers exactly), so
+    it stays a host loop; everything around it — walk stepping, key
+    materialization, pricing — is batched by the callers.
+    """
+    rounds = len(graphs)
+    z = zone_size
+    idx = np.zeros((rounds, z), np.int32)
+    mask = np.zeros((rounds, z), np.float32)
+    n_i = np.zeros((rounds,), np.float32)
+    seeds = np.zeros((rounds,), np.int64)
+    active = np.zeros((rounds,), np.int32)
+    for k in range(rounds):
+        idx[k], mask[k], n_i[k] = plan_zone_round(
+            graphs[k], int(positions[k]), z, rng,
+            avail=None if avails is None else avails[k],
+        )
+        active[k] = int(mask[k].sum())
+        seeds[k] = round_key_seed(rng)
+    return idx, mask, n_i, seeds, active
+
+
 def zone_schedule(
     dyn_graph,
     walker: RandomWalkServer,
@@ -319,6 +414,7 @@ def zone_schedule(
     *,
     start_round: int = 0,
     price=None,
+    batched_walk: bool = False,
 ) -> ZoneSchedule:
     """Precompute ``rounds`` zone rounds: graphs (covering regeneration
     epochs), random-walk positions, padded zone membership, and PRNG keys.
@@ -336,37 +432,244 @@ def zone_schedule(
     ((R,), (R,))`` prices the whole window in one vectorized call and
     must be deterministic (no RNG) so eager and scan engines price
     identically.
+
+    ``batched_walk=True`` swaps the per-round ``rng.choice`` walk step
+    for the pre-drawn-uniform inverse-CDF sampler
+    (:meth:`RandomWalkServer.walk_schedule_batched`) — an RNG-stream
+    break from the eager driver, hence opt-in.
     """
     first = start_round == 0
     graphs = dyn_graph.schedule(rounds, include_current=first)
     pop_trace = getattr(dyn_graph, "pop_avail_trace", None)
     avails = pop_trace() if pop_trace is not None else None
-    positions = walker.walk_schedule(graphs, advance_first=not first)
+    step = (walker.walk_schedule_batched if batched_walk
+            else walker.walk_schedule)
+    positions = step(graphs, advance_first=not first)
 
-    z = zone_size
-    idx = np.zeros((rounds, z), np.int32)
-    mask = np.zeros((rounds, z), np.float32)
-    n_i = np.zeros((rounds,), np.float32)
-    seeds = np.zeros((rounds,), np.int64)
-    active = np.zeros((rounds,), np.int32)
-    for k in range(rounds):
-        idx[k], mask[k], n_i[k] = plan_zone_round(
-            graphs[k], int(positions[k]), z, rng,
-            avail=None if avails is None else avails[k],
-        )
-        active[k] = int(mask[k].sum())
-        seeds[k] = rng.integers(2**31 - 1)
+    idx, mask, n_i, seeds, active = _plan_rounds(
+        graphs, positions, zone_size, rng, avails)
     latency = energy = None
     if price is not None:
         latency, energy = price(graphs, positions, idx, mask)
-
-    # One batched dispatch for the key block (threefry init is jit-traced,
-    # so vmap over seeds matches per-seed PRNGKey bit-for-bit).
-    import jax
-
-    keys = np.asarray(jax.vmap(jax.random.PRNGKey)(seeds))
     return ZoneSchedule(
-        idx=idx, mask=mask, n_i=n_i, keys=keys,
+        idx=idx, mask=mask, n_i=n_i, keys=round_keys(seeds),
         clients=positions.astype(np.int32), active=active,
         latency_s=latency, energy_j=energy,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet schedules — K mobile servers compiled into one scan window.
+# Round-robin mode serves one walker's zone per round (the walkers take
+# turns; one wall step moves every walker once per K rounds); simultaneous
+# mode moves ALL K walkers every wall step and serves K zones at once.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetZoneSchedule(ZoneSchedule):
+    """R precomputed fleet rounds (see :class:`ZoneSchedule`).
+
+    Round-robin mode keeps the base-class shapes and adds:
+
+    walker: (R,) int32 — the active walker per round.
+    sync:   (R,) float32 — 1.0 where a rendezvous (token averaging)
+            follows the round, 0.0 otherwise.
+
+    Simultaneous mode gains a walker axis: idx/mask are (R, K, Z),
+    clients/n_i/active are (R, K), and the latency/energy columns keep
+    their (R,) wall-clock aggregates (parallel service: latency is the
+    max over walkers, energy the sum) with the per-walker (R, K) columns
+    preserved in ``latency_s_walkers``/``energy_j_walkers``.
+    """
+
+    walker: np.ndarray | None = None
+    sync: np.ndarray | None = None
+    latency_s_walkers: np.ndarray | None = None
+    energy_j_walkers: np.ndarray | None = None
+    mode: str = "roundrobin"
+    n_walkers: int = 1
+
+    @property
+    def zone_size(self) -> int:
+        return int(self.idx.shape[-1])
+
+
+def plan_fleet_zone_round(
+    graph: ClientGraph,
+    positions: np.ndarray,
+    zone_size: int,
+    rng: np.random.Generator,
+    avail: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """K zone plans for one simultaneous wall step.
+
+    Returns (idx (K, Z), mask (K, Z), n_i (K,)). Walkers plan in index
+    order and a client claimed by an earlier walker is excluded from
+    later walkers' zones — deterministic conflict resolution (lowest
+    walker index wins), so the K zones are pairwise disjoint and the
+    multi-zone round's scatter-add is duplicate-free. A walker whose own
+    position was already claimed serves whatever unclaimed neighbors
+    remain (possibly none: an all-padding row — the walker idles).
+    ``avail`` composes exactly as in :func:`plan_zone_round`: offline
+    neighbors drop out, but a walker's own position always participates
+    (unless claimed — the server at that client is the earlier walker).
+    """
+    k_walkers = len(positions)
+    idx = np.zeros((k_walkers, zone_size), np.int32)
+    mask = np.zeros((k_walkers, zone_size), np.float32)
+    n_i = np.zeros((k_walkers,), np.float32)
+    taken = np.zeros(graph.n, dtype=bool)
+    for k, i_k in enumerate(positions):
+        i_k = int(i_k)
+        zone = graph.neighborhood(i_k)
+        if avail is not None:
+            zone = zone[avail[zone] | (zone == i_k)]
+        zone = zone[~taken[zone]]
+        n_i[k] = len(zone)
+        if len(zone) > zone_size:
+            if taken[i_k]:
+                active = rng.choice(zone, size=zone_size, replace=False)
+            else:
+                others = zone[zone != i_k]
+                pick = rng.choice(others, size=zone_size - 1, replace=False)
+                active = np.concatenate([[i_k], pick])
+        else:
+            active = zone
+        mask[k, : len(active)] = 1.0
+        idx[k, : len(active)] = active
+        taken[active] = True
+    return idx, mask, n_i
+
+
+def fleet_zone_schedule(
+    dyn_graph,
+    walkers: Sequence[RandomWalkServer],
+    rounds: int,
+    zone_size: int,
+    rng: np.random.Generator,
+    *,
+    start_round: int = 0,
+    sync_every: int = 20,
+    mode: str = "roundrobin",
+    price=None,
+    price_fleet=None,
+    batched_walk: bool = False,
+) -> FleetZoneSchedule:
+    """Precompute ``rounds`` fleet rounds in one batched pass: the
+    active-walker index, per-walker random-walk positions, the zone
+    plan(s), rendezvous (sync) mask, PRNG keys, and wireless pricing.
+
+    Consumes ``dyn_graph``, each walker's RNG, and the shared simulation
+    ``rng`` exactly as the eager fleet driver would, so chunked fleet
+    schedules compose and eager/scan trajectories pin bit-for-bit.
+
+    Round-robin: walker ``(start_round + r) % K`` serves round r; the
+    graph holds still (and nobody moves) for the first K rounds — every
+    vehicle starts parked at a client — then advances per round with the
+    active walker taking its step. Walk stepping is batched per walker
+    (each walker's RNG stream is independent, so regrouping the rounds
+    by walker replays the per-round order exactly).
+
+    Simultaneous: every walker moves every wall step and
+    :func:`plan_fleet_zone_round` forms K disjoint zones per round;
+    ``price_fleet(graphs, clients (R, K), idx, mask) -> ((R, K), (R, K))``
+    prices each walker's zone, aggregated to wall-clock (R,) columns
+    (max latency — the zones are served in parallel — and summed energy).
+    """
+    k_walkers = len(walkers)
+    first = start_round == 0
+    pop_trace = getattr(dyn_graph, "pop_avail_trace", None)
+    avail_fn = getattr(dyn_graph, "availability", None)
+
+    if mode == "roundrobin":
+        lead = min(max(k_walkers - start_round, 0), rounds)
+    elif mode == "simultaneous":
+        lead = 1 if first else 0
+    else:
+        raise ValueError(
+            f"mode must be roundrobin|simultaneous, got {mode!r}")
+
+    graphs = [dyn_graph.current()] * lead
+    cur_avail = avail_fn() if avail_fn is not None else None
+    avails_lead = [cur_avail] * lead
+    stepped: list = []
+    trace = None
+    if rounds > lead:
+        stepped = dyn_graph.schedule(rounds - lead, include_current=False)
+        trace = pop_trace() if pop_trace is not None else None
+    graphs = graphs + stepped
+    if cur_avail is None and trace is None:
+        avails = None
+    else:
+        avails = avails_lead + (list(trace) if trace is not None
+                                else [None] * len(stepped))
+
+    step_name = "walk_schedule_batched" if batched_walk else "walk_schedule"
+    rs = np.arange(rounds)
+    if mode == "roundrobin":
+        active_walker = ((start_round + rs) % k_walkers).astype(np.int32)
+        positions = np.empty((rounds,), np.int64)
+        for k, w in enumerate(walkers):
+            mine = np.flatnonzero(active_walker == k)
+            parked = mine[mine < lead]
+            if len(parked):
+                assert w.position is not None, "call reset() first"
+                positions[parked] = w.position
+            moving = mine[mine >= lead]
+            if len(moving):
+                positions[moving] = getattr(w, step_name)(
+                    [graphs[r] for r in moving], advance_first=True)
+        idx, mask, n_i, seeds, active = _plan_rounds(
+            graphs, positions, zone_size, rng, avails)
+        latency = energy = None
+        if price is not None:
+            latency, energy = price(graphs, positions, idx, mask)
+        return FleetZoneSchedule(
+            idx=idx, mask=mask, n_i=n_i, keys=round_keys(seeds),
+            clients=positions.astype(np.int32), active=active,
+            latency_s=latency, energy_j=energy,
+            walker=active_walker,
+            sync=_sync_mask(start_round, rounds, sync_every),
+            mode=mode, n_walkers=k_walkers,
+        )
+
+    # -- simultaneous -----------------------------------------------------
+    positions = np.empty((rounds, k_walkers), np.int64)
+    for k, w in enumerate(walkers):
+        if lead:
+            assert w.position is not None, "call reset() first"
+            positions[0, k] = w.position
+        if rounds > lead:
+            positions[lead:, k] = getattr(w, step_name)(
+                stepped, advance_first=True)
+    z = zone_size
+    idx = np.zeros((rounds, k_walkers, z), np.int32)
+    mask = np.zeros((rounds, k_walkers, z), np.float32)
+    n_i = np.zeros((rounds, k_walkers), np.float32)
+    seeds = np.zeros((rounds,), np.int64)
+    for r in range(rounds):
+        idx[r], mask[r], n_i[r] = plan_fleet_zone_round(
+            graphs[r], positions[r], z, rng,
+            avail=None if avails is None else avails[r])
+        seeds[r] = round_key_seed(rng)
+    active = mask.sum(axis=2).astype(np.int32)          # (R, K)
+    latency = energy = lat_kw = en_kw = None
+    if price_fleet is not None:
+        lat_kw, en_kw = price_fleet(graphs, positions, idx, mask)
+        latency, energy = lat_kw.max(axis=1), en_kw.sum(axis=1)
+    return FleetZoneSchedule(
+        idx=idx, mask=mask, n_i=n_i, keys=round_keys(seeds),
+        clients=positions.astype(np.int32), active=active,
+        latency_s=latency, energy_j=energy,
+        sync=_sync_mask(start_round, rounds, sync_every),
+        latency_s_walkers=lat_kw, energy_j_walkers=en_kw,
+        mode=mode, n_walkers=k_walkers,
+    )
+
+
+def _sync_mask(start_round: int, rounds: int, sync_every: int) -> np.ndarray:
+    """(R,) float32 rendezvous mask: 1.0 after rounds where
+    ``(rnd + 1) % sync_every == 0`` — the eager fleet's trigger."""
+    rs = start_round + np.arange(rounds)
+    return ((rs + 1) % max(int(sync_every), 1) == 0).astype(np.float32)

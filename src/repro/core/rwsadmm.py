@@ -304,6 +304,26 @@ def zone_round_masked(clients: ClientState, y_prev: PyTree, grads: PyTree,
     return ClientState(x=keep, z=keep_z), y_new
 
 
+def multizone_round_masked(clients: ClientState, ys: PyTree, grads: PyTree,
+                           mask: jnp.ndarray, hp: RWSADMMHparams, kappa,
+                           n_total):
+    """K simultaneous zone rounds (fleet mode): :func:`zone_round_masked`
+    vmapped over a leading walker axis.
+
+    clients / grads carry (K, Z, ...) leading axes (K walkers × padded
+    zone), ``ys`` a (K, ...) stacked token pytree, ``mask`` (K, Z). Each
+    walker folds only its own zone's contribution deltas into its own
+    token; the caller guarantees the K zones are disjoint
+    (``markov.plan_fleet_zone_round``), so scattering the per-zone
+    client updates back is conflict-free. This is the pure-jnp oracle
+    for the batched multi-zone Pallas kernel
+    (``kernels.rwsadmm_update.ops.rwsadmm_multizone_fused_update``).
+    """
+    return jax.vmap(
+        lambda c, y, g, m: zone_round_masked(c, y, g, m, hp, kappa, n_total)
+    )(clients, ys, grads, mask)
+
+
 def server_round_done(server: ServerState, y_new: PyTree,
                       hp: RWSADMMHparams) -> ServerState:
     """Advance the server token: store y, decay κ (Algorithm 1)."""

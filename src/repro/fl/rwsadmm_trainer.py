@@ -73,6 +73,9 @@ class RWSADMMTrainer(TrainerBase):
         dp_clip: float | None = None,     # l2 clip on uploaded Δc (DP)
         dp_noise: float = 1.0,            # Gaussian noise multiplier σ
         scenario: ScenarioConfig | str | None = None,
+        batched_walk: bool = False,       # inverse-cdf walk sampling in
+                                          # schedule() (RNG-stream break
+                                          # vs eager; see markov)
         seed: int = 0,
     ):
         super().__init__(model, data, batch_size)
@@ -80,6 +83,7 @@ class RWSADMMTrainer(TrainerBase):
         self.solver = solver
         self.dp_clip = dp_clip
         self.dp_noise = dp_noise
+        self.batched_walk = bool(batched_walk)
         self.inner_steps = int(inner_steps)
         self.inner_lr = float(inner_lr)
         self.zone_size = int(min(zone_size, self.n_clients))
@@ -257,7 +261,7 @@ class RWSADMMTrainer(TrainerBase):
         n_active = int(mask.sum())
         latency_s, energy_j = self._price(graph, i_k, idx, mask)
 
-        key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        key = markov.round_key(rng)
         state, zone_loss = self._round_fn(
             state, jnp.asarray(idx), jnp.asarray(mask),
             jnp.asarray(float(n_i)), key,
@@ -287,16 +291,12 @@ class RWSADMMTrainer(TrainerBase):
         return markov.zone_schedule(
             self.dyn_graph, self.walker, rounds, self.zone_size, rng,
             start_round=start_round, price=self._price_schedule,
+            batched_walk=self.batched_walk,
         )
 
-    def run_chunk(self, state: RWSADMMState, sched: ZoneSchedule,
-                  engine: str = "scan"):
-        """Run a whole schedule chunk as ONE compiled ``lax.scan``.
-
-        No host sync inside the chunk; per-round metrics come back as
-        stacked device arrays. Returns (state, {"train_loss": (R,),
-        "kappa": (R,)}).
-        """
+    def _engine_use_fused(self, engine: str) -> bool:
+        """Validate a scan engine name; True when it takes the fused
+        (Pallas zone kernel) hot path. Shared with the fleet driver."""
         if engine not in SCAN_ENGINES:
             raise ValueError(
                 f"engine must be one of {'|'.join(SCAN_ENGINES)}, "
@@ -309,6 +309,42 @@ class RWSADMMTrainer(TrainerBase):
         if use_fused and self.dp_clip is not None:
             raise ValueError("scan_fused does not support DP uploads; "
                              "use engine='scan'")
+        return use_fused
+
+    def chunk_round_metrics(self, sched: ZoneSchedule, stacked: dict,
+                            start_round: int) -> list[dict]:
+        """Rebuild per-round metric dicts from a finished chunk — the
+        host-side mirror of what :meth:`round` emits, so both engines
+        share one ``round_metrics`` schema (asserted in tests)."""
+        losses = np.asarray(stacked["train_loss"])
+        kappas = np.asarray(stacked["kappa"])
+        out = []
+        for j in range(sched.rounds):
+            n_active = int(sched.active[j])
+            entry = {
+                "round": start_round + j,
+                "client": int(sched.clients[j]),
+                "zone": n_active,
+                "n_i": int(sched.n_i[j]),
+                "train_loss": float(losses[j]),
+                "kappa": float(kappas[j]),
+                "comm_bytes": self.comm_bytes_per_round(n_active),
+            }
+            if sched.latency_s is not None:
+                entry["latency_s"] = float(sched.latency_s[j])
+                entry["energy_j"] = float(sched.energy_j[j])
+            out.append(entry)
+        return out
+
+    def run_chunk(self, state: RWSADMMState, sched: ZoneSchedule,
+                  engine: str = "scan"):
+        """Run a whole schedule chunk as ONE compiled ``lax.scan``.
+
+        No host sync inside the chunk; per-round metrics come back as
+        stacked device arrays. Returns (state, {"train_loss": (R,),
+        "kappa": (R,)}).
+        """
+        use_fused = self._engine_use_fused(engine)
 
         fn = self._chunk_fns.get(engine)
         if fn is None:

@@ -129,10 +129,12 @@ def _run_simulation_scan(
     engine: str,
 ) -> SimulationResult:
     """Chunked scan driver: one compiled executable per eval window."""
-    if not (hasattr(trainer, "schedule") and hasattr(trainer, "run_chunk")):
+    if not (hasattr(trainer, "schedule") and hasattr(trainer, "run_chunk")
+            and hasattr(trainer, "chunk_round_metrics")):
         raise ValueError(
-            f"trainer {trainer.name!r} has no scan driver "
-            "(needs .schedule/.run_chunk); use engine='eager'")
+            f"trainer {trainer.name!r} has no scan driver (needs "
+            ".schedule/.run_chunk/.chunk_round_metrics); "
+            "use engine='eager'")
     rng = np.random.default_rng(seed)
     state = trainer.init_state(jax.random.PRNGKey(seed))
     history: list[dict] = []
@@ -146,24 +148,15 @@ def _run_simulation_scan(
         r_next = min(((r // eval_every) + 1) * eval_every, rounds)
         sched = trainer.schedule(r_next - r, rng, start_round=r)
         state, stacked = trainer.run_chunk(state, sched, engine=engine)
-        losses = np.asarray(stacked["train_loss"])   # the one sync/window
-        kappas = np.asarray(stacked["kappa"])
-        for j in range(sched.rounds):
-            n_active = int(sched.active[j])
-            comm = trainer.comm_bytes_per_round(n_active)
-            total_comm += comm
-            entry = {
-                "round": r + j,
-                "client": int(sched.clients[j]),
-                "zone": n_active,
-                "n_i": int(sched.n_i[j]),
-                "train_loss": float(losses[j]),
-                "kappa": float(kappas[j]),
-                "comm_bytes": comm,
-            }
-            if sched.latency_s is not None:
-                entry["latency_s"] = float(sched.latency_s[j])
-                entry["energy_j"] = float(sched.energy_j[j])
+        # The trainer rebuilds the per-round metric entries (one
+        # device→host sync per window): single-walker and fleet
+        # schedules carry different columns (active walker, K zones,
+        # per-walker pricing), so the schema lives with the trainer.
+        for j, entry in enumerate(trainer.chunk_round_metrics(sched,
+                                                              stacked, r)):
+            entry.setdefault("round", r + j)
+            entry.setdefault("comm_bytes", 0)
+            total_comm += int(entry["comm_bytes"])
             round_metrics.append(entry)
         r = r_next
         if r % eval_every == 0 or r == rounds:

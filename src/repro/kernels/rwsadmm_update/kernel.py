@@ -94,6 +94,67 @@ def _zone_kernel(x_ref, z_ref, y_ref, g_ref, mask_ref, kappa_ref,
     y_out[...] = y + acc / n_total
 
 
+def _multizone_kernel(x_ref, z_ref, y_ref, g_ref, mask_ref, kappa_ref,
+                      x_out, z_out, y_out, *, beta, eps_half, n_total,
+                      zone):
+    """One walker's zone block (leading size-1 walker axis carved out by
+    the grid) — same math as :func:`_zone_kernel` against that walker's
+    own token slice."""
+    y = y_ref[0]
+    kappa = kappa_ref[0]
+    acc = jnp.zeros_like(y)
+    for j in range(zone):          # static unroll over the padded zone
+        m = mask_ref[0, j]
+        x = x_ref[0, j]
+        z = z_ref[0, j]
+        g = g_ref[0, j]
+        s_prev = jnp.sign(y - x)
+        x_new = y - g / beta + s_prev * (z - beta * eps_half) / beta
+        z_new = z + kappa * beta * (x_new - y - eps_half)
+        c_old = x - (z / beta + eps_half) * s_prev
+        c_new = x_new - (z_new / beta + eps_half) * jnp.sign(y - x_new)
+        x_out[0, j] = m * x_new + (1.0 - m) * x
+        z_out[0, j] = m * z_new + (1.0 - m) * z
+        acc = acc + m * (c_new - c_old)
+    y_out[0] = y + acc / n_total
+
+
+def multizone_fused_update_flat(x, z, y, g, mask, kappa, *, beta: float,
+                                eps_half: float, n_total: float,
+                                interpret: bool = True,
+                                block: int = ZONE_BLOCK):
+    """K simultaneous zones in ONE kernel launch (fleet mode).
+
+    x/z/g: (K, Z, N) stacked walker zones; y: (K, N) stacked tokens;
+    mask: (K, Z); kappa: (1,). N a multiple of ``block`` (ops.py pads).
+    Grid (K, N/block): each program serves one walker's parameter block,
+    so the whole fleet wall step is a single HBM pass — K independent
+    :func:`zone_fused_update_flat` launches would re-dispatch per
+    walker. Returns (x⁺ (K, Z, N), z⁺ (K, Z, N), y⁺ (K, N)).
+    """
+    k_walkers, zone, n = x.shape
+    assert n % block == 0, (n, block)
+    grid = (k_walkers, n // block)
+    mspec = pl.BlockSpec((1, zone, block), lambda k, i: (k, 0, i))
+    yspec = pl.BlockSpec((1, block), lambda k, i: (k, i))
+    maskspec = pl.BlockSpec((1, zone), lambda k, i: (k, 0))
+    kspec = pl.BlockSpec((1,), lambda k, i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((k_walkers, zone, n), x.dtype),
+        jax.ShapeDtypeStruct((k_walkers, zone, n), x.dtype),
+        jax.ShapeDtypeStruct((k_walkers, n), x.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_multizone_kernel, beta=beta, eps_half=eps_half,
+                          n_total=n_total, zone=zone),
+        grid=grid,
+        in_specs=[mspec, mspec, yspec, mspec, maskspec, kspec],
+        out_specs=[mspec, mspec, yspec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, z, y, g, mask, kappa)
+
+
 def zone_fused_update_flat(x, z, y, g, mask, kappa, *, beta: float,
                            eps_half: float, n_total: float,
                            interpret: bool = True, block: int = ZONE_BLOCK):

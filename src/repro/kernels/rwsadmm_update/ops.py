@@ -77,3 +77,44 @@ def rwsadmm_zone_fused_update(x, z, y, g, mask, kappa, *, beta: float,
     template = jax.tree_util.tree_map(lambda l: l[0], x)
     unstack = jax.vmap(lambda f: tree_util.unflatten(template, f))
     return (unstack(x_new), unstack(z_new), tree_util.unflatten(y, y_new))
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "eps_half", "n_total",
+                                             "block"))
+def rwsadmm_multizone_fused_update(x, z, y, g, mask, kappa, *, beta: float,
+                                   eps_half: float, n_total: float,
+                                   block: int = kernel.ZONE_BLOCK):
+    """K simultaneous masked zone rounds via one fused-kernel launch.
+
+    x/z/g: pytrees with padded leading ``(K, Z)`` axes (K walkers, each
+    with a stacked active zone); y: stacked ``(K, ...)`` token pytree
+    (one token per walker); mask: (K, Z) float (0 = padding). Returns
+    (x⁺, z⁺, y⁺) with the same layouts — the whole fleet wall step in
+    one HBM pass. Oracle: ``core.rwsadmm.multizone_round_masked``.
+    """
+    flat2 = jax.vmap(jax.vmap(tree_util.flatten))
+    xf = flat2(x)                         # (K, Z, N)
+    zf = flat2(z)
+    gf = flat2(g)
+    yf = jax.vmap(tree_util.flatten)(y)   # (K, N)
+    n = yf.shape[-1]
+    pad = (-n) % block
+    if pad:
+        xf, zf, gf = (jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+                      for a in (xf, zf, gf))
+        yf = jnp.pad(yf, ((0, 0), (0, pad)))
+    kappa_arr = jnp.reshape(jnp.asarray(kappa, yf.dtype), (1,))
+    mask_arr = jnp.asarray(mask, yf.dtype)
+    x_new, z_new, y_new = kernel.multizone_fused_update_flat(
+        xf, zf, yf, gf, mask_arr, kappa_arr, beta=beta, eps_half=eps_half,
+        n_total=n_total, interpret=_interpret(), block=block,
+    )
+    if pad:
+        x_new, z_new = (a[..., :n] for a in (x_new, z_new))
+        y_new = y_new[..., :n]
+    template = jax.tree_util.tree_map(lambda l: l[0, 0], x)
+    unstack2 = jax.vmap(jax.vmap(
+        lambda f: tree_util.unflatten(template, f)))
+    y_template = jax.tree_util.tree_map(lambda l: l[0], y)
+    unstack_y = jax.vmap(lambda f: tree_util.unflatten(y_template, f))
+    return (unstack2(x_new), unstack2(z_new), unstack_y(y_new))

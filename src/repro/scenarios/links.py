@@ -235,6 +235,31 @@ class CommModel:
         mem_mask = np.asarray(mask) * (idx != clients[:, None])
         return self.price_rounds(pos_ik, mem_pos, mem_mask, payload_bytes)
 
+    def price_fleet_schedule(self, graphs, clients: np.ndarray,
+                             idx: np.ndarray, mask: np.ndarray,
+                             payload_bytes: int
+                             ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-walker pricing of a simultaneous-fleet window.
+
+        clients (R, K) walker positions, idx (R, K, Z) / mask (R, K, Z)
+        padded zones. Each walker's zone is an independent short-range
+        exchange, so the walker axis flattens into the round axis and
+        one :meth:`price_schedule` pass prices all R·K zones; returns
+        ((R, K), (R, K)) latency/energy columns for the caller to
+        aggregate (wall latency = max over walkers — the zones are
+        served in parallel — and energy = sum).
+        """
+        clients = np.asarray(clients)
+        rounds, k_walkers = clients.shape
+        graphs_f = [g for g in graphs for _ in range(k_walkers)]
+        lat, en = self.price_schedule(
+            graphs_f, clients.reshape(-1),
+            np.asarray(idx).reshape(rounds * k_walkers, -1),
+            np.asarray(mask).reshape(rounds * k_walkers, -1),
+            payload_bytes)
+        return (lat.reshape(rounds, k_walkers),
+                en.reshape(rounds, k_walkers))
+
     def price_round(self, graph: ClientGraph, i_k: int, idx: np.ndarray,
                     mask: np.ndarray, payload_bytes: int
                     ) -> tuple[float, float]:

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.graph import ClientGraph
+from ..core.graph import ClientGraph, detach_rollout_views
 from .churn import ChurnModel
 from .config import ScenarioConfig, get_scenario_config
 from .links import CommModel, LinkModel
@@ -161,6 +161,14 @@ class Scenario:
             while len(graphs) < rounds:
                 graphs.append(self.step())
                 avails.append(self.avail)
+        # Copy-on-seed: the scenario retains the window's last graphs as
+        # its current state; their arrays/caches are views into the
+        # rollout's (R, n, n)/(R, n, 2) stacks and would pin the whole
+        # window in memory. Detach BEFORE mirroring positions so _pos
+        # references the copy, not the stack.
+        for g in (self._base, self.graph):
+            if g is not None:
+                detach_rollout_views(g)
         self._pos = self._base.positions
         self._avail_trace = (np.stack(avails)
                              if self.churn is not None else None)
@@ -199,6 +207,13 @@ class Scenario:
         (one pass — same math as R ``price_round`` calls)."""
         return self.comm.price_schedule(graphs, clients, idx, mask,
                                         payload_bytes)
+
+    def price_fleet_schedule(self, graphs, clients, idx, mask,
+                             payload_bytes: int):
+        """Per-walker pricing of a simultaneous-fleet window: clients
+        (R, K), idx/mask (R, K, Z) → ((R, K), (R, K)) latency/energy."""
+        return self.comm.price_fleet_schedule(graphs, clients, idx, mask,
+                                              payload_bytes)
 
     def price_star_round(self, members: np.ndarray, payload_bytes: int
                          ) -> tuple[float, float]:

@@ -1,0 +1,348 @@
+"""Compiled fleet driver: K-walker schedules, stacked-token scan chunks,
+and the batched multi-zone kernel must reproduce the eager fleet exactly.
+
+Covers the acceptance bar: run_chunk(engine=scan|scan_fused) trajectory-
+identical to eager for K ∈ {1, 3, 5} across mobility × links × churn
+scenarios, plus the fleet degenerate cases (n_walkers=1 ≡ single-walker
+trainer, sync_every → ∞, walker-order-invariant rendezvous), the fleet
+hitting time, the multi-zone kernel vs its jnp oracle, and the opt-in
+batched walk sampler's seed-stability pin.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import markov, rwsadmm
+from repro.core.graph import DynamicGraph
+from repro.core.markov import RandomWalkServer
+from repro.core.rwsadmm import ClientState, RWSADMMHparams
+from repro.data import make_image_dataset, pathological_split
+from repro.data.loader import build_federated
+from repro.fl.base import to_device_data
+from repro.fl.fleet_trainer import FleetRWSADMMTrainer
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.fl.simulation import run_simulation
+from repro.models.small import get_model
+
+ROUNDS = 13  # chunk split (6, 7) crosses the regen epoch at round 10
+
+
+@pytest.fixture(scope="module")
+def fed():
+    imgs, labels = make_image_dataset(600, seed=0)
+    parts = pathological_split(labels, 10, seed=0)
+    data = to_device_data(build_federated(imgs, labels, parts))
+    model = get_model("mlr", (28, 28, 1))
+    return data, model
+
+
+def make_fleet(fed, n_walkers=3, mode="roundrobin", scenario=None,
+               sync_every=7, **kw):
+    data, model = fed
+    return FleetRWSADMMTrainer(
+        model, data, RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
+        n_walkers=n_walkers, sync_every=sync_every, fleet_mode=mode,
+        zone_size=4, batch_size=20, regen_every=10, solver="closed_form",
+        scenario=scenario, seed=0, **kw)
+
+
+def run_eager(tr, rounds=ROUNDS):
+    rng = np.random.default_rng(0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    metrics = []
+    for r in range(rounds):
+        state, m = tr.round(state, r, rng)
+        metrics.append(m)
+    return state, metrics
+
+
+def run_scan(tr, engine, chunks=(6, 7)):
+    rng = np.random.default_rng(0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    metrics = []
+    r = 0
+    for n in chunks:
+        sched = tr.schedule(n, rng, start_round=r)
+        state, stacked = tr.run_chunk(state, sched, engine=engine)
+        metrics.extend(tr.chunk_round_metrics(sched, stacked, r))
+        r += n
+    return state, metrics
+
+
+def assert_trees_equal(a, b, atol=0.0):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        if atol:
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=atol)
+        else:
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ------------------------------------------------ acceptance: scan≡eager --
+@pytest.mark.parametrize("n_walkers", [1, 3, 5])
+@pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
+def test_fleet_scan_equals_eager(fed, n_walkers, mode):
+    """Bit-identical trajectories (clients, tokens, visited, metrics incl.
+    latency/energy) between the eager fleet and the compiled scan, chunk
+    boundary crossing a regen epoch and a rendezvous."""
+    st_e, me = run_eager(make_fleet(fed, n_walkers, mode))
+    st_s, ms = run_scan(make_fleet(fed, n_walkers, mode), "scan")
+    assert_trees_equal(st_e.base.clients, st_s.base.clients)
+    assert_trees_equal(st_e.tokens, st_s.tokens)
+    np.testing.assert_array_equal(np.asarray(st_e.base.visited),
+                                  np.asarray(st_s.base.visited))
+    assert int(st_s.base.server.round) == ROUNDS
+    for a, b in zip(me, ms):
+        assert set(a) == set(b), (sorted(a), sorted(b))
+        for key in a:
+            assert a[key] == b[key], (key, a[key], b[key])
+
+
+SCENARIOS = ["random_waypoint", "lossy_links", "duty_cycle", "field_trial"]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+@pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
+def test_fleet_scan_equals_eager_under_scenario(fed, scenario, mode):
+    """The whole environment (mobility, link dropouts, churn) is host-side
+    control plane: the compiled fleet must replay the eager fleet under
+    every scenario, availability masks composing with the K zones."""
+    st_e, me = run_eager(make_fleet(fed, 3, mode, scenario))
+    st_s, ms = run_scan(make_fleet(fed, 3, mode, scenario), "scan")
+    assert_trees_equal(st_e.base.clients, st_s.base.clients)
+    assert_trees_equal(st_e.tokens, st_s.tokens)
+    np.testing.assert_array_equal(np.asarray(st_e.base.visited),
+                                  np.asarray(st_s.base.visited))
+    for a, b in zip(me, ms):
+        assert set(a) == set(b)
+        assert a["train_loss"] == b["train_loss"]
+        assert a["latency_s"] == b["latency_s"]
+        assert a["energy_j"] == b["energy_j"]
+        assert a["comm_bytes"] == b["comm_bytes"]
+
+
+@pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
+def test_fleet_scan_fused_matches_eager(fed, mode):
+    """scan_fused (the multi-zone Pallas kernel in simultaneous mode,
+    the masked zone kernel in round-robin) tracks the eager fleet to fp
+    tolerance."""
+    st_e, me = run_eager(make_fleet(fed, 3, mode))
+    st_f, mf = run_scan(make_fleet(fed, 3, mode), "scan_fused",
+                        chunks=(ROUNDS,))
+    assert_trees_equal(st_e.base.clients.x, st_f.base.clients.x, atol=5e-6)
+    assert_trees_equal(st_e.tokens, st_f.tokens, atol=5e-6)
+    np.testing.assert_allclose([m["train_loss"] for m in me],
+                               [m["train_loss"] for m in mf], atol=1e-4)
+
+
+def test_fleet_run_simulation_engines_agree(fed):
+    """run_simulation(engine='scan') accepts the fleet and reproduces the
+    eager history, totals, and per-round schema."""
+    def mk():
+        return make_fleet(fed, 3, "roundrobin", "field_trial")
+
+    res_e = run_simulation(mk(), rounds=12, eval_every=6, seed=0)
+    res_s = run_simulation(mk(), rounds=12, eval_every=6, seed=0,
+                           engine="scan")
+    assert [h["round"] for h in res_e.history] \
+        == [h["round"] for h in res_s.history]
+    for he, hs in zip(res_e.history, res_s.history):
+        np.testing.assert_allclose(he["acc_personalized"],
+                                   hs["acc_personalized"], atol=1e-6)
+    assert res_e.total_comm_bytes == res_s.total_comm_bytes
+    assert res_e.total_latency_s == res_s.total_latency_s
+    assert res_e.total_energy_j == res_s.total_energy_j
+    for a, b in zip(res_e.round_metrics, res_s.round_metrics):
+        assert set(a) == set(b)
+        assert a["walker"] == b["walker"]
+        assert a["client"] == b["client"]
+
+
+# ------------------------------------------------- degenerate cases ------
+def test_single_walker_fleet_matches_single_trainer(fed):
+    """n_walkers=1 degenerates to the single-walker RWSADMM trajectory
+    exactly: same walk stream (walker 0 reuses seed+1), same zone plans,
+    same key stream (one shared derivation helper), same updates."""
+    data, model = fed
+    hp = RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5)
+    single = RWSADMMTrainer(model, data, hp, zone_size=4, batch_size=20,
+                            regen_every=10, solver="closed_form", seed=0)
+    fleet = make_fleet(fed, n_walkers=1, sync_every=10**9)
+    rng_s, rng_f = np.random.default_rng(0), np.random.default_rng(0)
+    st_s = single.init_state(jax.random.PRNGKey(0))
+    st_f = fleet.init_state(jax.random.PRNGKey(0))
+    for r in range(15):
+        st_s, m_s = single.round(st_s, r, rng_s)
+        st_f, m_f = fleet.round(st_f, r, rng_f)
+        assert m_s["client"] == m_f["client"]
+        assert m_s["train_loss"] == m_f["train_loss"]
+    assert_trees_equal(st_s.clients, st_f.base.clients)
+    assert_trees_equal(st_s.server.y,
+                       jax.tree_util.tree_map(lambda t: t[0], st_f.tokens))
+    np.testing.assert_array_equal(np.asarray(st_s.visited),
+                                  np.asarray(st_f.base.visited))
+
+
+def test_sync_every_inf_gives_independent_tokens(fed):
+    """sync_every → ∞: no rendezvous ever fires, so any two no-sync
+    horizons agree (the trajectory is sync-free) while a syncing fleet
+    diverges from it; the walkers' tokens stay distinct streams."""
+    st_a, _ = run_eager(make_fleet(fed, 3, sync_every=10**9))
+    st_b, _ = run_eager(make_fleet(fed, 3, sync_every=ROUNDS + 5))
+    st_c, _ = run_eager(make_fleet(fed, 3, sync_every=5))
+    assert_trees_equal(st_a.tokens, st_b.tokens)
+    leaves_a = np.concatenate([np.asarray(l).reshape(3, -1)
+                               for l in jax.tree_util.tree_leaves(
+                                   st_a.tokens)], axis=1)
+    leaves_c = np.concatenate([np.asarray(l).reshape(3, -1)
+                               for l in jax.tree_util.tree_leaves(
+                                   st_c.tokens)], axis=1)
+    # without sync the K token streams are genuinely distinct...
+    assert not np.allclose(leaves_a[0], leaves_a[1])
+    # ...and differ from the rendezvousing fleet's (which just averaged
+    # at round 10, so its walkers still agree more than the free-running
+    # fleet's do).
+    assert not np.allclose(leaves_a, leaves_c)
+
+
+def test_rendezvous_mean_is_walker_permutation_invariant(fed):
+    """The rendezvous operator (jnp.mean over the stacked walker axis)
+    must not depend on walker order."""
+    from repro.fl.fleet_trainer import _rendezvous
+
+    st, _ = run_eager(make_fleet(fed, 3, sync_every=10**9), rounds=9)
+    sync = jnp.asarray(1.0)
+    for perm in ([1, 2, 0], [2, 0, 1], [2, 1, 0]):
+        permuted = jax.tree_util.tree_map(
+            lambda t: t[jnp.asarray(perm)], st.tokens)
+        a = _rendezvous(st.tokens, sync)
+        b = _rendezvous(permuted, sync)
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-6)
+
+
+def test_fleet_hitting_time_covers_faster(fed):
+    """The union-coverage wall clock drops with K, and the scan schedule
+    (which batch-steps the walkers) reports the same hitting time as the
+    eager driver (identical per-walker streams)."""
+    def coverage(n_walkers, driver):
+        tr = make_fleet(fed, n_walkers, "simultaneous")
+        rng = np.random.default_rng(0)
+        if driver == "scan":
+            tr.schedule(200, rng, start_round=0)
+        else:
+            state = tr.init_state(jax.random.PRNGKey(0))
+            for r in range(200):
+                state, _ = tr.round(state, r, rng)
+        return tr.fleet_hitting_time()
+
+    t1 = coverage(1, "scan")
+    t3 = coverage(3, "scan")
+    assert t1 is not None and t3 is not None and t3 < t1
+    assert coverage(3, "eager") == t3
+
+
+# --------------------------------------------- multi-zone kernel/oracle --
+def test_multizone_kernel_matches_oracle():
+    from repro.kernels.rwsadmm_update.ops import (
+        rwsadmm_multizone_fused_update,
+    )
+
+    hp = RWSADMMHparams(beta=4.0, kappa=0.02, epsilon=1e-4)
+    K, Z = 3, 5
+    template = {"w": jnp.zeros((K, Z, 37, 5)), "b": jnp.zeros((K, Z, 11))}
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    mk = lambda k: jax.tree_util.tree_map(
+        lambda l: jax.random.normal(jax.random.fold_in(k, l.ndim),
+                                    l.shape), template)
+    x, z, g = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    y = jax.tree_util.tree_map(lambda l: l[:, 0] * 0.5, mk(ks[3]))
+    mask = jnp.asarray(
+        np.random.default_rng(0).integers(0, 2, (K, Z)).astype(np.float32))
+
+    ref_c, ref_y = rwsadmm.multizone_round_masked(
+        ClientState(x=x, z=z), y, g, mask, hp, 0.02, n_total=9.0)
+    xk, zk, yk = rwsadmm_multizone_fused_update(
+        x, z, y, g, mask, 0.02, beta=hp.beta, eps_half=hp.eps_half,
+        n_total=9.0)
+    assert_trees_equal(ref_c.x, xk, atol=1e-6)
+    assert_trees_equal(ref_c.z, zk, atol=1e-6)
+    assert_trees_equal(ref_y, yk, atol=1e-6)
+    # masked-out slots pass x/z through untouched
+    keep = np.asarray(mask) == 0.0
+    np.testing.assert_array_equal(np.asarray(xk["b"])[keep],
+                                  np.asarray(x["b"])[keep])
+
+
+def test_plan_fleet_zone_round_disjoint_and_deterministic():
+    """K zones are pairwise disjoint (lowest walker index wins conflicts)
+    and the plan replays draw-for-draw from the same rng state."""
+    g = DynamicGraph(20, min_degree=6, seed=3).current()
+    positions = np.asarray([4, 4, 11])   # walkers 0 and 1 collide
+    idx1, mask1, n1 = markov.plan_fleet_zone_round(
+        g, positions, 4, np.random.default_rng(5))
+    idx2, mask2, n2 = markov.plan_fleet_zone_round(
+        g, positions, 4, np.random.default_rng(5))
+    np.testing.assert_array_equal(idx1, idx2)
+    np.testing.assert_array_equal(mask1, mask2)
+    live = idx1[mask1 > 0]
+    assert len(live) == len(set(live.tolist()))   # disjoint across zones
+    # walker 0 owns the contested position; walker 1 does not serve it
+    assert 4 in idx1[0][mask1[0] > 0]
+    assert 4 not in idx1[1][mask1[1] > 0]
+
+
+# --------------------------------------- batched walk sampling (opt-in) --
+def test_batched_walk_seed_stability_pin():
+    """The inverse-CDF sampler is an RNG-stream break from step();
+    pin its stream for a fixed seed so it can never drift silently."""
+    g = DynamicGraph(12, min_degree=4, seed=7)
+    w = RandomWalkServer(seed=11)
+    w.reset(g.current())
+    graphs = g.schedule(10, include_current=True)
+    batch = w.walk_schedule_batched(graphs, advance_first=False)
+    assert batch[0] == w.history[0]
+    np.testing.assert_array_equal(
+        batch, np.asarray([1, 5, 7, 0, 2, 9, 0, 2, 9, 7]))
+
+
+def test_batched_walk_chunks_compose():
+    """random(a) then random(b) equals random(a+b) for PCG64: chunked
+    batched-walk schedules replay one long schedule draw-for-draw."""
+    def walk(chunks):
+        g = DynamicGraph(15, min_degree=4, regen_every=5, seed=2)
+        w = RandomWalkServer(seed=9)
+        w.reset(g.current())
+        out = []
+        first = True
+        for n in chunks:
+            graphs = g.schedule(n, include_current=first)
+            out.append(w.walk_schedule_batched(graphs,
+                                               advance_first=not first))
+            first = False
+        return np.concatenate(out)
+
+    np.testing.assert_array_equal(walk([12]), walk([5, 7]))
+
+
+def test_batched_walk_trainer_flag_round_trips(fed):
+    """batched_walk=True flows trainer → schedule → walker; scan chunks
+    still compose with themselves (self-consistent stream)."""
+    def run(chunks):
+        tr = make_fleet(fed, 3, batched_walk=True)
+        rng = np.random.default_rng(0)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        losses = []
+        r = 0
+        for n in chunks:
+            sched = tr.schedule(n, rng, start_round=r)
+            state, stacked = tr.run_chunk(state, sched, engine="scan")
+            losses.extend(np.asarray(stacked["train_loss"]).tolist())
+            r += n
+        return np.asarray(losses)
+
+    np.testing.assert_array_equal(run([12]), run([5, 7]))
