@@ -1,6 +1,10 @@
-"""Shared benchmark fixtures: datasets, trainer builders, CSV helpers."""
+"""Shared benchmark fixtures: datasets, trainer builders, CSV/JSON
+helpers, and the large-n control-plane probe."""
 from __future__ import annotations
 
+import json
+import os
+import resource
 import time
 
 import numpy as np
@@ -77,3 +81,137 @@ def timed(fn, *args, **kw):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable trajectory: BENCH_scaling.json at the repo root.
+# ---------------------------------------------------------------------------
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_scaling.json")
+
+
+def reset_peak_rss() -> None:
+    """Reset the kernel's peak-RSS watermark (Linux ``clear_refs``) so
+    each benchmark phase records ITS OWN peak instead of inheriting the
+    process-wide high-water mark of whatever ran before it in the same
+    harness process. Best-effort: silently a no-op where unsupported
+    (then peaks are monotone across phases — still an upper bound)."""
+    try:
+        with open("/proc/self/clear_refs", "w") as f:
+            f.write("5")
+    except OSError:
+        pass
+
+
+_run_peak_mb = 0.0
+
+
+def peak_rss_mb() -> float:
+    """Peak resident set in MB since the last :func:`reset_peak_rss`
+    (VmHWM on Linux; falls back to ``ru_maxrss``, which is KB on Linux
+    and bytes on macOS) — the peak-memory column of the scaling
+    benchmarks. Every observation also feeds :func:`run_peak_rss_mb`."""
+    global _run_peak_mb
+    mb = None
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    mb = int(line.split()[1]) / 1024.0
+                    break
+    except OSError:
+        pass
+    if mb is None:
+        import sys
+
+        ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        mb = ru / (1024.0 ** 2) if sys.platform == "darwin" \
+            else ru / 1024.0
+    _run_peak_mb = max(_run_peak_mb, mb)
+    return mb
+
+
+def run_peak_rss_mb() -> float:
+    """Max over every :func:`peak_rss_mb` observation this process —
+    what a memory GATE should assert on: per-phase watermark resets
+    make :func:`peak_rss_mb` report only the most recent phase, so
+    asserting on the last reading would let an earlier phase's blow-up
+    slip through."""
+    return _run_peak_mb
+
+
+def bench_row(name: str, *, n: int, engine: str, us_per_round: float,
+              k: int = 1, **extra) -> dict:
+    """One BENCH_scaling.json record (schema: name, n, K, engine,
+    us_per_round, peak_rss_mb + free-form extras)."""
+    row = {"name": name, "n": int(n), "K": int(k), "engine": engine,
+           "us_per_round": round(float(us_per_round), 1),
+           "peak_rss_mb": round(peak_rss_mb(), 1)}
+    row.update(extra)
+    return row
+
+
+def write_bench_rows(rows: list[dict], path: str | None = None) -> str:
+    """Merge rows into ``BENCH_scaling.json`` keyed by ``name`` (so
+    partial benchmark runs update their columns without clobbering the
+    rest) and return the path. The CSV on stdout stays the human view;
+    this file is the diffable perf trajectory across PRs."""
+    path = path or BENCH_JSON
+    merged: dict[str, dict] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = {r["name"]: r for r in json.load(f)}
+    for r in rows:
+        merged[r["name"]] = r
+    with open(path, "w") as f:
+        json.dump([merged[k] for k in sorted(merged)], f, indent=1)
+        f.write("\n")
+    return path
+
+
+def control_plane_rate(n: int, rounds: int = 64, *,
+                       mobility: str = "gauss_markov",
+                       backend: str = "sparse", dropout: bool = True,
+                       k_max: int = 32, zone_size: int = 8,
+                       target_degree: float = 12.0,
+                       rollout_chunk: int | None = 32,
+                       seed: int = 0) -> float:
+    """Seconds/round of pure control-plane work at scale: scenario
+    rollout (mobility + link dropouts + churn-free), random-walk
+    stepping, zone planning, key derivation, and wireless pricing — no
+    training rounds. The radio range shrinks with n so the expected
+    degree stays ~``target_degree`` (the physical regime the sparse
+    backend targets: local radios, growing fleets)."""
+    import dataclasses
+
+    from repro.core import markov
+    from repro.core.markov import RandomWalkServer
+    from repro.scenarios import (
+        LinkConfig,
+        MobilityConfig,
+        Scenario,
+        ScenarioConfig,
+    )
+
+    reset_peak_rss()
+    radio = float(np.sqrt(target_degree / (np.pi * n)))
+    cfg = ScenarioConfig(
+        name=f"bench_{mobility}_{backend}",
+        mobility=MobilityConfig(model=mobility, radio_range=radio),
+        links=LinkConfig(enabled=dropout, dropout=dropout),
+        graph_backend=backend, neighbor_k_max=k_max)
+    if rollout_chunk is not None:
+        cfg = dataclasses.replace(cfg, rollout_chunk=rollout_chunk)
+    scenario = Scenario(n, cfg, seed=seed)
+    walker = RandomWalkServer(seed=seed + 1)
+    walker.reset(scenario.current())
+    rng = np.random.default_rng(seed)
+
+    def price(graphs, clients, idx, mask):
+        return scenario.price_schedule(graphs, clients, idx, mask, 2048)
+
+    t0 = time.perf_counter()
+    markov.zone_schedule(scenario, walker, rounds, zone_size, rng,
+                         price=price)
+    return (time.perf_counter() - t0) / rounds

@@ -97,12 +97,27 @@ def splice(md_path: str, marker: str, content: str):
         f.write(text)
 
 
-def main():
+def run() -> None:
+    """Splice if there is anything to splice. A fresh checkout has
+    neither dry-run records nor an EXPERIMENTS.md — previously this
+    crashed on open(), which is why ``benchmarks.run`` could not even
+    register the module; skipping cleanly keeps the harness green while
+    still updating the tables whenever records exist."""
     recs = load_records()
+    if not os.path.exists("EXPERIMENTS.md"):
+        print("# fill_experiments: no EXPERIMENTS.md here, skipping")
+        return
+    if not recs:
+        print("# fill_experiments: no results/dryrun records, skipping")
+        return
     print(f"{len(recs)} dry-run records")
     splice("EXPERIMENTS.md", "DRYRUN_TABLE", dryrun_table(recs))
     splice("EXPERIMENTS.md", "ROOFLINE_TABLE", roofline_table(recs))
     print("EXPERIMENTS.md updated")
+
+
+def main():
+    run()
 
 
 if __name__ == "__main__":

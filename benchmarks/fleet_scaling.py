@@ -19,6 +19,10 @@ to a single walker's, the ~K× coverage claim. Emits CSV rows:
   fleet_scaling/{mode}/n{N}/K{K}/{engine},{us_per_round},rounds_per_s=...
   fleet_scaling/{mode}/n{N}/K{K}/speedup,...,scan_vs_eager=...x
 
+Rows are also written machine-readably (name, n, K, engine,
+us_per_round, peak_rss_mb) into BENCH_scaling.json at the repo root —
+the diffable perf trajectory across PRs.
+
 Smoke (CI, < 2 min):  python -m benchmarks.fleet_scaling --smoke
 Full:                 python -m benchmarks.fleet_scaling
 (full run covers the acceptance bar: scan ≥ 5× eager at n=100, K=3.)
@@ -37,7 +41,13 @@ from repro.fl.fleet_trainer import FleetRWSADMMTrainer
 from repro.fl.rwsadmm_trainer import ENGINES
 from repro.models.small import get_model
 
-from .common import emit, synthetic_fed
+from .common import (
+    bench_row,
+    emit,
+    reset_peak_rss,
+    synthetic_fed,
+    write_bench_rows,
+)
 
 
 def make_fleet(n_clients: int, k: int, mode: str,
@@ -98,22 +108,28 @@ def hitting_times(n_clients: int, walkers=(1, 3, 5),
 
 def run(rounds: int, clients, walkers, modes) -> dict:
     results: dict = {}
+    json_rows = []
     for mode in modes:
         for n in clients:
             for k in walkers:
                 per_engine: dict = {}
                 for engine in ENGINES:
+                    reset_peak_rss()
                     trainer = make_fleet(n, k, mode)
                     rps = bench_engine(trainer, engine, rounds)
                     per_engine[engine] = rps
-                    emit(f"fleet_scaling/{mode}/n{n}/K{k}/{engine}",
-                         1e6 / rps, f"rounds_per_s={rps:.1f}")
+                    name = f"fleet_scaling/{mode}/n{n}/K{k}/{engine}"
+                    emit(name, 1e6 / rps, f"rounds_per_s={rps:.1f}")
+                    json_rows.append(bench_row(
+                        name, n=n, k=k, engine=engine,
+                        us_per_round=1e6 / rps, mode=mode))
                 speed = per_engine["scan"] / per_engine["eager"]
                 speed_f = per_engine["scan_fused"] / per_engine["eager"]
                 emit(f"fleet_scaling/{mode}/n{n}/K{k}/speedup", 0.0,
                      f"scan_vs_eager={speed:.1f}x "
                      f"scan_fused_vs_eager={speed_f:.1f}x")
                 results[(mode, n, k)] = per_engine
+    write_bench_rows(json_rows)
     return results
 
 

@@ -31,6 +31,33 @@ def terms(rec):
                               "step_time_s")}
 
 
+def run_smoke(pair: str = "tinyllama-1.1b:train_4k",
+              timeout_s: int = 900) -> None:
+    """Harness entry (``benchmarks.run``): one dry-run pair in a FRESH
+    subprocess. The 512-host-device XLA flag must be set before the JAX
+    backend initializes, and by the time the harness reaches this job
+    earlier benchmarks have long since initialized it — so in-process
+    invocation can never see the dry-run mesh."""
+    import subprocess
+    import sys
+
+    from .common import REPO_ROOT, emit
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.perf_iterations",
+         "--pair", pair, "--skip-baseline", "--tag", "smoke"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+        timeout=timeout_s)
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"perf_iterations smoke failed for {pair}:\n{res.stderr}")
+    emit(f"perf_iterations/{pair}", 0.0, "dryrun=ok")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", required=True, help="arch:shape")

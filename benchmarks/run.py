@@ -21,11 +21,14 @@ def main() -> None:
         ablations,
         comm_cost,
         convergence,
+        fill_experiments,
+        fleet_scaling,
         hyperparam,
         kernels_bench,
         mixing,
         roofline_report,
         scan_scaling,
+        scenario_sweep,
         table1,
         table2_scaling,
     )
@@ -35,6 +38,19 @@ def main() -> None:
         ("kernels", lambda: kernels_bench.run()),
         ("scan_scaling",
          lambda: scan_scaling.run(rounds=min(rounds, 200))),
+        ("scan_scaling_large_n",
+         # Sparse-backend control plane at n ∈ {2k, 10k, 50k} (the dense
+         # reference rides along at the smallest n).
+         lambda: scan_scaling.control_plane(rounds=min(rounds, 64))),
+        ("scenario_sweep",
+         # Smoke budget: the full grid with short accuracy runs; the
+         # speed/sensitivity/large-n sweeps stay in the module's own
+         # full mode.
+         lambda: scenario_sweep.run(n_clients=20, rounds=min(rounds, 30),
+                                    speedup_rounds=150, smoke=True)),
+        ("fleet_scaling",
+         lambda: fleet_scaling.run(rounds=min(rounds, 40), clients=(40,),
+                                   walkers=(1, 3), modes=("roundrobin",))),
         ("convergence", lambda: convergence.run(rounds=rounds)),
         ("table1", lambda: table1.run(rounds=max(rounds, 120))),
         ("table2", lambda: table2_scaling.run()),
@@ -42,6 +58,15 @@ def main() -> None:
         ("comm_cost", lambda: comm_cost.run(rounds=max(rounds, 150))),
         ("ablations", lambda: ablations.run(rounds=min(rounds, 80))),
         ("roofline", lambda: roofline_report.run()),
+        ("perf_iterations",
+         # Imported lazily AND run in a fresh subprocess: the module
+         # sets the 512-virtual-device XLA flag at import time, which
+         # must neither leak into this process's env before the other
+         # jobs initialize JAX nor arrive after backend init (where it
+         # would be ignored).
+         lambda: __import__("benchmarks.perf_iterations",
+                            fromlist=["run_smoke"]).run_smoke()),
+        ("fill_experiments", lambda: fill_experiments.run()),
     ]
     failures = []
     for name, job in jobs:

@@ -16,13 +16,28 @@ end-to-end cost per chunk. Emits CSV rows:
   scan_scaling/n{N}/{engine},{us_per_round},rounds_per_s=...
   scan_scaling/n{N}/speedup,...,scan_vs_eager=...x
 
+A second, large-n section measures the **control plane alone** (the
+64-round mobility + link-dropout rollout, walk, zone planning, pricing)
+at n ∈ {2000, 10000, 50000} on the sparse neighbor-list backend — the
+O(n·k) lane that unblocked these sizes (the dense lane is measured at
+the smallest n for reference; beyond that it is memory-blocked):
+
+  scan_scaling/control_plane/n{N}/{backend},{us_per_round},peak_rss_mb=...
+
+Both sections also write machine-readable rows (name, n, K, engine,
+us_per_round, peak_rss_mb) into BENCH_scaling.json at the repo root, so
+perf regressions are diffable across PRs.
+
 Smoke (CI, <2 min):  python -m benchmarks.scan_scaling --rounds 30 \
-    --clients 20
+    --clients 20 --no-control-plane
+Sparse smoke (CI):   python -m benchmarks.scan_scaling --control-plane \
+    --cp-clients 10000 --assert-rss-mb 1024
 Full:                python -m benchmarks.scan_scaling
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -32,7 +47,16 @@ from repro.core.rwsadmm import RWSADMMHparams
 from repro.fl.rwsadmm_trainer import ENGINES, RWSADMMTrainer
 from repro.models.small import get_model
 
-from .common import emit, synthetic_fed
+from .common import (
+    bench_row,
+    control_plane_rate,
+    emit,
+    peak_rss_mb,
+    reset_peak_rss,
+    run_peak_rss_mb,
+    synthetic_fed,
+    write_bench_rows,
+)
 
 
 def make_trainer(n_clients: int, seed: int = 0) -> RWSADMMTrainer:
@@ -74,20 +98,55 @@ def bench_engine(trainer: RWSADMMTrainer, engine: str, rounds: int) -> float:
 def run(rounds: int = 200, clients=(20, 100, 500)) -> dict:
     """Prints CSV rows; returns {n: {engine: rounds_per_s}}."""
     results: dict = {}
+    json_rows = []
     for n in clients:
         per_engine: dict = {}
         for engine in ENGINES:
+            reset_peak_rss()
             trainer = make_trainer(n)
             rps = bench_engine(trainer, engine, rounds)
             per_engine[engine] = rps
             emit(f"scan_scaling/n{n}/{engine}", 1e6 / rps,
                  f"rounds_per_s={rps:.1f}")
+            json_rows.append(bench_row(
+                f"scan_scaling/n{n}/{engine}", n=n, engine=engine,
+                us_per_round=1e6 / rps))
         speed = per_engine["scan"] / per_engine["eager"]
         speed_f = per_engine["scan_fused"] / per_engine["eager"]
         emit(f"scan_scaling/n{n}/speedup", 0.0,
              f"scan_vs_eager={speed:.1f}x "
              f"scan_fused_vs_eager={speed_f:.1f}x")
         results[n] = per_engine
+    write_bench_rows(json_rows)
+    return results
+
+
+def control_plane(clients=(2000, 10000, 50000), rounds: int = 64,
+                  dense_reference: bool = True) -> dict:
+    """Large-n control-plane columns on the sparse neighbor-list
+    backend (+ a dense reference at the smallest n, chunked so its
+    (R, n, n) stacks stay bounded). Returns {(n, backend): s_per_round}
+    and appends rows to BENCH_scaling.json."""
+    results: dict = {}
+    json_rows = []
+    todo = [(n, "sparse") for n in clients]
+    if dense_reference and clients:
+        # Dense last: its multi-GB footprint stays out of the sparse
+        # rows even where the per-phase watermark reset (clear_refs)
+        # is unavailable and peaks are monotone across phases.
+        todo.append((min(clients), "dense"))
+    for n, backend in todo:
+        kw = {"rollout_chunk": 8} if backend == "dense" else {}
+        sec = control_plane_rate(n, rounds=rounds, backend=backend, **kw)
+        name = f"scan_scaling/control_plane/n{n}/{backend}"
+        emit(name, sec * 1e6,
+             f"rounds_per_s={1.0 / sec:.1f} "
+             f"peak_rss_mb={peak_rss_mb():.0f}")
+        json_rows.append(bench_row(name, n=n, engine=backend,
+                                   us_per_round=sec * 1e6,
+                                   rounds=rounds))
+        results[(n, backend)] = sec
+    write_bench_rows(json_rows)
     return results
 
 
@@ -97,9 +156,38 @@ def main() -> None:
                     help="timed rounds per engine (after compile warmup)")
     ap.add_argument("--clients", type=int, nargs="+",
                     default=[20, 100, 500])
+    ap.add_argument("--control-plane", action="store_true",
+                    help="run ONLY the large-n control-plane columns")
+    ap.add_argument("--no-control-plane", action="store_true",
+                    help="skip the large-n control-plane columns")
+    ap.add_argument("--cp-clients", type=int, nargs="+",
+                    default=[2000, 10000, 50000],
+                    help="control-plane client counts")
+    ap.add_argument("--cp-rounds", type=int, default=64,
+                    help="control-plane rollout window")
+    ap.add_argument("--assert-rss-mb", type=float, default=None,
+                    help="exit nonzero if peak RSS exceeds this (the "
+                    "sparse-backend CI memory gate)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(rounds=args.rounds, clients=tuple(args.clients))
+    if not args.control_plane:
+        run(rounds=args.rounds, clients=tuple(args.clients))
+    if args.control_plane or not args.no_control_plane:
+        control_plane(clients=tuple(args.cp_clients),
+                      rounds=args.cp_rounds,
+                      dense_reference=not args.control_plane)
+    if args.assert_rss_mb is not None:
+        # Gate on the max over every measured phase, not the most
+        # recent one (phases reset the kernel watermark) — and note the
+        # dense reference phase alone needs several GB, so the gate is
+        # meant for --control-plane runs (which skip it).
+        peak_rss_mb()
+        rss = run_peak_rss_mb()
+        if rss > args.assert_rss_mb:
+            print(f"FAIL: peak RSS {rss:.0f} MB > "
+                  f"{args.assert_rss_mb:.0f} MB", file=sys.stderr)
+            sys.exit(1)
+        print(f"# peak RSS {rss:.0f} MB <= {args.assert_rss_mb:.0f} MB")
 
 
 if __name__ == "__main__":

@@ -39,7 +39,14 @@ from repro.scenarios import (
     get_scenario_config,
 )
 
-from .common import emit, synthetic_fed
+from .common import (
+    bench_row,
+    control_plane_rate,
+    emit,
+    peak_rss_mb,
+    synthetic_fed,
+    write_bench_rows,
+)
 
 MOBILITY_MODELS = ("static_regen", "random_waypoint", "gauss_markov")
 
@@ -200,21 +207,53 @@ def run(n_clients: int = 20, rounds: int = 150, speedup_rounds: int = 200,
     return rows
 
 
+def large_n(rounds: int = 64) -> list[dict]:
+    """Large-n scenario columns on the sparse neighbor-list backend:
+    the full mobility × dropout grid at n=2000 (control-plane only —
+    the dense lane is memory-blocked here), gauss_markov at n=10000 and
+    n=50000 for the scaling tail. Appends rows to BENCH_scaling.json."""
+    cells = [(2000, model, drop) for model in MOBILITY_MODELS
+             for drop in (False, True)]
+    cells += [(10000, "gauss_markov", True), (50000, "gauss_markov", True)]
+    json_rows = []
+    for n, model, drop in cells:
+        sec = control_plane_rate(n, rounds=rounds, mobility=model,
+                                 dropout=drop)
+        name = (f"scenario_sweep/large_n/"
+                f"{model}{'+drop' if drop else ''}/n{n}")
+        emit(name, sec * 1e6,
+             f"rounds_per_s={1.0 / sec:.1f} "
+             f"peak_rss_mb={peak_rss_mb():.0f}")
+        json_rows.append(bench_row(name, n=n, engine="sparse",
+                                   us_per_round=sec * 1e6,
+                                   mobility=model, dropout=int(drop)))
+    write_bench_rows(json_rows)
+    return json_rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI budget: fewer rounds, no speed/sens sweeps")
+                    help="CI budget: fewer rounds, no speed/sens/large-n "
+                    "sweeps")
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--large-n", action="store_true",
+                    help="run ONLY the sparse-backend large-n columns")
     args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.large_n:
+        large_n()
+        return
     rounds = args.rounds or (30 if args.smoke else 150)
     # Speedup windows shorter than ~100 rounds are dominated by
     # per-chunk fixed costs and box noise; keep them longer than the
     # accuracy runs even in smoke mode.
     speedup_rounds = 150 if args.smoke else 300
-    print("name,us_per_call,derived")
     run(n_clients=args.clients, rounds=rounds,
         speedup_rounds=speedup_rounds, smoke=args.smoke)
+    if not args.smoke:
+        large_n()
 
 
 if __name__ == "__main__":

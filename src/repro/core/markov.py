@@ -19,7 +19,8 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from .graph import ClientGraph
+from . import graph as graph_mod
+from .graph import ClientGraph, NeighborGraph
 
 
 def degree_transition_matrix(graph: ClientGraph) -> np.ndarray:
@@ -150,10 +151,14 @@ class RandomWalkServer:
         if self._matrix_cache is not None \
                 and self._matrix_cache[0]() is graph:
             return self._matrix_cache[1]
+        # Diagnostics-only densification for sparse graphs: the walking
+        # hot paths (step / walk_schedule*) never come through here for
+        # a NeighborGraph — they sample O(deg) rows directly.
+        g = graph.to_dense() if isinstance(graph, NeighborGraph) else graph
         if self.transition == "degree":
-            p = degree_transition_matrix(graph)
+            p = degree_transition_matrix(g)
         elif self.transition == "metropolis":
-            p = metropolis_transition_matrix(graph)
+            p = metropolis_transition_matrix(g)
         else:
             raise ValueError(f"unknown transition kind {self.transition!r}")
         self._matrix_cache = (weakref.ref(graph), p)
@@ -179,18 +184,77 @@ class RandomWalkServer:
         if self._matrix_cache is not None \
                 and self._matrix_cache[0]() is graph:
             return self._matrix_cache[1][i]
+        if isinstance(graph, NeighborGraph):
+            cands, probs = self._sparse_row(graph, i)
+            row = np.zeros(graph.n)
+            row[cands] = probs
+            return row
         if self.transition == "degree":
             row = graph.adjacency[i].astype(np.float64)
             return row / max(row.sum(), 1.0)
         return self.matrix(graph)[i]
 
+    def _sparse_row(self, graph: NeighborGraph, i: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """(candidates, probs): the nonzero support of row i of P(k), in
+        ascending client order, for a neighbor-list graph — O(deg) for
+        the degree chain instead of the dense row's O(n).
+
+        The floats match the dense row exactly: the degree chain divides
+        by the same degree, and the Metropolis self-loop scatters the
+        neighbor masses into a length-n row first so ``1 − row.sum()``
+        reduces with the same pairwise summation the dense matrix row
+        uses. Together with the choice emulation in :meth:`step` this
+        makes sparse walks replay dense walks draw-for-draw (pinned in
+        ``tests/test_sparse_backend.py``).
+        """
+        if self.transition == "degree":
+            nbrs = graph.neighbors(i)
+            return nbrs, np.full(len(nbrs), 1.0) / max(float(len(nbrs)),
+                                                       1.0)
+        if self.transition != "metropolis":
+            raise ValueError(f"unknown transition kind {self.transition!r}")
+        nbrs = graph.neighbors(i)
+        # Only deg(i) and deg(j) for j ~ i are needed — O(deg²) worst
+        # case, not the full (n, k_cap) mask reduction. The values are
+        # integer-valued float64 divisions, so they equal the dense
+        # matrix's elementwise 1/deg floats exactly.
+        deg_i = np.float64(len(nbrs))
+        deg_nb = graph.nbr_mask[nbrs].sum(axis=1).astype(np.float64)
+        inv_i = np.where(deg_i > 0, 1.0 / np.maximum(deg_i, 1.0), 0.0)
+        inv_nb = np.where(deg_nb > 0, 1.0 / np.maximum(deg_nb, 1.0), 0.0)
+        # Scatter into a length-n row so the self-loop mass reduces
+        # with the same pairwise summation the dense matrix row uses.
+        row = np.zeros(graph.n)
+        row[nbrs] = np.minimum(inv_i, inv_nb)
+        self_mass = 1.0 - row.sum()
+        row[i] = self_mass
+        cands = np.insert(nbrs, np.searchsorted(nbrs, i), i)
+        return cands, row[cands]
+
+    def _sample_sparse(self, graph: NeighborGraph, u: float) -> int:
+        """Map one uniform through row ``position``'s CDF exactly as
+        ``Generator.choice(n, p=row)`` does on the dense row (cumsum,
+        normalize, searchsorted-right): the zero-mass entries of the
+        dense row never move the CDF's float levels, so the compressed
+        search lands on the same client for the same uniform."""
+        cands, probs = self._sparse_row(graph, self.position)
+        cdf = probs.cumsum()
+        cdf /= cdf[-1]
+        j = int(np.searchsorted(cdf, u, side="right"))
+        return int(cands[min(j, len(cands) - 1)])
+
     def step(self, graph: ClientGraph) -> int:
         """One random-walk move: i_{k+1} ~ [P(k)]_{i_k, ·} (Eq. 2)."""
         assert self.position is not None, "call reset() first"
-        row = self.transition_row(graph, self.position)
-        # The dynamic graph may have disconnected the current node from its
-        # old neighbors; row always sums to 1 on the *current* graph.
-        self.position = int(self._rng.choice(graph.n, p=row))
+        if isinstance(graph, NeighborGraph):
+            self.position = self._sample_sparse(graph, self._rng.random())
+        else:
+            row = self.transition_row(graph, self.position)
+            # The dynamic graph may have disconnected the current node
+            # from its old neighbors; row always sums to 1 on the
+            # *current* graph.
+            self.position = int(self._rng.choice(graph.n, p=row))
         self.visit_counts[self.position] += 1
         self.history.append(self.position)
         return self.position
@@ -252,7 +316,11 @@ class RandomWalkServer:
         u = self._rng.random(rounds - start)
         for k in range(start, rounds):
             assert self.position is not None, "call reset() first"
-            row = self.transition_row(graphs[k], self.position)
+            if isinstance(graphs[k], NeighborGraph):
+                cands, row = self._sparse_row(graphs[k], self.position)
+            else:
+                cands = None
+                row = self.transition_row(graphs[k], self.position)
             cdf = np.cumsum(row)
             # Scale by the realized total (≈1.0) so fp undershoot in the
             # cumsum can never push the draw past the last bin.
@@ -261,9 +329,11 @@ class RandomWalkServer:
             # A uniform within 1 ulp of 1.0 can land past the last
             # positive-mass bin (trailing zero-probability states share
             # cdf[-1]); clamp to the first bin reaching the total — the
-            # last state the row actually supports.
-            self.position = min(j, int(np.searchsorted(cdf, cdf[-1],
-                                                       side="left")))
+            # last state the row actually supports. The sparse lane's
+            # compressed CDF shares the dense CDF's float levels, so
+            # the clamp index maps to the same client.
+            j = min(j, int(np.searchsorted(cdf, cdf[-1], side="left")))
+            self.position = int(cands[j]) if cands is not None else j
             self.visit_counts[self.position] += 1
             self.history.append(self.position)
             positions[k] = self.position
@@ -542,6 +612,77 @@ def plan_fleet_zone_round(
     return idx, mask, n_i
 
 
+def _plan_fleet_round_fast(
+    graph,
+    positions: np.ndarray,
+    zone_size: int,
+    rng: np.random.Generator,
+    avail: np.ndarray | None = None,
+):
+    """No-conflict fast path of :func:`plan_fleet_zone_round`.
+
+    When the K walkers' candidate neighborhoods are pairwise disjoint
+    (the common case once n ≫ K·deg), the sequential loop's ``taken``
+    bookkeeping is a no-op, so the K zone plans can be formed from one
+    vectorized neighborhood gather — only walkers whose zone
+    oversubscribes still draw from ``rng``, in walker order, exactly as
+    the loop would. Returns ``None`` whenever any client is reachable by
+    two walkers (including a walker standing on another's candidate or
+    duplicate walker positions): the caller falls back to the loop for
+    that round. Bit-identical to the loop when it applies (pinned in
+    ``tests/test_fleet_scan.py``).
+    """
+    k_walkers = len(positions)
+    pos_arr = np.asarray(positions, dtype=np.int64)
+    n = graph.n
+    if isinstance(graph, NeighborGraph):
+        cand = np.concatenate([graph.nbrs[pos_arr].astype(np.int64),
+                               pos_arr[:, None]], axis=1)
+        cmask = np.concatenate(
+            [graph.nbr_mask[pos_arr],
+             np.ones((k_walkers, 1), dtype=bool)], axis=1)
+        if avail is not None:
+            cmask &= avail[cand] | (cand == pos_arr[:, None])
+        live = cand[cmask]
+        if len(np.unique(live)) != len(live):
+            return None
+        # Row-sort with an n sentinel on dead slots → each walker's
+        # zone in ascending client order (the loop's ordering).
+        sortable = np.where(cmask, cand, n)
+        zones = np.sort(sortable, axis=1)
+        counts = cmask.sum(axis=1)
+    else:
+        cand = graph.adjacency[pos_arr].copy()        # (K, n)
+        if avail is not None:
+            cand &= avail[None, :]
+        cand[np.arange(k_walkers), pos_arr] = True
+        if (cand.sum(axis=0) > 1).any():
+            return None
+        counts = cand.sum(axis=1)
+        width = int(counts.max()) if k_walkers else 0
+        zones = np.full((k_walkers, max(width, 1)), n, dtype=np.int64)
+        rr, cc = np.nonzero(cand)                     # row-major → sorted
+        zones[rr, graph_mod.segmented_arange(counts)] = cc
+    z = zone_size
+    idx = np.zeros((k_walkers, z), np.int32)
+    mask = np.zeros((k_walkers, z), np.float32)
+    n_i = counts.astype(np.float32)
+    w = min(zones.shape[1], z)
+    small = counts <= z
+    fits = zones[:, :w]
+    live_cols = fits < n
+    idx[:, :w][small] = np.where(live_cols, fits, 0)[small]
+    mask[:, :w][small] = live_cols[small].astype(np.float32)
+    for k in np.flatnonzero(~small):                  # walker order
+        zone = zones[k, : int(counts[k])]
+        others = zone[zone != pos_arr[k]]
+        pick = rng.choice(others, size=z - 1, replace=False)
+        active = np.concatenate([[pos_arr[k]], pick])
+        idx[k, : len(active)] = active
+        mask[k, : len(active)] = 1.0
+    return idx, mask, n_i
+
+
 def fleet_zone_schedule(
     dyn_graph,
     walkers: Sequence[RandomWalkServer],
@@ -555,6 +696,7 @@ def fleet_zone_schedule(
     price=None,
     price_fleet=None,
     batched_walk: bool = False,
+    fast_path: bool = True,
 ) -> FleetZoneSchedule:
     """Precompute ``rounds`` fleet rounds in one batched pass: the
     active-walker index, per-walker random-walk positions, the zone
@@ -572,7 +714,12 @@ def fleet_zone_schedule(
     by walker replays the per-round order exactly).
 
     Simultaneous: every walker moves every wall step and
-    :func:`plan_fleet_zone_round` forms K disjoint zones per round;
+    :func:`plan_fleet_zone_round` forms K disjoint zones per round —
+    through the vectorized no-conflict fast path
+    (:func:`_plan_fleet_round_fast`) when the walkers' neighborhoods are
+    disjoint, falling back to the sequential loop for rounds where they
+    overlap (``fast_path=False`` forces the loop everywhere; both paths
+    are bit-identical where the fast path applies);
     ``price_fleet(graphs, clients (R, K), idx, mask) -> ((R, K), (R, K))``
     prices each walker's zone, aggregated to wall-clock (R,) columns
     (max latency — the zones are served in parallel — and summed energy).
@@ -649,9 +796,14 @@ def fleet_zone_schedule(
     n_i = np.zeros((rounds, k_walkers), np.float32)
     seeds = np.zeros((rounds,), np.int64)
     for r in range(rounds):
-        idx[r], mask[r], n_i[r] = plan_fleet_zone_round(
-            graphs[r], positions[r], z, rng,
-            avail=None if avails is None else avails[r])
+        av = None if avails is None else avails[r]
+        plan = (_plan_fleet_round_fast(graphs[r], positions[r], z, rng,
+                                       avail=av)
+                if fast_path else None)
+        if plan is None:        # overlapping neighborhoods this round
+            plan = plan_fleet_zone_round(graphs[r], positions[r], z,
+                                         rng, avail=av)
+        idx[r], mask[r], n_i[r] = plan
         seeds[r] = round_key_seed(rng)
     active = mask.sum(axis=2).astype(np.int32)          # (R, K)
     latency = energy = lat_kw = en_kw = None

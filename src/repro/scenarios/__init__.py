@@ -18,6 +18,7 @@ from .config import (
 )
 from .links import CommModel, LinkModel
 from .mobility import (
+    GRAPH_BACKENDS,
     GaussMarkovMobility,
     MobilityModel,
     RandomWaypointMobility,
@@ -25,6 +26,8 @@ from .mobility import (
     build_mobility,
     range_graph,
     range_graphs_batch,
+    sparse_knn_graph,
+    sparse_range_graph,
 )
 from .scenario import Scenario, build_scenario
 
@@ -33,6 +36,7 @@ __all__ = [
     "ChurnModel",
     "CommConfig",
     "CommModel",
+    "GRAPH_BACKENDS",
     "GaussMarkovMobility",
     "LinkConfig",
     "LinkModel",
@@ -49,4 +53,6 @@ __all__ = [
     "range_graph",
     "range_graphs_batch",
     "register_scenario",
+    "sparse_knn_graph",
+    "sparse_range_graph",
 ]

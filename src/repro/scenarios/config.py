@@ -116,6 +116,19 @@ class ScenarioConfig:
     # RNG consumption is chunk-size-invariant, so changing it never
     # changes trajectories.
     rollout_chunk: int = 128
+    # Graph backend: "dense" keeps O(n²) adjacency/distance matrices
+    # (the small-n oracle); "sparse" stores capped-degree (n, k) neighbor
+    # lists built by grid-bucket search — O(n·k) control plane, the
+    # large-n lane (docs/scenarios.md §Graph backends). Everything
+    # RNG-free (graphs, zones, pricing) is bit-identical across
+    # backends; link *dropout sampling* draws per-edge instead of per-
+    # matrix, a documented RNG-stream break between backends.
+    graph_backend: str = "dense"
+    # Sparse-backend degree cap: each node keeps at most this many
+    # in-range neighbors (nearest first); min-degree/connectivity
+    # patches may exceed it (lists grow). For dense-parity at small n,
+    # set it at or above the realized max degree.
+    neighbor_k_max: int = 64
 
 
 # ---------------------------------------------------------------------------

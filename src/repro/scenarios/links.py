@@ -28,16 +28,30 @@ import numpy as np
 
 from ..core.graph import (
     ClientGraph,
+    NeighborGraph,
     graph_sq_dists,
     graphs_from_stack,
+    neighbor_graph_from_pairs,
     patch_connected,
+    patch_connected_lists,
     seed_sq_dist_cache,
 )
 from .config import CommConfig, LinkConfig
 
 
 class LinkModel:
-    """Per-link success probabilities + per-round stochastic dropouts."""
+    """Per-link success probabilities + per-round stochastic dropouts.
+
+    Both graph backends are served: dense ``ClientGraph``s sample a
+    symmetric (n, n) uniform matrix per round; sparse ``NeighborGraph``s
+    sample one uniform per *undirected edge* (canonical (i < j) order) —
+    O(n·k) instead of O(n²) per round. The two lanes draw different
+    uniform counts, so **enabling dropout is an RNG-stream break between
+    backends** (each lane is individually deterministic and
+    chunk-composable; the sparse stream is pinned by a seed-stability
+    test). Everything RNG-free — success probabilities, pricing — is
+    bit-identical across backends.
+    """
 
     def __init__(self, cfg: LinkConfig):
         self.cfg = cfg
@@ -88,6 +102,37 @@ class LinkModel:
         """(n, n) success probabilities on the graph's edges, 0 elsewhere."""
         return self._geometry(graph)[1]
 
+    def _edge_geometry(self, graph: NeighborGraph):
+        """Canonical-edge arrays (ei, ej, d2, p) for a sparse graph,
+        cached per graph instance (same policy as :meth:`_geometry`)."""
+        import weakref
+
+        if self._cache is not None and self._cache[0]() is graph:
+            return self._cache[1]
+        ei, ej, d2 = graph.undirected_edges()
+        p = self.success_probability_sq(d2)
+        self._cache = (weakref.ref(graph), (ei, ej, d2, p))
+        return ei, ej, d2, p
+
+    def _apply_dropouts_sparse(self, graph: NeighborGraph,
+                               rng: np.random.Generator
+                               ) -> NeighborGraph:
+        """One uniform per undirected edge in canonical (i < j) order
+        (symmetric outcome by construction), survivors re-packed into
+        neighbor lists and re-patched connected."""
+        ei, ej, d2, p = self._edge_geometry(graph)
+        u = rng.uniform(size=len(ei))
+        keep = u < p
+        pi = np.concatenate([ei[keep], ej[keep]])
+        pj = np.concatenate([ej[keep], ei[keep]])
+        ed2 = np.concatenate([d2[keep], d2[keep]])
+        out = neighbor_graph_from_pairs(graph.n, pi, pj, ed2,
+                                        graph.positions)
+        nbrs, mask, nd2 = patch_connected_lists(
+            out.nbrs, out.nbr_mask, out.nbr_d2, graph.positions)
+        return NeighborGraph(nbrs=nbrs, nbr_mask=mask,
+                             positions=graph.positions, nbr_d2=nd2)
+
     def apply_dropouts(self, graph: ClientGraph,
                        rng: np.random.Generator) -> ClientGraph:
         """Edge (i,j) survives this round w.p. p(d_ij); the surviving
@@ -95,6 +140,8 @@ class LinkModel:
         defined. Draws the upper triangle only (symmetric outcome)."""
         if not self.cfg.dropout:
             return graph
+        if isinstance(graph, NeighborGraph):
+            return self._apply_dropouts_sparse(graph, rng)
         d2, p = self._geometry(graph)
         u = rng.uniform(size=p.shape)
         u = np.triu(u, 1)
@@ -123,6 +170,8 @@ class LinkModel:
         rounds = len(graphs)
         if rounds == 0:
             return []
+        if isinstance(graphs[0], NeighborGraph):
+            return self._apply_dropouts_batch_sparse(graphs, rng)
         n = graphs[0].n
         u = rng.uniform(size=(rounds, n, n))
         u = np.triu(u, 1)
@@ -151,6 +200,19 @@ class LinkModel:
         d2s = [d2_stack[j] for j in ri]
         return graphs_from_stack(surv, d2s,
                                  [g.positions for g in graphs])
+
+    def _apply_dropouts_batch_sparse(self, graphs: list[NeighborGraph],
+                                     rng: np.random.Generator
+                                     ) -> list[NeighborGraph]:
+        """Sparse lane of :meth:`apply_dropouts_batch`: one uniform per
+        undirected edge, drawn round-by-round — the generator fills
+        sequentially, so this equals one whole-window draw bit-for-bit
+        while never materializing a window-sized edge tensor (the
+        windowed peak stays O(n·k) + the survivors themselves).
+        :meth:`_edge_geometry`'s last-graph cache already serves the
+        window's run-length structure (``static_regen`` repeats one
+        graph per regen epoch; smooth mobility is one per round)."""
+        return [self._apply_dropouts_sparse(g, rng) for g in graphs]
 
 
 class CommModel:

@@ -58,7 +58,9 @@ class Scenario:
         self.n = n
         self.cfg = cfg
         self.positions_only = bool(positions_only)
-        self.mobility = build_mobility(n, cfg.mobility)
+        self.mobility = build_mobility(n, cfg.mobility,
+                                       backend=cfg.graph_backend,
+                                       k_max=cfg.neighbor_k_max)
         # Stream 0 mirrors DynamicGraph(seed) exactly (static_regen
         # bit-compat); links/churn get independent streams. A negative
         # seed never reaches the SeedSequence: default_rng(seed) above

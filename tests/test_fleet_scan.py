@@ -81,6 +81,7 @@ def assert_trees_equal(a, b, atol=0.0):
 
 
 # ------------------------------------------------ acceptance: scan≡eager --
+@pytest.mark.slow
 @pytest.mark.parametrize("n_walkers", [1, 3, 5])
 @pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
 def test_fleet_scan_equals_eager(fed, n_walkers, mode):
@@ -103,6 +104,7 @@ def test_fleet_scan_equals_eager(fed, n_walkers, mode):
 SCENARIOS = ["random_waypoint", "lossy_links", "duty_cycle", "field_trial"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("scenario", SCENARIOS)
 @pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
 def test_fleet_scan_equals_eager_under_scenario(fed, scenario, mode):
@@ -276,6 +278,70 @@ def test_multizone_kernel_matches_oracle():
     keep = np.asarray(mask) == 0.0
     np.testing.assert_array_equal(np.asarray(xk["b"])[keep],
                                   np.asarray(x["b"])[keep])
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_fleet_fast_path_bit_identical_to_loop(backend):
+    """The vectorized no-conflict fast path must reproduce the
+    sequential conflict-resolving loop exactly on both graph backends —
+    across a window that exercises BOTH regimes (a small crowded graph
+    forces overlaps/fallbacks; later rounds plan disjoint zones), with
+    churn masks composing and the shared rng replaying draw-for-draw."""
+    import dataclasses
+
+    from repro.scenarios import Scenario, get_scenario_config
+
+    cfg = dataclasses.replace(get_scenario_config("duty_cycle"),
+                              graph_backend=backend, neighbor_k_max=28)
+
+    def build(fast_path):
+        sc = Scenario(28, cfg, seed=2)
+        walkers = [RandomWalkServer(seed=60 + 10 * k) for k in range(3)]
+        for w in walkers:
+            w.reset(sc.current())
+        rng = np.random.default_rng(1)
+        return markov.fleet_zone_schedule(
+            sc, walkers, 50, 4, rng, mode="simultaneous", sync_every=9,
+            fast_path=fast_path)
+
+    fast, loop = build(True), build(False)
+    np.testing.assert_array_equal(fast.idx, loop.idx)
+    np.testing.assert_array_equal(fast.mask, loop.mask)
+    np.testing.assert_array_equal(fast.n_i, loop.n_i)
+    np.testing.assert_array_equal(fast.clients, loop.clients)
+    np.testing.assert_array_equal(fast.keys, loop.keys)
+
+
+def test_fleet_fast_path_covers_both_regimes():
+    """Directly exercise the fast path's two outcomes: overlapping
+    walkers → None (caller falls back to the conflict loop); disjoint
+    walkers → exactly the loop's plan with identical rng consumption,
+    including an oversubscribed zone's subsample draw."""
+    g = DynamicGraph(40, min_degree=8, seed=3).current()
+    # two walkers on the same client: overlap by construction
+    assert markov._plan_fleet_round_fast(
+        g, np.asarray([4, 4, 20]), 4, np.random.default_rng(0)) is None
+    # walkers with disjoint neighborhoods (found by scanning): fast plan
+    # must equal the loop plan and leave the rng in the same state
+    disjoint = None
+    for a in range(40):
+        for b in range(40):
+            na = set(g.neighborhood(a))
+            nb = set(g.neighborhood(b))
+            if a != b and not (na & nb):
+                disjoint = (a, b)
+                break
+        if disjoint:
+            break
+    assert disjoint is not None, "graph too dense for the test setup"
+    positions = np.asarray(disjoint)
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    fast = markov._plan_fleet_round_fast(g, positions, 4, r1)
+    loop = markov.plan_fleet_zone_round(g, positions, 4, r2)
+    assert fast is not None
+    for a, b in zip(fast, loop):
+        np.testing.assert_array_equal(a, b)
+    assert r1.random() == r2.random()      # identical rng consumption
 
 
 def test_plan_fleet_zone_round_disjoint_and_deterministic():

@@ -189,6 +189,7 @@ SCENARIOS = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("scenario", SCENARIOS)
 def test_scan_driver_equals_eager_under_scenario(fed, scenario):
     st_e, losses_e = run_eager(
