@@ -1,16 +1,32 @@
 """Assumption 3.1 / Eq. 6 benchmark: mixing time τ(δ) and the convergence
-constant across graph topologies + the App. D.2 eigenvalue requirement."""
+constant across graph topologies + the App. D.2 eigenvalue requirement —
+plus the walk-policy sweep (docs/walks.md): hitting time, staleness, and
+accuracy-vs-uniform for every ``markov.WALK_POLICIES`` entry on the
+paper's skewed (pathological) partition, written into
+``BENCH_scaling.json``.
+
+CLI: ``python -m benchmarks.mixing [--smoke]`` runs the policy sweep
+alone (``--smoke``: CI-sized budget).
+"""
 from __future__ import annotations
+
+import sys
+import time
 
 import numpy as np
 
 from repro.core import graph as G
 from repro.core import markov as M
 
-from .common import emit
+from .common import bench_row, emit, mnist_like_fed, write_bench_rows
 
 
-def run() -> None:
+def run(*, smoke: bool = False) -> None:
+    mixing_report()
+    policy_sweep(smoke=smoke)
+
+
+def mixing_report() -> None:
     rng = np.random.default_rng(0)
     tests = [
         ("geo_n20_deg5", G.random_geometric_graph(20, 5, rng)),
@@ -30,5 +46,94 @@ def run() -> None:
              f"appD2={bool(eig_req)}")
 
 
+def policy_sweep(*, rounds: int = 40, n_clients: int = 12,
+                 walk_bias: float = 0.5, seeds: tuple = (0, 1, 2),
+                 smoke: bool = False) -> list[dict]:
+    """Short training runs (seed-averaged) per walk policy on the
+    pathological split: hitting time (rounds to full coverage), the
+    staleness distribution of client service (p50 at the horizon,
+    worst gap over the run), and personalized accuracy relative to the
+    uniform Metropolis walk. The acceptance property — a biased policy
+    beats uniform Metropolis on mean hitting time AND mean worst
+    staleness — is asserted here, so a regression fails the benchmark
+    lane. γ = 0.5 keeps the importance-weight spread small enough that
+    the corrected y-update stays stable (large γ trades accuracy for
+    coverage; see docs/walks.md)."""
+    from repro.core.rwsadmm import RWSADMMHparams
+    from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+    from repro.fl.simulation import run_simulation
+    from repro.models.small import get_model
+
+    if smoke:
+        seeds = seeds[:2]
+    data, shape = mnist_like_fed(
+        n_clients, n_samples=1200 if smoke else 3000, seed=0)
+    model = get_model("mlr", shape)
+
+    rows: list[dict] = []
+    results: dict[str, dict] = {}
+    for policy in M.WALK_POLICIES:
+        hits, smaxs, p50s, accs = [], [], [], []
+        t0 = time.perf_counter()
+        for seed in seeds:
+            tr = RWSADMMTrainer(
+                model, data,
+                RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
+                zone_size=4, batch_size=20, solver="closed_form",
+                walk_policy=policy, walk_bias=walk_bias, seed=seed)
+            res = run_simulation(tr, rounds=rounds, eval_every=rounds,
+                                 seed=seed, engine="scan")
+            hit = tr.walker.hitting_time()
+            hits.append(hit if hit is not None else rounds + 1)
+            smaxs.append(max(m["staleness_max"]
+                             for m in res.round_metrics))
+            p50s.append(res.round_metrics[-1]["staleness_p50"])
+            accs.append(res.history[-1]["acc_personalized"])
+        dt = time.perf_counter() - t0
+        us = dt / (rounds * len(seeds)) * 1e6
+        results[policy] = {
+            "hitting_time": float(np.mean(hits)),
+            "staleness_max": float(np.mean(smaxs)),
+            "staleness_p50": float(np.mean(p50s)),
+            "acc": float(np.mean(accs)),
+            "us": round(us, 1),
+        }
+        r = results[policy]
+        emit(f"mixing/policy_{policy}", us,
+             f"hit={r['hitting_time']:.1f} "
+             f"stale_max={r['staleness_max']:.1f} "
+             f"stale_p50={r['staleness_p50']:.1f} "
+             f"acc={r['acc']:.4f}")
+
+    acc_uniform = results["metropolis"]["acc"]
+    for policy, r in results.items():
+        r["acc_vs_uniform"] = round(r["acc"] - acc_uniform, 4)
+        us = r.pop("us")
+        rows.append(bench_row(
+            f"walk_policy/{policy}", n=n_clients, engine="scan",
+            us_per_round=us, rounds=rounds, bias_gamma=walk_bias,
+            **r))
+    write_bench_rows(rows)
+
+    # Acceptance: some biased policy dominates uniform Metropolis on
+    # BOTH coverage speed and worst service gap.
+    uni = results["metropolis"]
+    winners = [p for p in M.BIASED_POLICIES
+               if results[p]["hitting_time"] < uni["hitting_time"]
+               and results[p]["staleness_max"] < uni["staleness_max"]]
+    emit("mixing/policy_acceptance", 0.0,
+         f"winners={sorted(winners)} "
+         f"uniform_hit={uni['hitting_time']} "
+         f"uniform_stale_max={uni['staleness_max']}")
+    if not winners:
+        raise AssertionError(
+            "no biased policy beat uniform Metropolis on hitting time "
+            f"AND staleness_max: {results}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    if "--smoke" in sys.argv[1:]:
+        policy_sweep(smoke=True)
+    else:
+        run()

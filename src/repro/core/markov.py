@@ -8,7 +8,10 @@ Implements the paper's §3:
   * stationary distribution π, spectral quantities σ(P), λ₂(P),
   * mixing time τ(δ) from Eq. (6),
   * P_max elementwise envelope (Eq. (5)) for the dynamic chain,
-  * random-walk sampling of the visited-client sequence (i_k).
+  * random-walk sampling of the visited-client sequence (i_k),
+  * importance-biased walk policies (staleness / label-skew targets with
+    the Walk-for-Learning importance-weight correction — see
+    ``docs/walks.md``).
 """
 from __future__ import annotations
 
@@ -45,7 +48,38 @@ def metropolis_transition_matrix(graph: ClientGraph) -> np.ndarray:
     deg = adj.sum(axis=1)
     inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1.0), 0.0)
     p = adj * np.minimum(inv[:, None], inv[None, :])
-    np.fill_diagonal(p, 1.0 - p.sum(axis=1))
+    # The rounded min(1/deg_i, 1/deg_j) terms can sum a hair above 1
+    # even though the exact sum never does; a −2⁻⁵² self-loop would
+    # poison rng.choice mid-walk, so clamp (mirrored in _sparse_row
+    # and the biased builders so all row constructions stay
+    # bit-identical).
+    np.fill_diagonal(p, np.maximum(1.0 - p.sum(axis=1), 0.0))
+    return p
+
+
+def biased_transition_matrix(graph: ClientGraph,
+                             weights: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings chain targeting π ∝ ``weights``.
+
+    P_ij = min(1/deg(i), w_j / (w_i · deg(j))) for j ~ i; the self-loop
+    absorbs the rest. With w ≡ 1 this is *float-identical* to
+    :func:`metropolis_transition_matrix` (min(1/deg_i, 1/deg_j)).
+    Detailed balance: w_i·P_ij = min(w_i/deg_i, w_j/deg_j) = w_j·P_ji,
+    so the stationary distribution is exactly w/Σw on any connected
+    graph — the lever the biased walk policies (staleness, label-skew)
+    pull to steer visit frequencies, with the induced sampling bias
+    undone by the 1/(n·π_i) importance weights (``docs/walks.md``).
+    """
+    adj = graph.adjacency.astype(np.float64)
+    deg = adj.sum(axis=1)
+    inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1.0), 0.0)
+    w = np.asarray(weights, np.float64)
+    p = adj * np.minimum(inv[:, None], (w[None, :] * inv[None, :])
+                         / w[:, None])
+    # The rounded w_j/(w_i·deg_j) terms can sum a hair above 1 even
+    # though the exact sum never does; a −2⁻⁵² self-loop would poison
+    # rng.choice, so clamp (mirrored bit-for-bit in _biased_row).
+    np.fill_diagonal(p, np.maximum(1.0 - p.sum(axis=1), 0.0))
     return p
 
 
@@ -125,29 +159,118 @@ def verify_assumption_3_1(p: np.ndarray, delta: float = 0.5) -> dict:
     }
 
 
+# Walk-policy axis: which stationary distribution the walk targets.
+# "degree"/"metropolis" are the uniform (unbiased) chains the paper uses;
+# "staleness"/"label_skew" are importance-biased MH chains (π ∝ w) whose
+# sampling bias the per-visit importance weights undo (docs/walks.md).
+WALK_POLICIES = ("degree", "metropolis", "staleness", "label_skew")
+BIASED_POLICIES = frozenset({"staleness", "label_skew"})
+
+
 @dataclasses.dataclass
 class RandomWalkServer:
     """The mobile server: walks the client graph per the Markov chain.
 
     Host-side control plane; the visited sequence (i_k) drives which zone
     the compiled SPMD round operates on.
+
+    ``policy`` picks the chain the walk runs (defaults to ``transition``):
+
+    * ``"degree"`` / ``"metropolis"`` — the unbiased chains (π ∝ deg,
+      π uniform); importance weights are identically 1.0.
+    * ``"staleness"`` — MH chain targeting π ∝ (1 + steps-since-visit)^γ
+      (γ = ``bias_gamma``): under-visited clients attract the walk.
+    * ``"label_skew"`` — MH chain targeting the fixed per-client data
+      utilities installed via :meth:`set_label_weights` (from
+      ``data.partition.label_skew_weights``): clients holding rare
+      labels attract the walk.
+
+    Every visit records an importance weight ``(Σw)/(n·w_i)`` (≡ 1/(n·π_i)
+    normalized so uniform policies give 1.0) in ``weight_history``,
+    aligned 1:1 with ``history`` — the Walk-for-Learning correction the
+    trainers fold into the Eq. 31 y-update to keep the stochastic
+    estimator unbiased under a biased visit distribution.
     """
 
     transition: str = "degree"  # "degree" (paper) | "metropolis"
     seed: int = 0
+    policy: str | None = None   # defaults to ``transition``
+    bias_gamma: float = 1.0     # staleness exponent γ
 
     def __post_init__(self):
+        if self.policy is None:
+            self.policy = self.transition
+        elif self.policy in ("degree", "metropolis"):
+            # A uniform policy IS a transition kind; keep them in sync so
+            # matrix()/transition_row() dispatch stays single-sourced.
+            self.transition = self.policy
+        if self.policy not in WALK_POLICIES:
+            raise ValueError(f"unknown walk policy {self.policy!r}; "
+                             f"pick one of {WALK_POLICIES}")
         self._rng = np.random.default_rng(self.seed)
         self.position: int | None = None
         self.visit_counts: np.ndarray | None = None
         self.history: list[int] = []
+        self.weight_history: list[float] = []
+        self.label_weights: np.ndarray | None = None
+        self._last_visit: np.ndarray | None = None
+        self._n_seen = 0
+        self._cover_step: int | None = None
         self._matrix_cache: tuple[Any, np.ndarray] | None = None
+
+    # -- policy weights ---------------------------------------------------
+    @property
+    def is_biased(self) -> bool:
+        return self.policy in BIASED_POLICIES
+
+    def set_label_weights(self, weights: np.ndarray | None) -> None:
+        """Install per-client utilities for the ``label_skew`` policy
+        (normalized to mean 1 — importance weights are scale-invariant,
+        this just keeps the floats well-conditioned)."""
+        if weights is None:
+            self.label_weights = None
+            return
+        w = np.asarray(weights, np.float64)
+        if (w <= 0).any():
+            raise ValueError("label weights must be strictly positive")
+        self.label_weights = w / w.mean()
+
+    def policy_weights(self, n: int) -> np.ndarray:
+        """(n,) current target weights w (π ∝ w). Uniform policies → 1s.
+        Deterministic in walker state, so row construction and the
+        importance-weight record read identical floats."""
+        if self.policy == "staleness":
+            assert self._last_visit is not None, "call reset() first"
+            k = len(self.history) - 1
+            s = (k - self._last_visit).astype(np.float64)  # never seen → k+1
+            return (1.0 + s) ** self.bias_gamma
+        if self.policy == "label_skew" and self.label_weights is not None:
+            if len(self.label_weights) != n:
+                raise ValueError(
+                    f"label weights have length {len(self.label_weights)}, "
+                    f"graph has {n} clients")
+            return self.label_weights
+        return np.ones(n)
+
+    def stationary_target(self, n: int) -> np.ndarray:
+        """The designed stationary distribution π = w/Σw at the current
+        walker state (uniform policies: exactly 1/n; the degree chain's
+        deg-proportional π comes from ``stationary_distribution`` of the
+        matrix instead — its target is implicit in the graph)."""
+        w = self.policy_weights(n)
+        return w / w.sum()
 
     def matrix(self, graph: ClientGraph) -> np.ndarray:
         # The graph object only changes at regeneration epochs (every
         # ``regen_every`` rounds), but step() runs every round — cache
         # the O(n²) transition matrix per graph instance (weakref so a
-        # recycled id can never alias a dead graph).
+        # recycled id can never alias a dead graph). Biased policies are
+        # never cached: their weights move with walker state (staleness)
+        # or with set_label_weights, so a cached P could silently stale.
+        if self.is_biased:
+            g = (graph.to_dense() if isinstance(graph, NeighborGraph)
+                 else graph)
+            return biased_transition_matrix(g, self.policy_weights(graph.n))
         if self._matrix_cache is not None \
                 and self._matrix_cache[0]() is graph:
             return self._matrix_cache[1]
@@ -166,11 +289,35 @@ class RandomWalkServer:
 
     def reset(self, graph: ClientGraph, start: int | None = None) -> int:
         self.visit_counts = np.zeros(graph.n, dtype=np.int64)
+        self.history = []
+        self.weight_history = []
+        self._last_visit = np.full(graph.n, -1, dtype=np.int64)
+        self._n_seen = 0
+        self._cover_step = None
         self.position = (int(self._rng.integers(graph.n))
                          if start is None else int(start))
-        self.visit_counts[self.position] += 1
-        self.history = [self.position]
+        self._record_visit(self.position, graph.n, initial=True)
         return self.position
+
+    def _record_visit(self, i: int, n: int, *, initial: bool = False) -> None:
+        """Shared visit bookkeeping for reset/step/batched-step: counts,
+        history, the importance weight of THIS visit (from the weight
+        vector the step was drawn under — before the visit mutates it),
+        the staleness clock, and the incremental first-full-coverage
+        step that makes :meth:`hitting_time` O(1)."""
+        if initial or not self.is_biased:
+            iw = 1.0   # start position / unbiased chain: no correction
+        else:
+            w = self.policy_weights(n)
+            iw = float(w.sum() / (n * w[i]))
+        if self.visit_counts[i] == 0:
+            self._n_seen += 1
+            if self._n_seen == n and self._cover_step is None:
+                self._cover_step = len(self.history)
+        self.visit_counts[i] += 1
+        self.history.append(i)
+        self.weight_history.append(iw)
+        self._last_visit[i] = len(self.history) - 1
 
     def transition_row(self, graph: ClientGraph, i: int) -> np.ndarray:
         """Row i of P(k) — all one walk step needs. A cached full matrix
@@ -180,7 +327,13 @@ class RandomWalkServer:
         full-matrix rebuild per round. The row values are bit-identical
         to the matrix row (0/1 sums are exact, one division either way).
         Metropolis rows need every node's degree, so that chain still
-        goes through the cached matrix."""
+        goes through the cached matrix. Biased policies always build the
+        row fresh (their weights move with walker state) through the
+        backend-shared scatter in :meth:`_biased_row`, so dense and
+        sparse backends read bit-identical rows."""
+        if self.is_biased:
+            _, row = self._biased_row(graph, i)
+            return row
         if self._matrix_cache is not None \
                 and self._matrix_cache[0]() is graph:
             return self._matrix_cache[1][i]
@@ -193,6 +346,35 @@ class RandomWalkServer:
             row = graph.adjacency[i].astype(np.float64)
             return row / max(row.sum(), 1.0)
         return self.matrix(graph)[i]
+
+    def _biased_row(self, graph: ClientGraph, i: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """(candidates, full row) of the biased MH chain at node i —
+        ONE construction for both graph backends. Only the neighbor /
+        degree gather differs per backend (identical integers either
+        way); every float op afterwards is shared, so dense and sparse
+        rows are bit-identical by construction, and both match the
+        elementwise expression in :func:`biased_transition_matrix`
+        (same multiply/divide order, same length-n pairwise sum for
+        the self-loop mass)."""
+        w = self.policy_weights(graph.n)
+        if isinstance(graph, NeighborGraph):
+            nbrs = graph.neighbors(i)
+            deg_nb = graph.nbr_mask[nbrs].sum(axis=1).astype(np.float64)
+        else:
+            nbrs = np.flatnonzero(graph.adjacency[i])
+            nbrs = nbrs[nbrs != i]
+            deg_nb = graph.adjacency[nbrs].astype(np.float64).sum(axis=1)
+        deg_i = np.float64(len(nbrs))
+        inv_i = np.where(deg_i > 0, 1.0 / np.maximum(deg_i, 1.0), 0.0)
+        inv_nb = np.where(deg_nb > 0, 1.0 / np.maximum(deg_nb, 1.0), 0.0)
+        row = np.zeros(graph.n)
+        row[nbrs] = np.minimum(inv_i, (w[nbrs] * inv_nb) / w[i])
+        # Same float-error clamp as biased_transition_matrix: rounding
+        # in the off-diagonal terms can push their sum past 1.
+        row[i] = max(1.0 - row.sum(), 0.0)
+        cands = np.insert(nbrs, np.searchsorted(nbrs, i), i)
+        return cands, row
 
     def _sparse_row(self, graph: NeighborGraph, i: int
                     ) -> tuple[np.ndarray, np.ndarray]:
@@ -208,6 +390,9 @@ class RandomWalkServer:
         makes sparse walks replay dense walks draw-for-draw (pinned in
         ``tests/test_sparse_backend.py``).
         """
+        if self.is_biased:
+            cands, row = self._biased_row(graph, i)
+            return cands, row[cands]
         if self.transition == "degree":
             nbrs = graph.neighbors(i)
             return nbrs, np.full(len(nbrs), 1.0) / max(float(len(nbrs)),
@@ -227,8 +412,8 @@ class RandomWalkServer:
         # with the same pairwise summation the dense matrix row uses.
         row = np.zeros(graph.n)
         row[nbrs] = np.minimum(inv_i, inv_nb)
-        self_mass = 1.0 - row.sum()
-        row[i] = self_mass
+        # Same float-error clamp as metropolis_transition_matrix.
+        row[i] = max(1.0 - row.sum(), 0.0)
         cands = np.insert(nbrs, np.searchsorted(nbrs, i), i)
         return cands, row[cands]
 
@@ -255,20 +440,17 @@ class RandomWalkServer:
             # from its old neighbors; row always sums to 1 on the
             # *current* graph.
             self.position = int(self._rng.choice(graph.n, p=row))
-        self.visit_counts[self.position] += 1
-        self.history.append(self.position)
+        self._record_visit(self.position, graph.n)
         return self.position
 
     def hitting_time(self) -> int | None:
-        """T = max_i T_i once every client has been visited (paper §4)."""
-        if self.visit_counts is None or (self.visit_counts == 0).any():
+        """T = max_i T_i once every client has been visited (paper §4).
+        O(1): the first-full-coverage step is tracked incrementally by
+        ``_record_visit`` instead of rescanning the visit history on
+        every call (regression-pinned against the oracle scan)."""
+        if self.visit_counts is None:
             return None
-        seen: set[int] = set()
-        for k, i in enumerate(self.history):
-            seen.add(i)
-            if len(seen) == len(self.visit_counts):
-                return k
-        return None
+        return self._cover_step
 
     def walk_schedule(self, graphs: Sequence[ClientGraph],
                       *, advance_first: bool = True) -> np.ndarray:
@@ -334,10 +516,22 @@ class RandomWalkServer:
             # the clamp index maps to the same client.
             j = min(j, int(np.searchsorted(cdf, cdf[-1], side="left")))
             self.position = int(cands[j]) if cands is not None else j
-            self.visit_counts[self.position] += 1
-            self.history.append(self.position)
+            self._record_visit(self.position, graphs[k].n)
             positions[k] = self.position
         return positions
+
+    def walk_weights(self, rounds: int) -> np.ndarray | None:
+        """(R,) importance weights of the walker's last ``rounds``
+        visits (the schedule column the trainers consume), or ``None``
+        for unbiased policies — the engines then skip the correction
+        entirely, keeping the uniform-policy computation graphs (and
+        their bit-identical pins) untouched."""
+        if not self.is_biased:
+            return None
+        if rounds == 0:
+            return np.zeros(0, np.float64)
+        assert rounds <= len(self.weight_history)
+        return np.asarray(self.weight_history[-rounds:], np.float64)
 
 
 # ---------------------------------------------------------------------------
@@ -393,6 +587,15 @@ class ZoneSchedule:
 
     latency_s: (R,) float64 — expected round latency, or None.
     energy_j:  (R,) float64 — expected round radio energy, or None.
+
+    Under a biased walk policy (``RandomWalkServer.policy`` in
+    ``BIASED_POLICIES``) one more per-round column rides along, consumed
+    by BOTH engines' Eq. 31 y-update (the Walk-for-Learning correction):
+
+    iw: (R,) float64 — importance weight 1/(n·π_{i_k}) of the visited
+        client, or None for unbiased policies (engines skip the
+        correction entirely — the uniform computation graph, and its
+        bit-identical eager ≡ scan pins, stay untouched).
     """
 
     idx: np.ndarray
@@ -403,6 +606,7 @@ class ZoneSchedule:
     active: np.ndarray
     latency_s: np.ndarray | None = None
     energy_j: np.ndarray | None = None
+    iw: np.ndarray | None = None
 
     @property
     def rounds(self) -> int:
@@ -516,6 +720,12 @@ def zone_schedule(
             else walker.walk_schedule)
     positions = step(graphs, advance_first=not first)
 
+    # The last `rounds` recorded weights align with `positions` in both
+    # advance_first regimes: with the round-0 convention the window's
+    # first entry is the walker's current position, whose weight was
+    # recorded when it was visited (1.0 at reset).
+    iw = walker.walk_weights(rounds)
+
     idx, mask, n_i, seeds, active = _plan_rounds(
         graphs, positions, zone_size, rng, avails)
     latency = energy = None
@@ -524,7 +734,7 @@ def zone_schedule(
     return ZoneSchedule(
         idx=idx, mask=mask, n_i=n_i, keys=round_keys(seeds),
         clients=positions.astype(np.int32), active=active,
-        latency_s=latency, energy_j=energy,
+        latency_s=latency, energy_j=energy, iw=iw,
     )
 
 
@@ -545,6 +755,10 @@ class FleetZoneSchedule(ZoneSchedule):
     walker: (R,) int32 — the active walker per round.
     sync:   (R,) float32 — 1.0 where a rendezvous (token averaging)
             follows the round, 0.0 otherwise.
+
+    Under biased walk policies the base class's ``iw`` column is (R,)
+    in round-robin mode (the active walker's importance weight) and
+    (R, K) in simultaneous mode (one weight per walker's zone).
 
     Simultaneous mode gains a walker axis: idx/mask are (R, K, Z),
     clients/n_i/active are (R, K), and the latency/energy columns keep
@@ -753,20 +967,30 @@ def fleet_zone_schedule(
                                 else [None] * len(stepped))
 
     step_name = "walk_schedule_batched" if batched_walk else "walk_schedule"
+    biased = any(w.is_biased for w in walkers)
     rs = np.arange(rounds)
     if mode == "roundrobin":
         active_walker = ((start_round + rs) % k_walkers).astype(np.int32)
         positions = np.empty((rounds,), np.int64)
+        iw = np.ones((rounds,), np.float64) if biased else None
         for k, w in enumerate(walkers):
             mine = np.flatnonzero(active_walker == k)
             parked = mine[mine < lead]
             if len(parked):
                 assert w.position is not None, "call reset() first"
                 positions[parked] = w.position
+                if iw is not None:
+                    # Parked rounds serve the walker's current position;
+                    # its weight was recorded at the visit that put it
+                    # there (1.0 for the reset visit) — same float the
+                    # eager fleet round reads.
+                    iw[parked] = w.weight_history[-1]
             moving = mine[mine >= lead]
             if len(moving):
                 positions[moving] = getattr(w, step_name)(
                     [graphs[r] for r in moving], advance_first=True)
+                if iw is not None and w.is_biased:
+                    iw[moving] = w.walk_weights(len(moving))
         idx, mask, n_i, seeds, active = _plan_rounds(
             graphs, positions, zone_size, rng, avails)
         latency = energy = None
@@ -775,7 +999,7 @@ def fleet_zone_schedule(
         return FleetZoneSchedule(
             idx=idx, mask=mask, n_i=n_i, keys=round_keys(seeds),
             clients=positions.astype(np.int32), active=active,
-            latency_s=latency, energy_j=energy,
+            latency_s=latency, energy_j=energy, iw=iw,
             walker=active_walker,
             sync=_sync_mask(start_round, rounds, sync_every),
             mode=mode, n_walkers=k_walkers,
@@ -783,13 +1007,18 @@ def fleet_zone_schedule(
 
     # -- simultaneous -----------------------------------------------------
     positions = np.empty((rounds, k_walkers), np.int64)
+    iw = np.ones((rounds, k_walkers), np.float64) if biased else None
     for k, w in enumerate(walkers):
         if lead:
             assert w.position is not None, "call reset() first"
             positions[0, k] = w.position
+            if iw is not None:
+                iw[0, k] = w.weight_history[-1]
         if rounds > lead:
             positions[lead:, k] = getattr(w, step_name)(
                 stepped, advance_first=True)
+            if iw is not None and w.is_biased:
+                iw[lead:, k] = w.walk_weights(rounds - lead)
     z = zone_size
     idx = np.zeros((rounds, k_walkers, z), np.int32)
     mask = np.zeros((rounds, k_walkers, z), np.float32)
@@ -813,7 +1042,7 @@ def fleet_zone_schedule(
     return FleetZoneSchedule(
         idx=idx, mask=mask, n_i=n_i, keys=round_keys(seeds),
         clients=positions.astype(np.int32), active=active,
-        latency_s=latency, energy_j=energy,
+        latency_s=latency, energy_j=energy, iw=iw,
         sync=_sync_mask(start_round, rounds, sync_every),
         latency_s_walkers=lat_kw, energy_j_walkers=en_kw,
         mode=mode, n_walkers=k_walkers,

@@ -96,6 +96,56 @@ def dirichlet_split(
     return result
 
 
+def client_label_histograms(labels: np.ndarray, parts: list[np.ndarray],
+                            n_classes: int | None = None) -> np.ndarray:
+    """(n_clients, C) row-normalized label histograms of a partition —
+    the data-utility substrate for the ``label_skew`` walk policy."""
+    if n_classes is None:
+        n_classes = int(labels.max()) + 1
+    hist = np.zeros((len(parts), n_classes), np.float64)
+    for k, idx in enumerate(parts):
+        cnt = np.bincount(np.asarray(labels)[idx], minlength=n_classes)
+        hist[k] = cnt / max(int(cnt.sum()), 1)
+    return hist
+
+
+def padded_label_histograms(y_padded: np.ndarray, n_valid: np.ndarray,
+                            n_classes: int | None = None) -> np.ndarray:
+    """(n, C) label histograms from the trainers' padded device layout:
+    ``y_padded`` (n, m) labels with only the first ``n_valid[i]`` entries
+    of row i real (``fl.base.DeviceData.y_train``/``n_train``)."""
+    y = np.asarray(y_padded)
+    n_valid = np.asarray(n_valid)
+    if n_classes is None:
+        n_classes = int(y.max()) + 1
+    hist = np.zeros((y.shape[0], n_classes), np.float64)
+    for k in range(y.shape[0]):
+        cnt = np.bincount(y[k, : int(n_valid[k])], minlength=n_classes)
+        hist[k] = cnt / max(int(cnt.sum()), 1)
+    return hist
+
+
+def label_skew_weights(hist: np.ndarray, *, gamma: float = 1.0
+                       ) -> np.ndarray:
+    """Per-client data-utility weights for the ``label_skew`` walk policy.
+
+    A client's utility is the mean inverse global propensity of its
+    labels, u_i = Σ_c h_ic · q̄/q_c (q = the fleet-average label
+    distribution, q̄ = 1/C): u_i = 1 when client i's label mix matches
+    the global mix, u_i ≫ 1 when it concentrates on globally rare
+    labels. ``gamma`` sharpens (γ > 1) or flattens (γ < 1) the bias;
+    the result is strictly positive and mean-normalized downstream by
+    ``RandomWalkServer.set_label_weights``.
+    """
+    h = np.asarray(hist, np.float64)
+    n_classes = h.shape[1]
+    q = h.mean(axis=0)
+    q = np.maximum(q, 1e-12)
+    u = (h * ((1.0 / n_classes) / q)[None, :]).sum(axis=1)
+    u = np.maximum(u, 1e-12)
+    return u ** float(gamma)
+
+
 def train_test_split_indices(
     n: int, test_frac: float = 0.25, seed: int = 0
 ) -> tuple[np.ndarray, np.ndarray]:

@@ -160,11 +160,20 @@ class TrainerBase:
 
     def _attach_walking_scenario(self, spec, seed: int, *,
                                  min_degree: int = 5, regen_every: int = 10,
-                                 transition: str = "degree") -> None:
+                                 transition: str = "degree",
+                                 walk_policy: str | None = None,
+                                 walk_bias: float = 1.0,
+                                 label_weights=None) -> None:
         """Shared attach path for the graph-walking trainers (RWSADMM,
         Walkman, fleets): build the full-stack scenario, expose it under
         the DynamicGraph contract, and reset a random-walk server on it.
-        Callers that track a seed should update it before delegating."""
+        Callers that track a seed should update it before delegating.
+
+        ``walk_policy``/``walk_bias``/``label_weights`` configure the
+        importance-biased walk policies (``core.markov.WALK_POLICIES``,
+        see ``docs/walks.md``); the defaults keep the walker on the
+        unbiased ``transition`` chain, bit-identical to the seed path.
+        """
         from ..core.markov import RandomWalkServer
         from ..scenarios import build_scenario
 
@@ -173,7 +182,11 @@ class TrainerBase:
             min_degree=min_degree, regen_every=regen_every,
         )
         self.dyn_graph = self.scenario   # DynamicGraph-compatible facade
-        self.walker = RandomWalkServer(transition=transition, seed=seed + 1)
+        self.walker = RandomWalkServer(transition=transition, seed=seed + 1,
+                                       policy=walk_policy,
+                                       bias_gamma=float(walk_bias))
+        if label_weights is not None:
+            self.walker.set_label_weights(label_weights)
         self.walker.reset(self.dyn_graph.current())
 
     def select_clients(self, rnd: int, rng: np.random.Generator,

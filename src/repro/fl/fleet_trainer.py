@@ -116,9 +116,12 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         # (pinned in tests); the stride keeps the streams disjoint from
         # the scenario seeds derived nearby.
         self.walkers = [RandomWalkServer(transition=self.walker.transition,
-                                         seed=self._seed + 1 + 10 * k)
+                                         seed=self._seed + 1 + 10 * k,
+                                         policy=self.walker.policy,
+                                         bias_gamma=self.walker.bias_gamma)
                         for k in range(self.n_walkers)]
         for w in self.walkers:
+            w.set_label_weights(self.walker.label_weights)
             w.reset(self.dyn_graph.current())
 
     def attach_scenario(self, spec, seed: int | None = None) -> None:
@@ -142,10 +145,12 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
     # engines run literally the same computation per round.
     # ------------------------------------------------------------------
     def _rr_step_impl(self, state: FleetState, idx, mask, n_i, a, sync,
-                      key, *, use_fused: bool = False):
+                      key, iw=None, *, use_fused: bool = False):
         """Round-robin fleet round: walker ``a`` serves one zone against
         its own token (dynamic_index into the stack), then an optional
-        rendezvous averages the stack."""
+        rendezvous averages the stack. ``iw`` (biased walk policies) is
+        the active walker's importance weight, threaded into the shared
+        Eq. 31 round body's y fold."""
         y_k = jax.tree_util.tree_map(
             lambda t: jax.lax.dynamic_index_in_dim(t, a, 0, keepdims=False),
             state.tokens)
@@ -154,7 +159,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             server=ServerState(y=y_k, kappa=state.base.server.kappa,
                                round=state.base.server.round),
             visited=state.base.visited)
-        new_base, loss = self._round_impl(base, idx, mask, n_i, key,
+        new_base, loss = self._round_impl(base, idx, mask, n_i, key, iw,
                                           use_fused=use_fused)
         tokens = jax.tree_util.tree_map(
             lambda t, y: jax.lax.dynamic_update_index_in_dim(t, y, a, 0),
@@ -163,10 +168,12 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                           tokens=_rendezvous(tokens, sync)), loss
 
     def _sim_step_impl(self, state: FleetState, idx, mask, n_i, sync,
-                       key, *, use_fused: bool = False):
+                       key, iw=None, *, use_fused: bool = False):
         """Simultaneous fleet wall step: K disjoint zones (idx/mask are
         (K, Z)) update in one vmapped Eq. 31 pass, each against its own
-        walker's token; κ decays once per wall step."""
+        walker's token; κ decays once per wall step. ``iw`` (biased walk
+        policies) carries each walker's importance weight (K,); the
+        per-walker token folds are rescaled by it post hoc."""
         clients = state.base.clients
         hp, kappa = self.hp, state.base.server.kappa
         k_walkers, zone = idx.shape
@@ -191,6 +198,13 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             new_act, y_new = rwsadmm.multizone_round_masked(
                 act, state.tokens, grads, mask, hp, kappa,
                 float(self.n_clients))
+        if iw is not None:
+            # Walk-for-Learning correction per walker: rescale each
+            # token's zone fold by its walker's importance weight.
+            y_new = jax.tree_util.tree_map(
+                lambda y0, y1: y0 + iw.reshape(
+                    (-1,) + (1,) * (y1.ndim - 1)) * (y1 - y0),
+                state.tokens, y_new)
 
         # Scatter all K zones back in one add: the planner guarantees
         # the zones are disjoint, padded slots carry zero deltas.
@@ -244,10 +258,13 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         latency_s, energy_j = self._price(graph, i_k, idx, mask)
         key = markov.round_key(rng)
         sync = float((rnd + 1) % max(self.sync_every, 1) == 0)
-        state, zone_loss = self._fleet_step_fn("roundrobin", False)(
-            state, jnp.asarray(idx), jnp.asarray(mask),
-            jnp.asarray(float(n_i)), jnp.asarray(k, jnp.int32),
-            jnp.asarray(sync, jnp.float32), key)
+        args = [state, jnp.asarray(idx), jnp.asarray(mask),
+                jnp.asarray(float(n_i)), jnp.asarray(k, jnp.int32),
+                jnp.asarray(sync, jnp.float32), key]
+        if self._use_iw:
+            args.append(jnp.asarray(walker.weight_history[-1],
+                                    jnp.float32))
+        state, zone_loss = self._fleet_step_fn("roundrobin", False)(*args)
         metrics = {
             "round": rnd, "walker": k, "client": int(i_k),
             "zone": n_active, "n_i": int(n_i),
@@ -256,6 +273,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             "comm_bytes": self.comm_bytes_per_round(n_active),
             "latency_s": latency_s,
             "energy_j": energy_j,
+            **self._staleness_metrics(idx, mask, rnd),
         }
         return state, metrics
 
@@ -272,9 +290,13 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             avail=self.scenario.availability())
         key = markov.round_key(rng)
         sync = float((rnd + 1) % max(self.sync_every, 1) == 0)
-        state, loss = self._fleet_step_fn("simultaneous", False)(
-            state, jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(n_i),
-            jnp.asarray(sync, jnp.float32), key)
+        args = [state, jnp.asarray(idx), jnp.asarray(mask),
+                jnp.asarray(n_i), jnp.asarray(sync, jnp.float32), key]
+        if self._use_iw:
+            args.append(jnp.asarray(
+                np.array([w.weight_history[-1] for w in self.walkers]),
+                jnp.float32))
+        state, loss = self._fleet_step_fn("simultaneous", False)(*args)
         lat_kw, en_kw = self._price_fleet_schedule(
             [graph], positions[None], idx[None], mask[None])
         active = mask.sum(axis=1).astype(int)
@@ -291,6 +313,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                                   for a in active if a)),
             "latency_s": float(lat_kw.max()),   # zones served in parallel
             "energy_j": float(en_kw.sum()),
+            **self._staleness_metrics(idx, mask, rnd),
         }
         return state, metrics
 
@@ -328,28 +351,36 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                 self._rr_step_impl if mode == "roundrobin"
                 else self._sim_step_impl,
                 use_fused=use_fused)
+            use_iw = self._use_iw
             if mode == "roundrobin":
-                def chunk(state, idx, mask, n_i, keys, walker, sync):
+                def chunk(state, idx, mask, n_i, keys, walker, sync,
+                          iws=None):
                     def body(carry, per):
-                        i_r, m_r, ni_r, k_r, a_r, s_r = per
+                        i_r, m_r, ni_r, k_r, a_r, s_r = per[:6]
+                        w_r = per[6] if use_iw else None
                         new_state, loss = step(carry, i_r, m_r, ni_r,
-                                               a_r, s_r, k_r)
+                                               a_r, s_r, k_r, w_r)
                         return new_state, (loss,
                                            new_state.base.server.kappa)
 
-                    return jax.lax.scan(
-                        body, state, (idx, mask, n_i, keys, walker, sync))
+                    cols = (idx, mask, n_i, keys, walker, sync)
+                    if use_iw:
+                        cols = cols + (iws,)
+                    return jax.lax.scan(body, state, cols)
             else:
-                def chunk(state, idx, mask, n_i, keys, sync):
+                def chunk(state, idx, mask, n_i, keys, sync, iws=None):
                     def body(carry, per):
-                        i_r, m_r, ni_r, k_r, s_r = per
+                        i_r, m_r, ni_r, k_r, s_r = per[:5]
+                        w_r = per[5] if use_iw else None
                         new_state, loss = step(carry, i_r, m_r, ni_r,
-                                               s_r, k_r)
+                                               s_r, k_r, w_r)
                         return new_state, (loss,
                                            new_state.base.server.kappa)
 
-                    return jax.lax.scan(
-                        body, state, (idx, mask, n_i, keys, sync))
+                    cols = (idx, mask, n_i, keys, sync)
+                    if use_iw:
+                        cols = cols + (iws,)
+                    return jax.lax.scan(body, state, cols)
             fn = jax.jit(chunk)
             self._fleet_chunk_fns[(mode, engine)] = fn
 
@@ -358,6 +389,8 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         if mode == "roundrobin":
             args.append(jnp.asarray(sched.walker))
         args.append(jnp.asarray(sched.sync))
+        if self._use_iw:
+            args.append(jnp.asarray(sched.iw, jnp.float32))
         final, (losses, kappas) = fn(state, *args)
         return final, {"train_loss": losses, "kappa": kappas}
 
@@ -387,6 +420,8 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             if sched.latency_s is not None:
                 entry["latency_s"] = float(sched.latency_s[j])
                 entry["energy_j"] = float(sched.energy_j[j])
+            entry.update(self._staleness_metrics(
+                sched.idx[j], sched.mask[j], start_round + j))
             out.append(entry)
         return out
 

@@ -76,6 +76,10 @@ class RWSADMMTrainer(TrainerBase):
         batched_walk: bool = False,       # inverse-cdf walk sampling in
                                           # schedule() (RNG-stream break
                                           # vs eager; see markov)
+        walk_policy: str | None = None,   # markov.WALK_POLICIES; None →
+                                          # the unbiased ``transition``
+        walk_bias: float = 1.0,           # staleness exponent / label-
+                                          # skew sharpening γ
         seed: int = 0,
     ):
         super().__init__(model, data, batch_size)
@@ -92,6 +96,12 @@ class RWSADMMTrainer(TrainerBase):
         self._min_degree = int(min_degree)
         self._regen_every = int(regen_every)
         self._transition = transition
+        self.walk_policy = walk_policy
+        self.walk_bias = float(walk_bias)
+        # Static flag: biased policies thread the per-round importance
+        # weight into the Eq. 31 y-update (Walk-for-Learning correction);
+        # uniform policies keep the seed computation graph untouched.
+        self._use_iw = walk_policy in markov.BIASED_POLICIES
         # The environment: mobility + links + churn behind the old
         # DynamicGraph contract. scenario=None builds "static_regen"
         # from the legacy min_degree/regen_every knobs — bit-for-bit
@@ -113,7 +123,35 @@ class RWSADMMTrainer(TrainerBase):
         self._attach_walking_scenario(
             spec, seed, min_degree=self._min_degree,
             regen_every=self._regen_every, transition=self._transition,
+            walk_policy=self.walk_policy, walk_bias=self.walk_bias,
+            label_weights=self._label_skew_weights(),
         )
+        # Per-client service clock for the staleness round metrics
+        # (round index of each client's last zone participation).
+        self._last_served = np.full(self.n_clients, -1, dtype=np.int64)
+
+    def _label_skew_weights(self) -> np.ndarray | None:
+        """Per-client data utilities for the ``label_skew`` walk policy,
+        from the padded device label arrays (None for other policies)."""
+        if self.walk_policy != "label_skew":
+            return None
+        from ..data import partition
+
+        hist = partition.padded_label_histograms(
+            np.asarray(self.data.y_train), np.asarray(self.data.n_train))
+        return partition.label_skew_weights(hist, gamma=self.walk_bias)
+
+    def _staleness_metrics(self, idx, mask, rnd: int) -> dict:
+        """Update the per-client service clock with one round's zone and
+        report the staleness distribution (rounds since last service;
+        never-served clients count rnd + 1). Integer math shared by the
+        eager driver and ``chunk_round_metrics``, so both engines emit
+        identical values (pinned in the scan-driver tests)."""
+        served = np.asarray(idx)[np.asarray(mask) > 0]
+        self._last_served[served] = rnd
+        stale = rnd - self._last_served
+        return {"staleness_p50": float(np.median(stale)),
+                "staleness_max": int(stale.max())}
 
     def _price(self, graph, i_k, idx, mask):
         return self.scenario.price_round(graph, int(i_k), idx, mask,
@@ -141,7 +179,7 @@ class RWSADMMTrainer(TrainerBase):
 
     # ------------------------------------------------------------------
     def _round_impl(self, state: RWSADMMState, zone_idx, zone_mask, n_i,
-                    key, *, use_fused: bool = False):
+                    key, iw=None, *, use_fused: bool = False):
         clients, server = state.clients, state.server
         hp, kappa = self.hp, server.kappa
 
@@ -226,9 +264,20 @@ class RWSADMMTrainer(TrainerBase):
 
             def fold(y, d):
                 mm = m.reshape((-1,) + (1,) * (d.ndim - 1))
-                return y + jnp.sum(mm * d, axis=0) / n_total
+                delta = jnp.sum(mm * d, axis=0) / n_total
+                # Importance-weight correction (biased walk policies):
+                # the zone fold is scaled by 1/(n π_{i_k}) so the
+                # y-update estimator stays unbiased under the biased
+                # visit distribution (docs/walks.md). iw=None (uniform
+                # policies) keeps the seed computation graph unchanged.
+                return y + (delta if iw is None else iw * delta)
 
             y_new = jax.tree_util.tree_map(fold, server.y, deltas)
+        elif iw is not None:
+            # Fused-kernel path: the Pallas kernel already folded the
+            # unweighted zone delta into y; rescale it post hoc.
+            y_new = jax.tree_util.tree_map(
+                lambda y0, y1: y0 + iw * (y1 - y0), server.y, y_new)
 
         # Scatter active deltas back (duplicate-free: zone indices unique,
         # padded slots masked to zero so .add is a no-op for them).
@@ -262,10 +311,14 @@ class RWSADMMTrainer(TrainerBase):
         latency_s, energy_j = self._price(graph, i_k, idx, mask)
 
         key = markov.round_key(rng)
-        state, zone_loss = self._round_fn(
-            state, jnp.asarray(idx), jnp.asarray(mask),
-            jnp.asarray(float(n_i)), key,
-        )
+        args = [state, jnp.asarray(idx), jnp.asarray(mask),
+                jnp.asarray(float(n_i)), key]
+        if self._use_iw:
+            # The weight recorded at the walker's latest visit — the
+            # same float the schedule's iw column carries for this round.
+            args.append(jnp.asarray(self.walker.weight_history[-1],
+                                    jnp.float32))
+        state, zone_loss = self._round_fn(*args)
         metrics = {
             "round": rnd,
             "client": int(i_k),
@@ -276,6 +329,7 @@ class RWSADMMTrainer(TrainerBase):
             "comm_bytes": self.comm_bytes_per_round(n_active),
             "latency_s": latency_s,
             "energy_j": energy_j,
+            **self._staleness_metrics(idx, mask, rnd),
         }
         return state, metrics
 
@@ -333,6 +387,8 @@ class RWSADMMTrainer(TrainerBase):
             if sched.latency_s is not None:
                 entry["latency_s"] = float(sched.latency_s[j])
                 entry["energy_j"] = float(sched.energy_j[j])
+            entry.update(self._staleness_metrics(
+                sched.idx[j], sched.mask[j], start_round + j))
             out.append(entry)
         return out
 
@@ -351,24 +407,37 @@ class RWSADMMTrainer(TrainerBase):
             round_fn = functools.partial(self._round_impl,
                                          use_fused=use_fused)
 
-            def chunk(state, idx, mask, n_i, keys):
-                def body(carry, per_round):
-                    i_r, m_r, ni_r, k_r = per_round
-                    new_state, loss = round_fn(carry, i_r, m_r, ni_r, k_r)
-                    return new_state, (loss, new_state.server.kappa)
+            if self._use_iw:
+                # Biased walk policy: the schedule's per-round importance
+                # weights ride along as one more scan input.
+                def chunk(state, idx, mask, n_i, keys, iws):
+                    def body(carry, per_round):
+                        i_r, m_r, ni_r, k_r, w_r = per_round
+                        new_state, loss = round_fn(carry, i_r, m_r, ni_r,
+                                                   k_r, w_r)
+                        return new_state, (loss, new_state.server.kappa)
 
-                final, stacked = jax.lax.scan(
-                    body, state, (idx, mask, n_i, keys)
-                )
-                return final, stacked
+                    return jax.lax.scan(
+                        body, state, (idx, mask, n_i, keys, iws))
+            else:
+                def chunk(state, idx, mask, n_i, keys):
+                    def body(carry, per_round):
+                        i_r, m_r, ni_r, k_r = per_round
+                        new_state, loss = round_fn(carry, i_r, m_r, ni_r,
+                                                   k_r)
+                        return new_state, (loss, new_state.server.kappa)
+
+                    return jax.lax.scan(
+                        body, state, (idx, mask, n_i, keys))
 
             fn = jax.jit(chunk)
             self._chunk_fns[engine] = fn
 
-        final, (losses, kappas) = fn(
-            state, jnp.asarray(sched.idx), jnp.asarray(sched.mask),
-            jnp.asarray(sched.n_i), jnp.asarray(sched.keys),
-        )
+        args = [jnp.asarray(sched.idx), jnp.asarray(sched.mask),
+                jnp.asarray(sched.n_i), jnp.asarray(sched.keys)]
+        if self._use_iw:
+            args.append(jnp.asarray(sched.iw, jnp.float32))
+        final, (losses, kappas) = fn(state, *args)
         return final, {"train_loss": losses, "kappa": kappas}
 
     # ------------------------------------------------------------------

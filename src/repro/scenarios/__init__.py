@@ -23,9 +23,12 @@ from .mobility import (
     MobilityModel,
     RandomWaypointMobility,
     StaticRegenMobility,
+    TraceMobility,
     build_mobility,
+    load_trace,
     range_graph,
     range_graphs_batch,
+    register_trace,
     sparse_knn_graph,
     sparse_range_graph,
 )
@@ -46,13 +49,16 @@ __all__ = [
     "Scenario",
     "ScenarioConfig",
     "StaticRegenMobility",
+    "TraceMobility",
     "available_scenarios",
     "build_mobility",
     "build_scenario",
     "get_scenario_config",
+    "load_trace",
     "range_graph",
     "range_graphs_batch",
     "register_scenario",
+    "register_trace",
     "sparse_knn_graph",
     "sparse_range_graph",
 ]

@@ -35,6 +35,9 @@ class MobilityConfig:
         ``pause_rounds`` on arrival.
       * ``gauss_markov`` — temporally correlated velocities,
         v' = α v + (1−α) v̄ + σ√(1−α²) w, reflected at the boundary.
+      * ``trace`` — replay a recorded (R, n, 2) position trace named by
+        ``trace_path`` (a ``register_trace`` name or an ``.npz``/``.npy``
+        file), looping past the end; consumes no RNG.
     """
 
     model: str = "static_regen"
@@ -47,6 +50,11 @@ class MobilityConfig:
     alpha: float = 0.85          # gauss_markov velocity memory
     mean_speed: float = 0.02     # gauss_markov long-run speed v̄ magnitude
     sigma_speed: float = 0.01    # gauss_markov velocity noise σ
+    # trace replay source: a name registered via
+    # scenarios.register_trace(name, positions) or a path to an .npz
+    # (key "positions") / .npy file holding an (R, n, 2) unit-square
+    # array. A plain string keeps this dataclass hashable/frozen.
+    trace_path: str = ""
 
 
 @dataclasses.dataclass(frozen=True)

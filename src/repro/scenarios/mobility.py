@@ -621,10 +621,121 @@ class GaussMarkovMobility:
                            self.cfg.min_degree)
 
 
+# ---------------------------------------------------------------------------
+# Trace replay: recorded (R, n, 2) positions, e.g. from a field trial or
+# an external mobility simulator.
+# ---------------------------------------------------------------------------
+
+_TRACES: dict[str, np.ndarray] = {}
+
+
+def _validate_trace(pos: np.ndarray) -> np.ndarray:
+    if pos.ndim != 3 or pos.shape[2] != 2 or pos.shape[0] < 1:
+        raise ValueError(
+            f"trace must be a (R, n, 2) position array with R >= 1, "
+            f"got shape {pos.shape}")
+    if not np.isfinite(pos).all():
+        raise ValueError("trace positions must be finite")
+    if pos.min() < 0.0 or pos.max() > 1.0:
+        raise ValueError("trace positions must lie in the unit square")
+    return pos
+
+
+def register_trace(name: str, positions: np.ndarray) -> np.ndarray:
+    """Register an in-memory (R, n, 2) unit-square position trace under
+    ``name`` so a plain-string ``MobilityConfig(model="trace",
+    trace_path=name)`` can refer to it (configs stay frozen/hashable —
+    no array-valued fields). Returns the validated float64 copy."""
+    pos = _validate_trace(np.array(positions, np.float64))
+    _TRACES[name] = pos
+    return pos
+
+
+def load_trace(spec: str) -> np.ndarray:
+    """Resolve a trace spec: a ``register_trace`` name, an ``.npz`` file
+    holding a ``"positions"`` array, or a bare ``.npy`` array file."""
+    if not spec:
+        raise ValueError(
+            "mobility model 'trace' needs MobilityConfig.trace_path "
+            "(a register_trace name or an .npz/.npy file)")
+    if spec in _TRACES:
+        return _TRACES[spec]
+    if spec.endswith(".npz"):
+        with np.load(spec) as z:
+            if "positions" not in z:
+                raise ValueError(
+                    f"{spec!r} has no 'positions' array "
+                    f"(found: {sorted(z.files)})")
+            return _validate_trace(np.asarray(z["positions"], np.float64))
+    if spec.endswith(".npy"):
+        return _validate_trace(np.asarray(np.load(spec), np.float64))
+    raise ValueError(
+        f"unknown trace {spec!r}: not a registered name "
+        f"(known: {sorted(_TRACES)}) and not an .npz/.npy path")
+
+
+class TraceMobility:
+    """Replay recorded positions: round t shows frame ``t mod R`` of the
+    (R, n, 2) trace named by ``cfg.trace_path`` (wrap-around looping).
+    Consumes **no** RNG, so swapping a synthetic model for a trace leaves
+    every other stream (links, churn, walker) untouched, and replays are
+    exact by construction. Graphs derive from ``radio_range``/
+    ``min_degree`` exactly like the smooth models."""
+
+    def __init__(self, n: int, cfg: MobilityConfig,
+                 backend: str = "dense", k_max: int = 64):
+        self.n = n
+        self.cfg = cfg
+        self.backend = backend
+        self.k_max = k_max
+        self.trace = load_trace(cfg.trace_path)
+        if self.trace.shape[1] != n:
+            raise ValueError(
+                f"trace {cfg.trace_path!r} has {self.trace.shape[1]} "
+                f"clients, scenario has {n}")
+        self._t = 0
+
+    def reset_positions(self, rng: np.random.Generator) -> np.ndarray:
+        self._t = 0
+        self.pos = self.trace[0]
+        return self.pos
+
+    def step_positions(self, rng: np.random.Generator) -> np.ndarray:
+        self._t += 1
+        self.pos = self.trace[self._t % len(self.trace)]
+        return self.pos
+
+    def reset(self, rng: np.random.Generator) -> ClientGraph:
+        return self._graph(self.reset_positions(rng))
+
+    def step(self, rng: np.random.Generator) -> ClientGraph:
+        return self._graph(self.step_positions(rng))
+
+    def rollout(self, rounds: int,
+                rng: np.random.Generator) -> list[ClientGraph]:
+        """Slice the next ``rounds`` frames (with wrap-around) and push
+        them through the shared batched graph-construction tail."""
+        idx = (self._t + 1 + np.arange(rounds)) % len(self.trace)
+        pos = self.trace[idx]
+        self._t += rounds
+        if rounds:
+            self.pos = pos[-1]
+        return _range_rollout_graphs(pos, self.cfg, self.backend,
+                                     self.k_max)
+
+    def _graph(self, pos: np.ndarray) -> ClientGraph:
+        if self.backend == "sparse":
+            return sparse_range_graph(pos, self.cfg.radio_range,
+                                      self.cfg.min_degree, self.k_max)
+        return range_graph(pos, self.cfg.radio_range,
+                           self.cfg.min_degree)
+
+
 _MODELS = {
     "static_regen": StaticRegenMobility,
     "random_waypoint": RandomWaypointMobility,
     "gauss_markov": GaussMarkovMobility,
+    "trace": TraceMobility,
 }
 
 

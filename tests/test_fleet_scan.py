@@ -395,6 +395,85 @@ def test_batched_walk_chunks_compose():
     np.testing.assert_array_equal(walk([12]), walk([5, 7]))
 
 
+# ------------------------------------------- biased walk policies -------
+@pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
+@pytest.mark.parametrize("policy", ["staleness", "label_skew"])
+def test_fleet_scan_equals_eager_biased_policy(fed, policy, mode):
+    """K=3 fleets with importance-biased walks: the scan engine replays
+    the eager fleet bit-for-bit with the iw correction threaded through
+    both modes ((R,) column in round-robin, (R, K) in simultaneous)."""
+    kw = dict(walk_policy=policy, walk_bias=1.5)
+    st_e, me = run_eager(make_fleet(fed, 3, mode, **kw))
+    st_s, ms = run_scan(make_fleet(fed, 3, mode, **kw), "scan")
+    assert_trees_equal(st_e.base.clients, st_s.base.clients)
+    assert_trees_equal(st_e.tokens, st_s.tokens)
+    np.testing.assert_array_equal(np.asarray(st_e.base.visited),
+                                  np.asarray(st_s.base.visited))
+    for a, b in zip(me, ms):
+        assert set(a) == set(b), (sorted(a), sorted(b))
+        for key in a:
+            assert a[key] == b[key], (key, a[key], b[key])
+    # the biased policy propagated to every fleet walker
+    tr = make_fleet(fed, 3, mode, **kw)
+    run_eager(tr, rounds=3)
+    for w in tr.walkers:
+        assert w.policy == policy and w.is_biased
+
+
+def test_fleet_schedule_iw_shapes(fed):
+    """The schedule the trainers consume carries the documented iw
+    shapes: (R,) round-robin, (R, K) simultaneous, None when uniform."""
+    rounds = 8
+    for mode, shape in (("roundrobin", (rounds,)),
+                        ("simultaneous", (rounds, 3))):
+        tr = make_fleet(fed, 3, mode, walk_policy="staleness")
+        sched = tr.schedule(rounds, np.random.default_rng(0))
+        assert sched.iw is not None and sched.iw.shape == shape
+        tr_u = make_fleet(fed, 3, mode)
+        assert tr_u.schedule(rounds, np.random.default_rng(0)).iw is None
+
+
+# ------------------------------------------- staleness round metrics ----
+@pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
+def test_fleet_staleness_metrics_pinned(fed, mode):
+    """K=3 fleet staleness metrics: eager == scan exactly, and both
+    match an oracle replay of the served sets (the (K, Z) simultaneous
+    zones flatten through the same mask > 0 indexing)."""
+    rounds = 9
+    st_e, me = run_eager(make_fleet(fed, 3, mode), rounds=rounds)
+
+    tr = make_fleet(fed, 3, mode)
+    rng = np.random.default_rng(0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    sched = tr.schedule(rounds, rng, start_round=0)
+    state, stacked = tr.run_chunk(state, sched, engine="scan")
+    ms = tr.chunk_round_metrics(sched, stacked, 0)
+
+    last = np.full(tr.n_clients, -1, dtype=np.int64)
+    for r, (a, b) in enumerate(zip(me, ms)):
+        served = np.asarray(sched.idx[r])[np.asarray(sched.mask[r]) > 0]
+        last[served] = r
+        stale = r - last
+        for m in (a, b):
+            assert m["staleness_p50"] == float(np.median(stale))
+            assert m["staleness_max"] == int(stale.max())
+    # K zones serve more clients per wall step than one walker: by the
+    # end of the window the fleet's staleness_max is no worse than the
+    # single-walker trainer's at the same round (same seeds).
+    from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+    data, model = fed
+    single = RWSADMMTrainer(
+        model, data, RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
+        zone_size=4, batch_size=20, regen_every=10, solver="closed_form",
+        seed=0)
+    rng = np.random.default_rng(0)
+    st = single.init_state(jax.random.PRNGKey(0))
+    for r in range(rounds):
+        st, m_single = single.round(st, r, rng)
+    if mode == "simultaneous":
+        assert ms[-1]["staleness_max"] <= m_single["staleness_max"]
+
+
 def test_batched_walk_trainer_flag_round_trips(fed):
     """batched_walk=True flows trainer → schedule → walker; scan chunks
     still compose with themselves (self-consistent stream)."""

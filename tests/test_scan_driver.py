@@ -34,12 +34,12 @@ def fed():
     return data, model
 
 
-def make_trainer(fed, solver, scenario=None):
+def make_trainer(fed, solver, scenario=None, **kw):
     data, model = fed
     return RWSADMMTrainer(
         model, data, RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
         zone_size=4, batch_size=20, regen_every=10, solver=solver,
-        scenario=scenario, seed=0,
+        scenario=scenario, seed=0, **kw,
     )
 
 
@@ -244,6 +244,120 @@ def test_round_metrics_schema_parity(fed):
         assert me["energy_j"] == ms["energy_j"]
     assert res_e.total_latency_s == res_s.total_latency_s
     assert res_e.total_energy_j == res_s.total_energy_j
+
+
+# ------------------------------------------- biased walk policies -------
+@pytest.mark.parametrize("policy", ["staleness", "label_skew"])
+def test_scan_driver_equals_eager_biased_policy(fed, policy):
+    """Importance-biased walks thread the iw correction through both
+    engines identically: scan replays the eager trajectory (states,
+    losses, visits) with the correction active, chunk boundary mid-run."""
+    kw = dict(walk_policy=policy, walk_bias=1.5)
+    st_e, losses_e = run_eager(make_trainer(fed, "closed_form", **kw),
+                               rounds=12)
+    st_s, losses_s = run_scan(make_trainer(fed, "closed_form", **kw),
+                              "scan", chunks=(5, 7))
+    assert_trees_close(st_e.clients.x, st_s.clients.x, atol=1e-6)
+    assert_trees_close(st_e.server.y, st_s.server.y, atol=1e-6)
+    np.testing.assert_allclose(losses_e, losses_s, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st_e.visited),
+                                  np.asarray(st_s.visited))
+    # the correction actually engaged: some recorded weight is not 1.0
+    tr = make_trainer(fed, "closed_form", **kw)
+    _ = run_eager(tr, rounds=12)
+    assert any(w != 1.0 for w in tr.walker.weight_history)
+
+
+def test_scan_fused_equals_eager_biased_policy(fed):
+    """The fused kernel path applies the iw correction by rescaling the
+    kernel's y-step, tracking the eager trajectory to fp tolerance."""
+    kw = dict(walk_policy="staleness", walk_bias=1.5)
+    st_e, losses_e = run_eager(make_trainer(fed, "closed_form", **kw),
+                               rounds=12)
+    st_f, losses_f = run_scan(make_trainer(fed, "closed_form", **kw),
+                              "scan_fused", chunks=(12,))
+    assert_trees_close(st_e.clients.x, st_f.clients.x, atol=5e-6)
+    assert_trees_close(st_e.server.y, st_f.server.y, atol=5e-6)
+    np.testing.assert_allclose(losses_e, losses_f, atol=1e-4)
+
+
+def test_biased_policy_changes_trajectory(fed):
+    """The correction is live: a staleness-policy run produces different
+    server duals than the uniform default under identical seeds. (The
+    visit sequence itself may coincide for many rounds — MH caps the
+    probability of moving to attractive stale neighbors at the proposal
+    1/deg, so early biased rows often equal the degree-chain rows — but
+    the iw-scaled y-update must diverge as soon as any iw ≠ 1.)"""
+    tr_u = make_trainer(fed, "closed_form")
+    tr_b = make_trainer(fed, "closed_form", walk_policy="staleness",
+                        walk_bias=1.5)
+    st_u, _ = run_eager(tr_u, rounds=12)
+    st_b, _ = run_eager(tr_b, rounds=12)
+    assert any(w != 1.0 for w in tr_b.walker.weight_history)
+    diffs = [float(np.abs(np.asarray(a) - np.asarray(b)).max())
+             for a, b in zip(jax.tree_util.tree_leaves(st_u.server.y),
+                             jax.tree_util.tree_leaves(st_b.server.y))]
+    assert max(diffs) > 1e-6
+
+
+# ------------------------------------------- staleness round metrics ----
+def _staleness_oracle(idx, mask, rounds, n):
+    """Independent recomputation of the per-round staleness metrics from
+    the schedule's served sets."""
+    last = np.full(n, -1, dtype=np.int64)
+    out = []
+    for r in range(rounds):
+        served = np.asarray(idx[r])[np.asarray(mask[r]) > 0]
+        last[served] = r
+        stale = r - last
+        out.append((float(np.median(stale)), int(stale.max())))
+    return out
+
+
+def test_staleness_metrics_pinned_and_engine_identical(fed):
+    """Both engines emit staleness_p50/staleness_max, the values match
+    an oracle replay of the served sets, and round 0 pins to the
+    everyone-unserved baseline (served clients at staleness 0, the rest
+    at 1 — integer math throughout, so equality is exact)."""
+    rounds = 9
+
+    tr_e = make_trainer(fed, "closed_form")
+    rng = np.random.default_rng(0)
+    state = tr_e.init_state(jax.random.PRNGKey(0))
+    metrics_e = []
+    for r in range(rounds):
+        state, m = tr_e.round(state, r, rng)
+        metrics_e.append(m)
+
+    tr_s = make_trainer(fed, "closed_form")
+    rng = np.random.default_rng(0)
+    state = tr_s.init_state(jax.random.PRNGKey(0))
+    sched = tr_s.schedule(rounds, rng, start_round=0)
+    state, stacked = tr_s.run_chunk(state, sched, engine="scan")
+    metrics_s = tr_s.chunk_round_metrics(sched, stacked, 0)
+
+    oracle = _staleness_oracle(sched.idx, sched.mask, rounds,
+                               tr_s.n_clients)
+    for r, (me, ms) in enumerate(zip(metrics_e, metrics_s)):
+        assert "staleness_p50" in me and "staleness_max" in me
+        assert me["staleness_p50"] == ms["staleness_p50"]
+        assert me["staleness_max"] == ms["staleness_max"]
+        assert (ms["staleness_p50"], ms["staleness_max"]) == oracle[r]
+    assert metrics_e[0]["staleness_max"] == 1   # unserved clients at r=0
+    # chunked scan replays the one-shot values too
+    tr_c = make_trainer(fed, "closed_form")
+    rng = np.random.default_rng(0)
+    state = tr_c.init_state(jax.random.PRNGKey(0))
+    chunked = []
+    r0 = 0
+    for c in (4, 5):
+        sch = tr_c.schedule(c, rng, start_round=r0)
+        state, stk = tr_c.run_chunk(state, sch, engine="scan")
+        chunked.extend(tr_c.chunk_round_metrics(sch, stk, r0))
+        r0 += c
+    for ms, mc in zip(metrics_s, chunked):
+        assert ms["staleness_p50"] == mc["staleness_p50"]
+        assert ms["staleness_max"] == mc["staleness_max"]
 
 
 def test_run_simulation_engines_agree(fed):

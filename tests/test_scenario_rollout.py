@@ -332,3 +332,143 @@ def test_scenario_config_knob_combo_still_composes():
     assert len(graphs) == 13 and trace.shape == (13, N)
     for g in graphs:
         assert g.is_connected()
+
+
+# ------------------------------------------------ trace replay model -----
+def _demo_trace(rounds=30, n=N, seed=17):
+    from repro.scenarios import register_trace
+
+    pos = np.random.default_rng(seed).uniform(0.0, 1.0, (rounds, n, 2))
+    register_trace("rollout-demo", pos)
+    return pos
+
+
+def trace_cfg(**over):
+    return ScenarioConfig(
+        name="trace-test",
+        mobility=MobilityConfig(model="trace", trace_path="rollout-demo",
+                                min_degree=4, **over),
+    )
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_trace_batched_equals_stepped_and_wraps(backend):
+    """The trace model rides the shared batched rollout tail: batched ≡
+    stepped on both backends, round t replays frame t mod R (wrap-
+    around), and the mobility RNG stream is never consumed."""
+    pos = _demo_trace(rounds=9)
+    cfg = dataclasses.replace(trace_cfg(), graph_backend=backend,
+                              neighbor_k_max=N)
+    a = Scenario(N, cfg, seed=3)
+    b = Scenario(N, cfg, seed=3)
+    gs_a = a.schedule(ROUNDS, include_current=True)
+    gs_b = b.schedule(ROUNDS, include_current=True, batched=False)
+    for t, (ga, gb) in enumerate(zip(gs_a, gs_b)):
+        np.testing.assert_array_equal(ga.positions, gb.positions)
+        np.testing.assert_array_equal(ga.positions, pos[t % 9])
+    # zero RNG consumption: the mobility stream sits at its seed state
+    assert a._rng_mob.uniform() == np.random.default_rng(3).uniform()
+
+
+def test_trace_composes_with_links_and_churn():
+    """Replayed positions feed the full stack (dropouts, churn, zone
+    schedules) exactly like synthetic mobility."""
+    _demo_trace()
+    cfg = dataclasses.replace(
+        trace_cfg(), links=LinkConfig(enabled=True),
+        churn=ChurnConfig(enabled=True, straggler_frac=0.2))
+    scn = Scenario(N, cfg, seed=4)
+    w = RandomWalkServer(seed=5)
+    w.reset(scn.current())
+    sched = markov.zone_schedule(scn, w, 12, 4, np.random.default_rng(6))
+    assert sched.rounds == 12
+    assert (sched.active >= 1).all()      # zones formed every round
+    # churn produced a real availability trace over the replayed graphs
+    scn2 = Scenario(N, cfg, seed=4)
+    scn2.schedule(12, include_current=True)
+    trace = scn2.pop_avail_trace()
+    assert trace.shape == (12, N)
+    assert 0 < trace.sum() < trace.size   # some offline, some online
+
+
+def test_trace_file_roundtrip(tmp_path):
+    """.npz (key 'positions') and .npy files load into identical models;
+    bad shapes, out-of-square values, and client-count mismatches are
+    rejected with clear errors."""
+    from repro.scenarios import TraceMobility, build_mobility, load_trace
+
+    pos = np.random.default_rng(2).uniform(0, 1, (5, N, 2))
+    npz, npy = tmp_path / "t.npz", tmp_path / "t.npy"
+    np.savez(npz, positions=pos)
+    np.save(npy, pos)
+    np.testing.assert_array_equal(load_trace(str(npz)), pos)
+    np.testing.assert_array_equal(load_trace(str(npy)), pos)
+    m = build_mobility(N, MobilityConfig(model="trace",
+                                         trace_path=str(npz)))
+    assert isinstance(m, TraceMobility)
+    rng = np.random.default_rng(0)
+    np.testing.assert_array_equal(m.reset_positions(rng), pos[0])
+    np.testing.assert_array_equal(m.step_positions(rng), pos[1])
+
+    with pytest.raises(ValueError, match="unknown trace"):
+        load_trace("never-registered")
+    with pytest.raises(ValueError, match="trace_path"):
+        build_mobility(N, MobilityConfig(model="trace"))
+    with pytest.raises(ValueError, match="unit square"):
+        from repro.scenarios import register_trace
+        register_trace("bad", np.full((3, N, 2), 1.5))
+    with pytest.raises(ValueError, match="clients"):
+        build_mobility(N + 1, MobilityConfig(model="trace",
+                                             trace_path=str(npz)))
+
+
+def test_trace_scan_driver_equals_eager():
+    """End-to-end: a trainer on a trace scenario runs both engines to
+    the same trajectory (the trace is host-side control plane like any
+    other mobility model)."""
+    import jax
+
+    from repro.core.rwsadmm import RWSADMMHparams
+    from repro.data import make_image_dataset, pathological_split
+    from repro.data.loader import build_federated
+    from repro.fl.base import to_device_data
+    from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+    from repro.models.small import get_model
+    from repro.scenarios import register_trace
+
+    n_clients = 10
+    register_trace(
+        "trainer-demo",
+        np.random.default_rng(9).uniform(0, 1, (7, n_clients, 2)))
+    cfg = ScenarioConfig(
+        name="trace-trainer",
+        mobility=MobilityConfig(model="trace", trace_path="trainer-demo",
+                                min_degree=4),
+    )
+    imgs, labels = make_image_dataset(400, seed=0)
+    parts = pathological_split(labels, n_clients, seed=0)
+    data = to_device_data(build_federated(imgs, labels, parts))
+    model = get_model("mlr", (28, 28, 1))
+
+    def mk():
+        return RWSADMMTrainer(
+            model, data, RWSADMMHparams(beta=10.0), zone_size=4,
+            batch_size=20, solver="closed_form", scenario=cfg, seed=0)
+
+    tr_e = mk()
+    rng = np.random.default_rng(0)
+    st_e = tr_e.init_state(jax.random.PRNGKey(0))
+    losses_e = []
+    for r in range(10):
+        st_e, m = tr_e.round(st_e, r, rng)
+        losses_e.append(m["train_loss"])
+
+    tr_s = mk()
+    rng = np.random.default_rng(0)
+    st_s = tr_s.init_state(jax.random.PRNGKey(0))
+    sched = tr_s.schedule(10, rng, start_round=0)
+    st_s, stacked = tr_s.run_chunk(st_s, sched, engine="scan")
+    np.testing.assert_allclose(
+        losses_e, np.asarray(stacked["train_loss"]), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st_e.visited),
+                                  np.asarray(st_s.visited))

@@ -206,6 +206,71 @@ def test_sparse_transition_row_matches_dense():
                                           wd.transition_row(g, i))
 
 
+def _biased_pair(policy, seed, n=60):
+    """Dense/sparse walker twins for a biased policy on one graph."""
+    g = random_geometric_graph(n, 5, np.random.default_rng(2))
+    ng = neighbor_graph_from_dense(g)
+    out = []
+    for _ in range(2):
+        w = RandomWalkServer(transition="metropolis", seed=seed,
+                             policy=policy, bias_gamma=1.5)
+        if policy == "label_skew":
+            w.set_label_weights(
+                np.random.default_rng(42).uniform(0.5, 3.0, n))
+        out.append(w)
+    return g, ng, out[0], out[1]
+
+
+@pytest.mark.parametrize("policy", sorted(markov.BIASED_POLICIES))
+def test_sparse_biased_walk_replays_dense(policy):
+    """Biased-policy step() on neighbor lists: same visits, same
+    importance weights (exact floats — the shared ``_biased_row``
+    scatter), same RNG stream, matching the dense Generator.choice
+    path."""
+    g, ng, wd, ws = _biased_pair(policy, seed=5)
+    wd.reset(g, start=3)
+    ws.reset(ng, start=3)
+    for _ in range(200):
+        assert wd.step(g) == ws.step(ng)
+    np.testing.assert_array_equal(wd.visit_counts, ws.visit_counts)
+    np.testing.assert_array_equal(np.asarray(wd.weight_history),
+                                  np.asarray(ws.weight_history))
+    assert wd._rng.random() == ws._rng.random()
+
+
+@pytest.mark.parametrize("policy", sorted(markov.BIASED_POLICIES))
+def test_sparse_biased_batched_walk_replays_dense(policy):
+    """walk_schedule_batched under biased policies: bit-for-bit visit
+    and weight sequences across backends (the compressed sparse CDF
+    shares the dense CDF's float levels)."""
+    g, ng, wd, ws = _biased_pair(policy, seed=8, n=50)
+    wd.reset(g, start=0)
+    ws.reset(ng, start=0)
+    np.testing.assert_array_equal(
+        wd.walk_schedule_batched([g] * 60, advance_first=True),
+        ws.walk_schedule_batched([ng] * 60, advance_first=True))
+    np.testing.assert_array_equal(np.asarray(wd.weight_history),
+                                  np.asarray(ws.weight_history))
+    np.testing.assert_array_equal(wd.walk_weights(60), ws.walk_weights(60))
+
+
+@pytest.mark.parametrize("policy", sorted(markov.BIASED_POLICIES))
+def test_sparse_biased_transition_row_matches_dense(policy):
+    """Row i of the biased MH chain is bit-identical across backends at
+    every walker state, and matches the full-matrix construction."""
+    g, ng, wd, ws = _biased_pair(policy, seed=3, n=40)
+    wd.reset(g, start=0)
+    ws.reset(ng, start=0)
+    for step in range(30):
+        p = markov.biased_transition_matrix(g, wd.policy_weights(g.n))
+        for i in (0, 13, 39, wd.position):
+            dense_row = wd.transition_row(g, i)
+            np.testing.assert_array_equal(ws.transition_row(ng, i),
+                                          dense_row)
+            np.testing.assert_allclose(dense_row, p[i], atol=1e-15)
+        assert wd.step(g) == ws.step(ng)
+
+
 # ------------------------------------------------ scenario schedules ----
 SCENARIOS_RNG_FREE = ["static_regen", "random_waypoint", "gauss_markov",
                       "duty_cycle"]

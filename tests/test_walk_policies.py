@@ -1,0 +1,519 @@
+"""Statistical test harness for the walk-policy stack (docs/walks.md).
+
+The importance-biased policies make two separable claims, and the
+harness tests each where it is mathematically exact:
+
+1. **Chain design** — the biased MH construction targets π ∝ w:
+   detailed balance holds algebraically, ``stationary_distribution``
+   of the built matrix matches w/Σw, and a *chi-square goodness-of-fit*
+   test confirms long thinned walks realize that π empirically, for
+   every policy on both graph backends. The critical value comes from
+   the Wilson–Hilferty cube-root normal approximation (no scipy
+   dependency); walks are thinned (every 20th visit) so the chain's
+   autocorrelation doesn't inflate the statistic, and all draws are
+   seeded, so the statistics below are deterministic numbers checked
+   against a fixed α = 1e-4 threshold — not flaky re-rolls.
+
+2. **Estimator correction** — the per-visit importance weight
+   iw = Σw/(n·w_i) = 1/(n·π_i) makes the visit-weighted estimator
+   unbiased under the chain's stationary law: Σ_i π_i·iw_i·f_i = f̄
+   exactly (an algebraic identity, property-tested over arbitrary
+   weight vectors), and live ``label_skew`` walks (fixed target)
+   converge to the true mean. The ``staleness`` target moves every
+   step, so its correction is exact only w.r.t. the *instantaneous*
+   frozen chain — which is precisely what its chi-square and identity
+   tests freeze and verify.
+
+Plus regression pins for the O(1) incremental ``hitting_time`` against
+the oracle history rescan, and the iw plumbing through
+``zone_schedule``/``fleet_zone_schedule``.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
+from repro.core import markov as M
+from repro.core.graph import (
+    DynamicGraph,
+    neighbor_graph_from_dense,
+    random_geometric_graph,
+)
+from repro.core.markov import RandomWalkServer
+from repro.data.partition import (
+    client_label_histograms,
+    label_skew_weights,
+    padded_label_histograms,
+)
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile("walks", deadline=None)
+    hypothesis.settings.load_profile("walks")
+
+N_NODES = 12
+# Fixed per-client utilities for the label_skew tests (any strictly
+# positive vector works; this one is spread enough to bias visibly).
+LABEL_W = np.random.default_rng(42).uniform(0.5, 3.0, N_NODES)
+
+
+def small_graph():
+    return random_geometric_graph(N_NODES, 4, np.random.default_rng(0))
+
+
+def make_walker(policy, seed=11, gamma=1.5, label_w=LABEL_W):
+    w = RandomWalkServer(transition="metropolis", seed=seed,
+                         policy=policy, bias_gamma=gamma)
+    if policy == "label_skew":
+        w.set_label_weights(label_w)
+    return w
+
+
+def chi2_critical(df, z=3.719):
+    """Upper χ²_df quantile via Wilson–Hilferty (cube-root normal):
+    χ²_q ≈ df·(1 − 2/(9df) + z·√(2/(9df)))³. z = 3.719 is the standard
+    normal upper 1e-4 quantile, so this is the α = 1e-4 critical value
+    (within ~1% of the exact quantile for df ≥ 5 — plenty for a test
+    threshold with the observed ≥ 1.8× margins)."""
+    return df * (1.0 - 2.0 / (9.0 * df)
+                 + z * np.sqrt(2.0 / (9.0 * df))) ** 3
+
+
+def chi2_stat(samples, pi):
+    n = len(pi)
+    counts = np.bincount(np.asarray(samples), minlength=n)
+    expected = len(samples) * np.asarray(pi)
+    return float(((counts - expected) ** 2 / expected).sum())
+
+
+def replay_iws(history, n, policy, gamma, label_w=None):
+    """Oracle replay of the per-visit importance weights from the visit
+    history alone — independently re-derives what ``_record_visit``
+    computed (same float ops, so equality is exact)."""
+    last = np.full(n, -1, dtype=np.int64)
+    last[history[0]] = 0
+    iws = [1.0]
+    for t in range(1, len(history)):
+        if policy == "staleness":
+            k = t - 1
+            w = (1.0 + (k - last).astype(np.float64)) ** gamma
+        else:
+            w = np.asarray(label_w, np.float64)
+        i = history[t]
+        iws.append(float(w.sum() / (n * w[i])))
+        last[i] = t
+    return np.asarray(iws)
+
+
+# ------------------------------------------------------- chain design ----
+def test_biased_matrix_detailed_balance_and_stochasticity():
+    """w_i·P_ij = w_j·P_ji for every edge (detailed balance — the
+    algebraic reason π ∝ w), rows sum to 1, entries nonnegative."""
+    g = small_graph()
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        w = rng.uniform(0.1, 5.0, g.n)
+        p = M.biased_transition_matrix(g, w)
+        np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-12)
+        assert (p >= 0.0).all()
+        flow = w[:, None] * p
+        off = ~np.eye(g.n, dtype=bool)
+        np.testing.assert_allclose(flow[off], flow.T[off], atol=1e-12)
+
+
+def test_biased_row_self_loop_never_negative():
+    """Regression: the rounded off-diagonal terms w_j/(w_i·deg_j) can
+    sum a hair past 1.0, which used to leave a −2⁻⁵² self-loop that
+    ``rng.choice`` rejects mid-walk. Seed 44 below reproduces the
+    overflow pre-clamp (matrix min was −2.22e−16); both the full
+    matrix and the backend-shared row builder must clamp identically."""
+    rng = np.random.default_rng(44)
+    g = random_geometric_graph(30, 6, rng)
+    w = rng.uniform(0.2, 5.0, 30)
+    p = M.biased_transition_matrix(g, w)
+    assert p.min() >= 0.0
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-12)
+
+    sg = neighbor_graph_from_dense(g)
+    wk = M.RandomWalkServer(transition="metropolis", seed=0,
+                            policy="label_skew")
+    wk.set_label_weights(w)
+    # Row comparison uses the walker's mean-normalized weights — the
+    # chain is scale-invariant mathematically but not bit-for-bit.
+    p_norm = M.biased_transition_matrix(g, wk.label_weights)
+    draw = np.random.default_rng(7)
+    for i in range(g.n):
+        for graph in (g, sg):
+            _, row = wk._biased_row(graph, i)
+            assert row.min() >= 0.0
+            assert row[i] == p_norm[i, i]
+            draw.choice(g.n, p=row)  # raises if any mass is negative
+
+    # The uniform Metropolis chain has the identical failure mode
+    # (min(1/deg_i, 1/deg_j) terms rounding past 1): the n=12 deg-5
+    # graph at rng seed 0 had a −2.22e−16 diagonal pre-clamp. Pin the
+    # dense matrix and the sparse row builder together.
+    g0 = random_geometric_graph(12, 5, np.random.default_rng(0))
+    pm = M.metropolis_transition_matrix(g0)
+    assert pm.min() >= 0.0
+    np.testing.assert_allclose(pm.sum(axis=1), 1.0, atol=1e-12)
+    sg0 = neighbor_graph_from_dense(g0)
+    uni = M.RandomWalkServer(transition="metropolis", seed=0)
+    for i in range(g0.n):
+        cands, probs = uni._sparse_row(sg0, i)
+        assert probs.min() >= 0.0
+        assert probs[cands == i][0] == pm[i, i]
+        draw.choice(g0.n, p=uni.transition_row(g0, i))
+
+
+def test_biased_matrix_unit_weights_is_metropolis():
+    """w ≡ 1 degenerates to the Metropolis-Hastings chain float-for-
+    float — the biased construction is a strict generalization."""
+    g = small_graph()
+    np.testing.assert_array_equal(
+        M.biased_transition_matrix(g, np.ones(g.n)),
+        M.metropolis_transition_matrix(g))
+
+
+def test_stationary_distribution_matches_design_target():
+    """``stationary_distribution`` of the built chain equals w/Σw, and
+    the walker's ``stationary_target`` agrees (label_skew: after mean
+    normalization, which leaves π invariant)."""
+    g = small_graph()
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        w = rng.uniform(0.05, 8.0, g.n)
+        pi = M.stationary_distribution(M.biased_transition_matrix(g, w))
+        np.testing.assert_allclose(pi, w / w.sum(), atol=1e-9)
+    walker = make_walker("label_skew")
+    pi = M.stationary_distribution(walker.matrix(g))
+    np.testing.assert_allclose(pi, walker.stationary_target(g.n),
+                               atol=1e-9)
+
+
+CHI2_STEPS, CHI2_THIN = 30_000, 20
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+@pytest.mark.parametrize("policy", ["degree", "metropolis", "label_skew"])
+def test_chi_square_stationarity(policy, backend):
+    """Long seeded walk, thinned to beat autocorrelation: empirical
+    visit frequencies pass a χ² GOF test against the chain's
+    ``stationary_distribution`` at α = 1e-4, on both graph backends.
+    (Observed statistics ≤ ~21 vs the 37.75 critical value.)"""
+    g = small_graph()
+    gr = neighbor_graph_from_dense(g) if backend == "sparse" else g
+    walker = make_walker(policy)
+    walker.reset(gr, start=0)
+    for _ in range(CHI2_STEPS):
+        walker.step(gr)
+    pi = M.stationary_distribution(walker.matrix(g))
+    stat = chi2_stat(np.asarray(walker.history[1:])[::CHI2_THIN], pi)
+    assert stat < chi2_critical(g.n - 1), (policy, backend, stat)
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_chi_square_staleness_frozen_target(backend):
+    """The staleness target moves every step, so its stationarity claim
+    is instantaneous: freeze the weight vector a live staleness walk
+    developed, run the fixed-target chain it induces (via a label_skew
+    walker — the identical row construction), and χ²-test against
+    π ∝ w_frozen."""
+    g = small_graph()
+    live = make_walker("staleness")
+    live.reset(g, start=0)
+    for _ in range(60):
+        live.step(g)
+    snap = live.policy_weights(g.n)
+    assert snap.min() >= 1.0 and snap.max() > snap.min()  # developed
+
+    gr = neighbor_graph_from_dense(g) if backend == "sparse" else g
+    frozen = make_walker("label_skew", seed=13, label_w=snap)
+    frozen.reset(gr, start=0)
+    for _ in range(CHI2_STEPS):
+        frozen.step(gr)
+    pi = M.stationary_distribution(frozen.matrix(g))
+    np.testing.assert_allclose(pi, snap / snap.sum(), atol=1e-9)
+    stat = chi2_stat(np.asarray(frozen.history[1:])[::CHI2_THIN], pi)
+    assert stat < chi2_critical(g.n - 1), (backend, stat)
+
+
+def test_staleness_walk_covers_faster_than_uniform():
+    """The point of the staleness bias: chasing under-visited clients
+    covers the graph sooner and keeps the staleness clock tighter than
+    the uniform Metropolis chain (same seeds, same graph)."""
+    g = small_graph()
+    cover_b, cover_u, stale_b, stale_u = [], [], [], []
+    for seed in range(5):
+        walkers = (make_walker("staleness", seed=seed),
+                   make_walker("metropolis", seed=seed))
+        for walker, cover, stale in zip(walkers, (cover_b, cover_u),
+                                        (stale_b, stale_u)):
+            walker.reset(g, start=0)
+            worst = 0
+            for k in range(1, 400):
+                walker.step(g)
+                worst = max(worst, k - int(walker._last_visit.min()))
+            cover.append(walker.hitting_time())
+            stale.append(worst)
+    assert np.mean(cover_b) < np.mean(cover_u)
+    assert np.mean(stale_b) < np.mean(stale_u)
+
+
+# ------------------------------------------------- estimator correction --
+def test_importance_weight_identity_exact():
+    """The unbiasedness identity, algebraically: under the chain's own
+    stationary law, Σ_i π_i · iw_i · f_i = mean(f) for ANY positive
+    weight vector and ANY f (iw_i = Σw/(n·w_i) = 1/(n·π_i))."""
+    g = small_graph()
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        w = rng.uniform(0.05, 10.0, g.n)
+        f = rng.normal(size=g.n)
+        pi = M.stationary_distribution(M.biased_transition_matrix(g, w))
+        iw = w.sum() / (g.n * w)
+        assert abs(float((pi * iw * f).sum()) - f.mean()) < 1e-9
+
+
+def test_label_skew_walk_unbiased_estimates():
+    """Live fixed-target walks: the iw-weighted empirical mean of a
+    per-client statistic converges to the true (uniform) mean even
+    though visits are biased toward high-utility clients. Seeded, so
+    the per-seed errors are deterministic (observed ≤ 0.017)."""
+    g = small_graph()
+    f = np.random.default_rng(5).uniform(0, 1, g.n)
+    errs = []
+    for seed in range(4):
+        walker = make_walker("label_skew", seed=seed)
+        walker.reset(g, start=0)
+        for _ in range(6000):
+            walker.step(g)
+        iw = np.asarray(walker.weight_history[1:])
+        hist = np.asarray(walker.history[1:])
+        errs.append(abs(float((iw * f[hist]).mean()) - f.mean()))
+    assert max(errs) < 0.05
+    assert np.mean(errs) < 0.02
+
+
+@hypothesis.given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    gamma=st.floats(min_value=0.25, max_value=3.0,
+                    allow_nan=False, allow_infinity=False),
+)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_property_identity_holds_for_any_weights(seed, gamma):
+    """Property form of the unbiasedness identity: arbitrary positive
+    weight vectors (any draw, any sharpening exponent) keep
+    Σ π_i·iw_i·f_i = mean(f) to fp accuracy."""
+    g = small_graph()
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.02, 20.0, g.n) ** gamma
+    f = rng.normal(size=g.n)
+    pi = M.stationary_distribution(M.biased_transition_matrix(g, w))
+    iw = w.sum() / (g.n * w)
+    scale = max(1.0, float(np.abs(f).max()))
+    assert abs(float((pi * iw * f).sum()) - f.mean()) < 1e-8 * scale
+
+
+def test_property_identity_deterministic_twin():
+    """Seed-sweep twin of the hypothesis property above, so minimal
+    environments (no hypothesis installed) keep the coverage."""
+    g = small_graph()
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.02, 20.0, g.n) ** rng.uniform(0.25, 3.0)
+        f = rng.normal(size=g.n)
+        pi = M.stationary_distribution(M.biased_transition_matrix(g, w))
+        iw = w.sum() / (g.n * w)
+        assert abs(float((pi * iw * f).sum()) - f.mean()) < 1e-8
+
+
+@pytest.mark.parametrize("policy", ["staleness", "label_skew"])
+def test_recorded_iws_match_oracle_replay(policy):
+    """``weight_history`` equals an independent replay from the visit
+    history (exact floats): iw is computed from the pre-visit weight
+    state, staleness clocks tick in visit order, label weights are
+    scale-invariant in iw."""
+    g = small_graph()
+    walker = make_walker(policy, gamma=2.0)
+    walker.reset(g, start=0)
+    for _ in range(300):
+        walker.step(g)
+    # label_skew: replay with the walker's mean-normalized weights —
+    # iw is mathematically scale-invariant but only bit-exact on the
+    # floats the walker actually read.
+    oracle = replay_iws(walker.history, g.n, policy, 2.0,
+                        walker.label_weights)
+    np.testing.assert_array_equal(np.asarray(walker.weight_history),
+                                  oracle)
+
+
+def test_uniform_policies_record_unit_weights():
+    """degree/metropolis: every recorded weight is exactly 1.0 and
+    ``walk_weights`` returns None — the engines' signal to skip the
+    correction and keep the uniform computation graph untouched."""
+    g = small_graph()
+    for policy in ("degree", "metropolis"):
+        walker = make_walker(policy)
+        walker.reset(g, start=0)
+        for _ in range(50):
+            walker.step(g)
+        assert walker.weight_history == [1.0] * 51
+        assert walker.walk_weights(20) is None
+        assert not walker.is_biased
+    assert make_walker("staleness").is_biased
+    with pytest.raises(ValueError, match="unknown walk policy"):
+        RandomWalkServer(policy="nope")
+
+
+def test_label_weights_validation():
+    walker = make_walker("metropolis")
+    with pytest.raises(ValueError, match="strictly positive"):
+        walker.set_label_weights(np.array([1.0, 0.0, 2.0]))
+    walker = make_walker("label_skew", label_w=np.array([2.0, 4.0, 6.0]))
+    np.testing.assert_allclose(walker.label_weights.mean(), 1.0)
+    with pytest.raises(ValueError, match="length"):
+        walker.policy_weights(7)
+
+
+# ------------------------------------------------- hitting-time pin ------
+def oracle_hitting_time(history, n):
+    """The O(history·n) rescan the incremental tracker replaced."""
+    seen = set()
+    for t, i in enumerate(history):
+        seen.add(int(i))
+        if len(seen) == n:
+            return t
+    return None
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+@pytest.mark.parametrize("policy", M.WALK_POLICIES)
+def test_hitting_time_matches_oracle(policy, backend):
+    """The incremental first-full-coverage step equals the oracle scan
+    at every prefix of the walk, on both backends, for every policy —
+    including None before coverage and a clean slate after reset()."""
+    g = random_geometric_graph(25, 4, np.random.default_rng(6))
+    gr = neighbor_graph_from_dense(g) if backend == "sparse" else g
+    walker = make_walker(policy,
+                         label_w=np.random.default_rng(0).uniform(0.5, 2,
+                                                                  25))
+    walker.reset(gr, start=0)
+    assert walker.hitting_time() == oracle_hitting_time(walker.history,
+                                                        g.n) is None
+    for _ in range(600):
+        walker.step(gr)
+        assert walker.hitting_time() == oracle_hitting_time(
+            walker.history, g.n)
+    assert walker.hitting_time() is not None     # 600 steps cover n=25
+    walker.reset(gr, start=0)
+    assert walker.hitting_time() is None
+
+
+def test_hitting_time_batched_walk_matches_oracle():
+    g = small_graph()
+    walker = make_walker("staleness")
+    walker.reset(g, start=0)
+    walker.walk_schedule_batched([g] * 120)
+    assert walker.hitting_time() == oracle_hitting_time(walker.history,
+                                                        g.n)
+
+
+# ------------------------------------------------- schedule plumbing -----
+def test_zone_schedule_iw_column():
+    """The (R,) iw column equals the oracle replay of the walker's visit
+    history tail, aligned with the clients column; uniform policies get
+    iw=None. Chunked schedules concatenate to the one-shot column."""
+    def build(policy, chunks):
+        dg = DynamicGraph(N_NODES, min_degree=4, regen_every=10, seed=5)
+        walker = make_walker(policy, seed=6)
+        walker.reset(dg.current())
+        rng = np.random.default_rng(9)
+        out, r = [], 0
+        for c in chunks:
+            out.append(M.zone_schedule(dg, walker, c, 4, rng,
+                                       start_round=r))
+            r += c
+        return out, walker
+
+    (one,), walker = build("staleness", [18])
+    assert one.iw is not None and one.iw.shape == (18,)
+    oracle = replay_iws(walker.history, N_NODES, "staleness", 1.5)
+    np.testing.assert_array_equal(one.iw, oracle[-18:])
+    np.testing.assert_array_equal(one.clients,
+                                  np.asarray(walker.history)[-18:])
+    assert one.iw[0] == 1.0          # round-0 entry: the reset visit
+
+    parts, _ = build("staleness", [8, 10])
+    np.testing.assert_array_equal(
+        one.iw, np.concatenate([p.iw for p in parts]))
+
+    (uni,), _ = build("metropolis", [18])
+    assert uni.iw is None
+
+
+@pytest.mark.parametrize("mode", ["roundrobin", "simultaneous"])
+def test_fleet_schedule_iw_column(mode):
+    """Fleet iw shapes: (R,) in round-robin (the active walker's weight;
+    parked walkers contribute their last recorded weight), (R, K) in
+    simultaneous. Values tie back to the walkers' weight histories."""
+    k_walkers, rounds = 3, 12
+    dg = DynamicGraph(20, min_degree=4, regen_every=10, seed=2)
+    walkers = [make_walker("staleness", seed=10 + k,
+                           label_w=np.ones(20)) for k in range(k_walkers)]
+    for w in walkers:
+        w.reset(dg.current())
+    sched = M.fleet_zone_schedule(dg, walkers, rounds, 4,
+                                  np.random.default_rng(3),
+                                  mode=mode, sync_every=7)
+    if mode == "roundrobin":
+        assert sched.iw.shape == (rounds,)
+        for r in range(rounds):
+            k = int(sched.walker[r])
+            assert sched.iw[r] in walkers[k].weight_history
+    else:
+        assert sched.iw.shape == (rounds, k_walkers)
+        for k, w in enumerate(walkers):
+            np.testing.assert_array_equal(
+                sched.iw[-5:, k], np.asarray(w.weight_history[-5:]))
+    uni = [RandomWalkServer(seed=20 + k) for k in range(k_walkers)]
+    dg2 = DynamicGraph(20, min_degree=4, regen_every=10, seed=2)
+    for w in uni:
+        w.reset(dg2.current())
+    assert M.fleet_zone_schedule(dg2, uni, rounds, 4,
+                                 np.random.default_rng(3),
+                                 mode=mode, sync_every=7).iw is None
+
+
+# ------------------------------------------------- partition utilities ---
+def test_label_histograms_and_skew_weights():
+    """Histogram rows are simplex points; a client holding only the
+    globally rarest label gets the largest utility; balanced clients
+    sit at u = 1; γ sharpens monotonically."""
+    labels = np.array([0] * 50 + [1] * 30 + [2] * 10)
+    parts = [np.arange(0, 40),            # pure label 0 (common)
+             np.arange(50, 80),           # pure label 1
+             np.arange(80, 90),           # pure label 2 (rare)
+             np.array([0, 1, 50, 51, 80, 81])]   # balanced thirds
+    hist = client_label_histograms(labels, parts)
+    np.testing.assert_allclose(hist.sum(axis=1), 1.0)
+    u = label_skew_weights(hist)
+    assert u[2] == u.max() and u[0] == u.min()
+    np.testing.assert_allclose(u[3], 1.0)
+    u_sharp = label_skew_weights(hist, gamma=2.0)
+    np.testing.assert_allclose(u_sharp, u ** 2)
+
+
+def test_padded_histograms_match_list_histograms():
+    """The trainers' padded-device layout produces the same histograms
+    as the index-list partitioner view (padding rows ignored)."""
+    rng = np.random.default_rng(8)
+    labels = rng.integers(0, 5, 200)
+    parts = [rng.choice(200, size=s, replace=False)
+             for s in (30, 17, 44)]
+    m = max(len(p) for p in parts)
+    y_padded = np.zeros((3, m), np.int64)
+    n_valid = np.array([len(p) for p in parts])
+    for k, p in enumerate(parts):
+        y_padded[k, : len(p)] = labels[p]
+    np.testing.assert_allclose(
+        padded_label_histograms(y_padded, n_valid, n_classes=5),
+        client_label_histograms(labels, parts, n_classes=5))
