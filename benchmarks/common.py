@@ -2,7 +2,6 @@
 helpers, and the large-n control-plane probe."""
 from __future__ import annotations
 
-import json
 import os
 import resource
 import time
@@ -153,21 +152,22 @@ def bench_row(name: str, *, n: int, engine: str, us_per_round: float,
 
 
 def write_bench_rows(rows: list[dict], path: str | None = None) -> str:
-    """Merge rows into ``BENCH_scaling.json`` keyed by ``name`` (so
-    partial benchmark runs update their columns without clobbering the
-    rest) and return the path. The CSV on stdout stays the human view;
+    """Merge rows into ``BENCH_scaling.json`` keyed by
+    ``(name, n, K, engine)`` (so partial benchmark runs update their own
+    rows without clobbering the rest) and return the path. The write
+    goes through the telemetry artifacts layer — temp file +
+    ``os.replace`` — so an interrupted bench can never truncate the
+    repo-root trajectory file. The CSV on stdout stays the human view;
     this file is the diffable perf trajectory across PRs."""
+    from repro.telemetry import (
+        atomic_write_json,
+        load_bench_rows,
+        merge_bench_rows,
+    )
+
     path = path or BENCH_JSON
-    merged: dict[str, dict] = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            merged = {r["name"]: r for r in json.load(f)}
-    for r in rows:
-        merged[r["name"]] = r
-    with open(path, "w") as f:
-        json.dump([merged[k] for k in sorted(merged)], f, indent=1)
-        f.write("\n")
-    return path
+    merged = merge_bench_rows(load_bench_rows(path), rows)
+    return atomic_write_json(path, merged)
 
 
 def control_plane_rate(n: int, rounds: int = 64, *,

@@ -1,0 +1,129 @@
+"""Telemetry overhead gate: recording must stay ≤ 5% per round.
+
+Measures the n=2k scenario control-plane bench (the same workload as
+``scan_scaling/control_plane/n2000/sparse``) twice — telemetry off vs
+telemetry on (phase spans + the full per-visit walk trace streamed to
+``events.jsonl``) — and writes both rows plus the measured overhead to
+``BENCH_scaling.json``:
+
+    telemetry_overhead/control_plane/n2000/{off,on}
+
+Usage::
+
+    python -m benchmarks.telemetry_overhead [--smoke]
+        [--clients 2000] [--rounds 64] [--assert-overhead-pct 5.0]
+
+``--assert-overhead-pct`` makes the run fail when the measured overhead
+exceeds the bound (the acceptance gate; default asserts at 5%).
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import markov
+from repro.core.markov import RandomWalkServer
+from repro.telemetry import TelemetryRun, visit_events_from_schedule
+
+from .common import bench_row, emit, reset_peak_rss, write_bench_rows
+
+
+def _build(n: int, seed: int = 0):
+    from repro.scenarios import (
+        LinkConfig,
+        MobilityConfig,
+        Scenario,
+        ScenarioConfig,
+    )
+
+    radio = float(np.sqrt(12.0 / (np.pi * n)))
+    cfg = ScenarioConfig(
+        name="telemetry_overhead",
+        mobility=MobilityConfig(model="gauss_markov", radio_range=radio),
+        links=LinkConfig(enabled=True, dropout=True),
+        graph_backend="sparse", neighbor_k_max=32)
+    scenario = Scenario(n, cfg, seed=seed)
+    walker = RandomWalkServer(seed=seed + 1)
+    walker.reset(scenario.current())
+    return scenario, walker
+
+
+def _run_once(n: int, rounds: int, zone: int, tel: TelemetryRun | None,
+              seed: int = 0) -> float:
+    """Seconds/round of the control-plane schedule, optionally recorded
+    (phase span + per-visit trace — the full telemetry-on hot path)."""
+    scenario, walker = _build(n, seed)
+    scenario.telemetry = tel
+    rng = np.random.default_rng(seed)
+
+    def price(graphs, clients, idx, mask):
+        return scenario.price_schedule(graphs, clients, idx, mask, 2048)
+
+    t0 = time.perf_counter()
+    if tel is None:
+        sched = markov.zone_schedule(scenario, walker, rounds, zone, rng,
+                                     price=price)
+    else:
+        with tel.phase("schedule", chunk_rounds=rounds):
+            sched = markov.zone_schedule(scenario, walker, rounds, zone,
+                                         rng, price=price)
+        for v in visit_events_from_schedule(sched, 0):
+            tel.visit(**v)
+    return (time.perf_counter() - t0) / rounds
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--clients", type=int, default=2000)
+    ap.add_argument("--rounds", type=int, default=64)
+    ap.add_argument("--zone", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run (n=400, 2 repeats)")
+    ap.add_argument("--assert-overhead-pct", type=float, default=5.0,
+                    help="fail when telemetry overhead exceeds this "
+                         "(negative disables)")
+    args = ap.parse_args(argv)
+    n, repeats = args.clients, args.repeats
+    if args.smoke:
+        n, repeats = min(n, 400), min(repeats, 2)
+
+    reset_peak_rss()
+    # Interleaved best-of-R so machine noise hits both arms equally.
+    best_off = best_on = float("inf")
+    for rep in range(repeats):
+        best_off = min(best_off,
+                       _run_once(n, args.rounds, args.zone, None,
+                                 seed=rep))
+        with tempfile.TemporaryDirectory() as td:
+            with TelemetryRun(td + "/run", seed=rep,
+                              config={"bench": "telemetry_overhead",
+                                      "n": n}) as tel:
+                best_on = min(best_on,
+                              _run_once(n, args.rounds, args.zone, tel,
+                                        seed=rep))
+    overhead_pct = (best_on / best_off - 1.0) * 100.0
+    emit(f"telemetry_overhead/control_plane/n{n}/off",
+         best_off * 1e6, "us_per_round")
+    emit(f"telemetry_overhead/control_plane/n{n}/on",
+         best_on * 1e6, f"overhead={overhead_pct:+.2f}%")
+    write_bench_rows([
+        bench_row(f"telemetry_overhead/control_plane/n{n}/off",
+                  n=n, engine="sparse", us_per_round=best_off * 1e6),
+        bench_row(f"telemetry_overhead/control_plane/n{n}/on",
+                  n=n, engine="sparse", us_per_round=best_on * 1e6,
+                  overhead_pct=round(overhead_pct, 2)),
+    ])
+    if args.assert_overhead_pct >= 0 and \
+            overhead_pct > args.assert_overhead_pct:
+        raise SystemExit(
+            f"telemetry overhead {overhead_pct:.2f}% exceeds "
+            f"{args.assert_overhead_pct}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,8 +26,9 @@ class APFLTrainer(TrainerBase):
 
     def __init__(self, model, data: DeviceData, *, alpha: float = 0.5,
                  lr: float = 0.05, local_steps: int = 10,
-                 clients_per_round: int = 10, batch_size: int = 20):
-        super().__init__(model, data, batch_size)
+                 clients_per_round: int = 10, batch_size: int = 20,
+                 telemetry=None):
+        super().__init__(model, data, batch_size, telemetry=telemetry)
         self.m = int(min(clients_per_round, self.n_clients))
         self.alpha = alpha
 

@@ -23,8 +23,8 @@ class DittoTrainer(TrainerBase):
     def __init__(self, model, data: DeviceData, *, lam: float = 1.0,
                  lr: float = 0.05, local_steps: int = 10,
                  personal_steps: int = 5, clients_per_round: int = 10,
-                 batch_size: int = 20):
-        super().__init__(model, data, batch_size)
+                 batch_size: int = 20, telemetry=None):
+        super().__init__(model, data, batch_size, telemetry=telemetry)
         self.m = int(min(clients_per_round, self.n_clients))
         self.lam = lam
         local = self.make_local_sgd(lr, local_steps)

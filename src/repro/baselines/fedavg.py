@@ -20,8 +20,8 @@ class FedAvgTrainer(TrainerBase):
 
     def __init__(self, model, data: DeviceData, *, lr: float = 0.05,
                  local_steps: int = 10, clients_per_round: int = 10,
-                 batch_size: int = 20):
-        super().__init__(model, data, batch_size)
+                 batch_size: int = 20, telemetry=None):
+        super().__init__(model, data, batch_size, telemetry=telemetry)
         self.lr = lr
         self.local_steps = local_steps
         self.m = int(min(clients_per_round, self.n_clients))

@@ -27,8 +27,8 @@ class PFedMeTrainer(TrainerBase):
                  inner_lr: float = 0.05, inner_steps: int = 5,
                  local_rounds: int = 5, eta: float = 0.05,
                  server_beta: float = 1.0, clients_per_round: int = 10,
-                 batch_size: int = 20):
-        super().__init__(model, data, batch_size)
+                 batch_size: int = 20, telemetry=None):
+        super().__init__(model, data, batch_size, telemetry=telemetry)
         self.m = int(min(clients_per_round, self.n_clients))
         self.lam, self.inner_lr = lam, inner_lr
         self.inner_steps, self.local_rounds = inner_steps, local_rounds

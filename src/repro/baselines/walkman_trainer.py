@@ -28,8 +28,9 @@ class WalkmanTrainer(TrainerBase):
 
     def __init__(self, model, data: DeviceData, *, beta: float = 3.0,
                  min_degree: int = 5, regen_every: int = 10,
-                 batch_size: int = 20, scenario=None, seed: int = 0):
-        super().__init__(model, data, batch_size)
+                 batch_size: int = 20, scenario=None, telemetry=None,
+                 seed: int = 0):
+        super().__init__(model, data, batch_size, telemetry=telemetry)
         self.beta = beta
         self._seed = int(seed)
         self._min_degree = int(min_degree)

@@ -19,6 +19,63 @@ from ..models.small import SmallModel, accuracy, cross_entropy
 
 PyTree = Any
 
+# ---------------------------------------------------------------------------
+# round_metrics schema: one canonical contract for every engine.
+# ---------------------------------------------------------------------------
+
+#: keys every round_metrics entry must carry, whichever engine emitted it
+REQUIRED_ROUND_KEYS = ("round", "comm_bytes")
+
+#: canonical host-side types for the known metric keys (unknown keys are
+#: allowed — trainers extend the schema — but a known key emitted with a
+#: surprising type is a bug: it breaks the telemetry JSONL stream and
+#: the eager ≡ scan equality pins). bool is NOT an int here.
+ROUND_METRIC_TYPES: dict[str, type] = {
+    "round": int, "comm_bytes": int, "client": int, "zone": int,
+    "n_i": int, "walker": int, "staleness_max": int,
+    "train_loss": float, "kappa": float, "latency_s": float,
+    "energy_j": float, "staleness_p50": float, "clients": tuple,
+}
+
+
+def normalize_round_metrics(metrics: dict, rnd: int) -> dict:
+    """Copy + backfill the keys the schema requires of every entry —
+    the single normalization path both simulation engines run each
+    entry through (eager per round, scan per chunk entry)."""
+    m = dict(metrics)
+    m.setdefault("round", rnd)
+    m.setdefault("comm_bytes", 0)
+    return m
+
+
+def validate_round_metrics(entries: list[dict], *,
+                           start_round: int = 0) -> frozenset:
+    """Assert a round_metrics list obeys the canonical schema and
+    return its key set: required keys present, ONE key set shared by
+    every entry, known keys carrying their canonical host types, and
+    ``round`` values consecutive from ``start_round``. Both engines
+    must produce lists that pass this with identical key sets (the
+    schema-parity test asserts exactly that)."""
+    if not entries:
+        return frozenset()
+    keys = frozenset(entries[0])
+    for i, m in enumerate(entries):
+        missing = [k for k in REQUIRED_ROUND_KEYS if k not in m]
+        assert not missing, f"entry {i} missing required keys {missing}"
+        assert frozenset(m) == keys, (
+            f"entry {i} key set {sorted(m)} != entry 0 {sorted(keys)}")
+        assert m["round"] == start_round + i, (
+            f"entry {i}: round={m['round']}, expected {start_round + i}")
+        for k, v in m.items():
+            want = ROUND_METRIC_TYPES.get(k)
+            if want is None:
+                continue
+            ok = isinstance(v, want) and not (
+                want is not bool and isinstance(v, bool))
+            assert ok, (f"entry {i} key {k!r}: expected {want.__name__}, "
+                        f"got {type(v).__name__} ({v!r})")
+    return keys
+
 
 class DeviceData(NamedTuple):
     """Stacked federated data on device (leading axis = client)."""
@@ -60,12 +117,13 @@ class TrainerBase:
     personalized: bool = True
 
     def __init__(self, model: SmallModel, data: DeviceData,
-                 batch_size: int = 20):
+                 batch_size: int = 20, telemetry=None):
         self.model = model
         self.data = data
         self.batch_size = int(batch_size)
         self.n_clients = data.n_clients
         self.scenario = None   # attach_scenario() / trainer kwarg
+        self.telemetry = telemetry   # TelemetryRun or None (off)
 
         def loss_fn(params, xb, yb, rng):
             logits = model.apply(params, xb, train=True, rng=rng)
@@ -157,6 +215,7 @@ class TrainerBase:
 
         self.scenario = build_scenario(spec, self.n_clients, seed=seed,
                                        positions_only=True)
+        self.scenario.telemetry = self.telemetry
 
     def _attach_walking_scenario(self, spec, seed: int, *,
                                  min_degree: int = 5, regen_every: int = 10,
@@ -188,6 +247,24 @@ class TrainerBase:
         if label_weights is not None:
             self.walker.set_label_weights(label_weights)
         self.walker.reset(self.dyn_graph.current())
+        self.scenario.telemetry = self.telemetry
+
+    def set_telemetry(self, run) -> None:
+        """Attach (or detach, ``None``) a ``TelemetryRun``: the trainer
+        and its scenario emit phase spans / events into it. Never
+        touches any RNG stream, so trajectories are unchanged."""
+        self.telemetry = run
+        if self.scenario is not None:
+            self.scenario.telemetry = run
+
+    def _phase(self, name: str, **meta):
+        """A phase-timer span against the attached telemetry run, or a
+        record-nowhere span when telemetry is off."""
+        if self.telemetry is None:
+            from ..telemetry import null_phase
+
+            return null_phase()
+        return self.telemetry.phase(name, **meta)
 
     def select_clients(self, rnd: int, rng: np.random.Generator,
                        m: int) -> np.ndarray:

@@ -392,6 +392,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         if self._use_iw:
             args.append(jnp.asarray(sched.iw, jnp.float32))
         final, (losses, kappas) = fn(state, *args)
+        self._chunk_shapes.add((engine, sched.rounds))
         return final, {"train_loss": losses, "kappa": kappas}
 
     def chunk_round_metrics(self, sched: FleetZoneSchedule, stacked: dict,

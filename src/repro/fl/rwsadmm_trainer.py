@@ -80,9 +80,10 @@ class RWSADMMTrainer(TrainerBase):
                                           # the unbiased ``transition``
         walk_bias: float = 1.0,           # staleness exponent / label-
                                           # skew sharpening γ
+        telemetry=None,                   # TelemetryRun or None (off)
         seed: int = 0,
     ):
-        super().__init__(model, data, batch_size)
+        super().__init__(model, data, batch_size, telemetry=telemetry)
         self.hp = hp
         self.solver = solver
         self.dp_clip = dp_clip
@@ -110,6 +111,7 @@ class RWSADMMTrainer(TrainerBase):
         self.attach_scenario(scenario, seed=seed)
         self._round_fn = jax.jit(functools.partial(self._round_impl))
         self._chunk_fns: dict = {}   # engine -> jitted lax.scan driver
+        self._chunk_shapes: set = set()   # (engine, R) already compiled
 
     def attach_scenario(self, spec, seed: int | None = None) -> None:
         """(Re)build the environment and reset the walker onto it.
@@ -348,6 +350,15 @@ class RWSADMMTrainer(TrainerBase):
             batched_walk=self.batched_walk,
         )
 
+    def chunk_is_cold(self, engine: str, rounds: int | None = None
+                      ) -> bool:
+        """True when the next ``run_chunk(engine=…)`` call at this chunk
+        length will trace + compile a fresh executable (jit caches by
+        engine and by the scan length) — the telemetry phase timers tag
+        such spans ``includes_compile`` so the report CLI can separate
+        compile cost from steady-state chunk throughput."""
+        return (engine, rounds) not in self._chunk_shapes
+
     def _engine_use_fused(self, engine: str) -> bool:
         """Validate a scan engine name; True when it takes the fused
         (Pallas zone kernel) hot path. Shared with the fleet driver."""
@@ -438,6 +449,7 @@ class RWSADMMTrainer(TrainerBase):
         if self._use_iw:
             args.append(jnp.asarray(sched.iw, jnp.float32))
         final, (losses, kappas) = fn(state, *args)
+        self._chunk_shapes.add((engine, sched.rounds))
         return final, {"train_loss": losses, "kappa": kappas}
 
     # ------------------------------------------------------------------

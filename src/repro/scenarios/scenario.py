@@ -52,11 +52,14 @@ from .mobility import build_mobility
 
 class Scenario:
     def __init__(self, n: int, cfg: ScenarioConfig | str, seed: int = 0,
-                 *, positions_only: bool = False):
+                 *, positions_only: bool = False, telemetry=None):
         if isinstance(cfg, str):
             cfg = get_scenario_config(cfg)
         self.n = n
         self.cfg = cfg
+        self.telemetry = telemetry   # TelemetryRun or None (off):
+        # schedule() emits fenced "scenario_rollout" phase spans into it
+        # — pure host-side control plane, no RNG or trajectory impact.
         self.positions_only = bool(positions_only)
         self.mobility = build_mobility(n, cfg.mobility,
                                        backend=cfg.graph_backend,
@@ -140,6 +143,13 @@ class Scenario:
         if include_current:
             graphs.append(self.current())
             avails.append(self.avail)
+        if self.telemetry is not None:
+            span = self.telemetry.phase(
+                "scenario_rollout", rounds=rounds, batched=bool(batched),
+                backend=self.cfg.graph_backend)
+            span.__enter__()
+        else:
+            span = None
         if batched:
             chunk = max(1, int(self.cfg.rollout_chunk))
             while len(graphs) < rounds:
@@ -163,6 +173,8 @@ class Scenario:
             while len(graphs) < rounds:
                 graphs.append(self.step())
                 avails.append(self.avail)
+        if span is not None:
+            span.__exit__(None, None, None)
         # Copy-on-seed: the scenario retains the window's last graphs as
         # its current state; their arrays/caches are views into the
         # rollout's (R, n, n)/(R, n, 2) stacks and would pin the whole

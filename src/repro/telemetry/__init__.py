@@ -1,0 +1,60 @@
+"""Telemetry: structured run recording for the whole stack.
+
+One :class:`TelemetryRun` per recorded run captures a manifest (config,
+seed, git SHA, jax backend/devices, package versions) and streams typed
+events — ``round`` / ``visit`` / ``snapshot`` / ``phase`` / ``counter``
+— to ``runs/<id>/events.jsonl``. Every layer emits into it through an
+optional ``telemetry=`` hook (``run_simulation``, the RWSADMM single
+and fleet trainers, the FedAvg-family baselines, ``Scenario``); the
+default ``None`` keeps today's behavior bit-identical.
+
+Render a recorded run with ``python -m repro.telemetry.report
+runs/<id>``; see ``docs/observability.md`` for the event schema,
+phase-timer semantics, and profiler opt-in.
+"""
+from .artifacts import (
+    atomic_write_json,
+    atomic_write_text,
+    load_bench_rows,
+    merge_bench_rows,
+)
+from .events import (
+    EVENT_TYPES,
+    SCHEMA_VERSION,
+    TelemetryError,
+    read_events,
+    split_by_type,
+    validate_event,
+)
+from .profiler import annotate, maybe_trace, profiling_enabled
+from .recorder import (
+    PhaseSpan,
+    TelemetryRun,
+    manifest_fingerprint,
+    null_phase,
+    telemetry_print,
+)
+from .trace import visit_events_from_round, visit_events_from_schedule
+
+__all__ = [
+    "EVENT_TYPES",
+    "SCHEMA_VERSION",
+    "PhaseSpan",
+    "TelemetryError",
+    "TelemetryRun",
+    "annotate",
+    "atomic_write_json",
+    "atomic_write_text",
+    "load_bench_rows",
+    "manifest_fingerprint",
+    "maybe_trace",
+    "merge_bench_rows",
+    "null_phase",
+    "profiling_enabled",
+    "read_events",
+    "split_by_type",
+    "telemetry_print",
+    "validate_event",
+    "visit_events_from_round",
+    "visit_events_from_schedule",
+]

@@ -1,0 +1,57 @@
+"""Opt-in device-level profiling hooks (``jax.profiler``).
+
+Phase timers (``TelemetryRun.phase``) give wall-clock spans; when that
+is not enough, a run opened with ``profile=True`` (or with
+``REPRO_PROFILE=1`` in the environment) additionally wraps its training
+loop in ``jax.profiler.trace`` writing a TensorBoard-loadable trace to
+``runs/<id>/profile/``, and hot-path call sites can annotate compiled
+regions with :func:`annotate` (``jax.profiler.TraceAnnotation``) so the
+device timeline carries the same phase names as the event stream.
+
+Everything degrades to a no-op when profiling is off or the profiler is
+unavailable, so these hooks are safe to leave in library code.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+
+def profiling_enabled(run=None) -> bool:
+    """True when this run (or the environment) opted into profiling."""
+    if run is not None and getattr(run, "profile", False):
+        return True
+    return os.environ.get("REPRO_PROFILE", "") not in ("", "0")
+
+
+@contextlib.contextmanager
+def maybe_trace(run=None):
+    """``jax.profiler.trace`` over the wrapped block, writing under the
+    run's ``profile/`` directory — a no-op unless profiling is enabled
+    and a run directory exists to hold the trace."""
+    if run is None or not profiling_enabled(run):
+        yield None
+        return
+    logdir = os.path.join(run.run_dir, "profile")
+    try:
+        import jax.profiler as jp
+
+        os.makedirs(logdir, exist_ok=True)
+        with jp.trace(logdir):
+            yield logdir
+        run.update_manifest(profile_dir="profile")
+    except Exception:
+        # Profiler unavailable (or a second concurrent trace): never
+        # let observability take down the run being observed.
+        yield None
+
+
+def annotate(name: str):
+    """Named region on the device trace (``TraceAnnotation``); a cheap
+    no-op context manager when the profiler is unavailable."""
+    try:
+        import jax.profiler as jp
+
+        return jp.TraceAnnotation(name)
+    except Exception:  # pragma: no cover - jax always present in CI
+        return contextlib.nullcontext()

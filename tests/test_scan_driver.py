@@ -17,7 +17,7 @@ from repro.core.markov import RandomWalkServer
 from repro.core.rwsadmm import RWSADMMHparams
 from repro.data import make_image_dataset, pathological_split
 from repro.data.loader import build_federated
-from repro.fl.base import to_device_data
+from repro.fl.base import to_device_data, validate_round_metrics
 from repro.fl.rwsadmm_trainer import RWSADMMTrainer
 from repro.fl.simulation import run_simulation
 from repro.models.small import get_model
@@ -234,8 +234,13 @@ def test_round_metrics_schema_parity(fed):
     res_s = run_simulation(mk(), rounds=12, eval_every=6, seed=0,
                            engine="scan")
     assert len(res_e.round_metrics) == len(res_s.round_metrics) == 12
+    # Shared canonical validator: required keys, one key set per list,
+    # canonical host types, consecutive rounds — and identical key sets
+    # across engines.
+    keys_e = validate_round_metrics(res_e.round_metrics)
+    keys_s = validate_round_metrics(res_s.round_metrics)
+    assert keys_e == keys_s, (sorted(keys_e), sorted(keys_s))
     for me, ms in zip(res_e.round_metrics, res_s.round_metrics):
-        assert set(me) == set(ms), (sorted(me), sorted(ms))
         assert me["round"] == ms["round"]
         assert me["client"] == ms["client"]
         assert me["zone"] == ms["zone"]
