@@ -28,11 +28,21 @@ Both sections also write machine-readable rows (name, n, K, engine,
 us_per_round, peak_rss_mb) into BENCH_scaling.json at the repo root, so
 perf regressions are diffable across PRs.
 
+A third section (``--lazy``) runs full TRAINING rounds at n ∈ {100k, 1M}
+on the lazy client plane — bounded LRU client store + on-demand dataset
+materialization (docs/performance.md §7) over the sparse control plane —
+and certifies the bounded footprint via the peak_rss_mb column:
+
+  scan_scaling/lazy_plane/n{N}/scan,{us_per_round},peak_rss_mb=...
+
 Smoke (CI, <2 min):  python -m benchmarks.scan_scaling --rounds 30 \
     --clients 20 --no-control-plane
 Sparse smoke (CI):   python -m benchmarks.scan_scaling --control-plane \
     --cp-clients 10000 --assert-rss-mb 1024
-Full:                python -m benchmarks.scan_scaling
+Lazy smoke (CI):     python -m benchmarks.scan_scaling --lazy \
+    --lazy-clients 100000 --assert-rss-mb 2048
+Full:                python -m benchmarks.scan_scaling && \
+    python -m benchmarks.scan_scaling --lazy
 """
 from __future__ import annotations
 
@@ -150,6 +160,79 @@ def control_plane(clients=(2000, 10000, 50000), rounds: int = 64,
     return results
 
 
+def lazy_plane(clients=(100_000, 1_000_000), rounds: int = 32,
+               capacity: int = 1024) -> dict:
+    """Full TRAINING rounds at n up to 10⁶ on the lazy client plane:
+    bounded LRU store + on-demand dataset materialization + sparse
+    control plane, scan engine. The dense plane would need the (n, …)
+    client stack and the (n, m, d) dataset stack — ~300 GB at n = 10⁶
+    for this workload — while the lazy plane's footprint is set by
+    ``capacity`` (store rows) plus the O(n·k) control plane, which is
+    what the ``peak_rss_mb`` column certifies. Returns {n: s_per_round}
+    and appends rows to BENCH_scaling.json."""
+    import dataclasses as _dc
+
+    from repro.data import synthetic_lr_factory
+    from repro.scenarios import (
+        LinkConfig,
+        MobilityConfig,
+        ScenarioConfig,
+    )
+
+    results: dict = {}
+    json_rows = []
+    for n in clients:
+        reset_peak_rss()
+        # Narrower count tail than the paper default (mean_samples 2.0
+        # vs 4.0): packed store rows are max_train wide, and one 1-in-a-
+        # million lognormal straggler would pad every slot's row.
+        factory = synthetic_lr_factory(
+            n_clients=n, seed=0, min_samples=20, mean_samples=2.0)
+        model = get_model("mlr", (60,))
+        radio = float(np.sqrt(12.0 / (np.pi * n)))
+        cfg = ScenarioConfig(
+            name="bench_lazy_gm_sparse",
+            mobility=MobilityConfig(model="gauss_markov",
+                                    radio_range=radio),
+            links=LinkConfig(enabled=True, dropout=True),
+            graph_backend="sparse", neighbor_k_max=32)
+        # Small rollout chunks: the (chunk, n, k_max) neighbor-list
+        # stacks are the biggest transient at n = 10⁶ (≈0.5 GB each at
+        # chunk 8) — the store itself stays capacity-bounded.
+        cfg = _dc.replace(cfg, rollout_chunk=8)
+        trainer = RWSADMMTrainer(
+            model, factory,
+            RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
+            zone_size=8, batch_size=20, solver="closed_form",
+            scenario=cfg, seed=0, store_capacity=capacity)
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        sched = trainer.schedule(rounds, rng, start_round=0)
+        state, _ = trainer.run_chunk(state, sched, engine="scan")
+        jax.block_until_ready(state.server.y)
+        t0 = time.perf_counter()
+        sched = trainer.schedule(rounds, rng, start_round=rounds)
+        state, stacked = trainer.run_chunk(state, sched, engine="scan")
+        jax.block_until_ready(stacked["train_loss"])
+        sec = (time.perf_counter() - t0) / rounds
+        c = trainer.store.counters
+        name = f"scan_scaling/lazy_plane/n{n}/scan"
+        emit(name, sec * 1e6,
+             f"rounds_per_s={1.0 / sec:.1f} "
+             f"peak_rss_mb={peak_rss_mb():.0f} "
+             f"resident={trainer.store.n_resident}/{capacity} "
+             f"miss={c['misses']} evict={c['evictions']}")
+        json_rows.append(bench_row(
+            name, n=n, engine="scan", us_per_round=sec * 1e6,
+            rounds=2 * rounds, capacity=capacity,
+            resident=trainer.store.n_resident,
+            store_misses=c["misses"], store_evictions=c["evictions"]))
+        results[n] = sec
+        del trainer, state, sched, stacked, factory
+    write_bench_rows(json_rows)
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--rounds", type=int, default=200,
@@ -165,17 +248,31 @@ def main() -> None:
                     help="control-plane client counts")
     ap.add_argument("--cp-rounds", type=int, default=64,
                     help="control-plane rollout window")
+    ap.add_argument("--lazy", action="store_true",
+                    help="run ONLY the lazy client-plane training rows")
+    ap.add_argument("--lazy-clients", type=int, nargs="+",
+                    default=[100_000, 1_000_000],
+                    help="lazy-plane client counts")
+    ap.add_argument("--lazy-rounds", type=int, default=32,
+                    help="lazy-plane timed rounds (one scan chunk)")
+    ap.add_argument("--lazy-capacity", type=int, default=1024,
+                    help="lazy-plane store capacity (resident slots)")
     ap.add_argument("--assert-rss-mb", type=float, default=None,
                     help="exit nonzero if peak RSS exceeds this (the "
-                    "sparse-backend CI memory gate)")
+                    "sparse-backend / lazy-plane CI memory gate)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if not args.control_plane:
-        run(rounds=args.rounds, clients=tuple(args.clients))
-    if args.control_plane or not args.no_control_plane:
-        control_plane(clients=tuple(args.cp_clients),
-                      rounds=args.cp_rounds,
-                      dense_reference=not args.control_plane)
+    if args.lazy:
+        lazy_plane(clients=tuple(args.lazy_clients),
+                   rounds=args.lazy_rounds,
+                   capacity=args.lazy_capacity)
+    else:
+        if not args.control_plane:
+            run(rounds=args.rounds, clients=tuple(args.clients))
+        if args.control_plane or not args.no_control_plane:
+            control_plane(clients=tuple(args.cp_clients),
+                          rounds=args.cp_rounds,
+                          dense_reference=not args.control_plane)
     if args.assert_rss_mb is not None:
         # Gate on the max over every measured phase, not the most
         # recent one (phases reset the kernel watermark) — and note the

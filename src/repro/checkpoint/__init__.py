@@ -1,1 +1,7 @@
-from .checkpoint import load_pytree, restore_latest, save_pytree  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    load_client_store,
+    load_pytree,
+    restore_latest,
+    save_client_store,
+    save_pytree,
+)

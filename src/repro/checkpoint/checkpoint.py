@@ -62,6 +62,29 @@ def load_pytree(path: str, template: PyTree) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def save_client_store(path: str, store) -> str:
+    """Save a :class:`~repro.fl.client_store.ClientStore`'s host-side
+    bookkeeping (slot map, LRU order, counters, spill buffer) to ``path``
+    (.npz). Pairs with the pytree checkpoint of the trainer state: the
+    packed client rows live in ``state.clients`` and are saved by
+    :func:`save_pytree`; this captures everything else the store needs
+    to resume mid-run, including evicted (spilled) client rows."""
+    sd = store.state_dict()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in sd.items()})
+    return path
+
+
+def load_client_store(path: str, store) -> None:
+    """Restore ``store`` (already constructed with the same factory and
+    capacity) from a file written by :func:`save_client_store`. Packed
+    dataset rows for resident clients are re-materialized from the
+    store's factory; the caller restores the packed x/z rows separately
+    via :func:`load_pytree` on the trainer state."""
+    with np.load(path) as data:
+        store.load_state_dict({k: data[k] for k in data.files})
+
+
 def restore_latest(directory: str, template: PyTree,
                    pattern: str = r"ckpt_(\d+)\.npz"):
     """Restore the highest-step checkpoint in ``directory`` or None."""

@@ -1,5 +1,15 @@
 """Offline data pipeline: synthetic datasets + federated partitioners."""
 from .partition import dirichlet_split, pathological_split  # noqa: F401
 from .synthetic_images import make_image_dataset  # noqa: F401
-from .synthetic_lr import make_synthetic_lr  # noqa: F401
-from .loader import ClientDataset, FederatedData, minibatch  # noqa: F401
+from .synthetic_lr import (  # noqa: F401
+    make_synthetic_lr,
+    make_synthetic_lr_lazy,
+    synthetic_lr_factory,
+)
+from .loader import (  # noqa: F401
+    ClientDataFactory,
+    ClientDataset,
+    FederatedData,
+    factory_from_federated,
+    minibatch,
+)

@@ -8,6 +8,7 @@ never retrigger compilation.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
@@ -115,6 +116,82 @@ def _stack(clients) -> FederatedData:
         ye[k, : len(d)] = d
         me[k, : len(d)] = 1.0
     return FederatedData(xt, yt, mt, xe, ye, me)
+
+
+# ---------------------------------------------------------------------------
+# Lazy client plane: per-client dataset factories.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClientDataFactory:
+    """Deterministic on-demand source of per-client dataset rows.
+
+    The lazy client plane (``client_plane="lazy"``) materializes a
+    client's dataset only when the random walk first reaches it, instead
+    of stacking all n clients up front (``_stack``/``to_device_data``).
+    ``fetch(k)`` must be a pure function of ``k`` — re-materializing a
+    client after eviction must reproduce byte-identical rows, which is
+    what lets the bounded LRU store skip spilling data (only ADMM state
+    spills; data is regenerated).
+
+    ``rows(ids)`` pads every client to the declared ``max_train`` /
+    ``max_test`` widths — the same zero-fill layout ``_stack`` uses, so
+    a factory wrapped around a stacked :class:`FederatedData` reproduces
+    its rows bit-for-bit (pinned in ``tests/test_lazy_plane.py``).
+    """
+
+    n_clients: int
+    max_train: int
+    max_test: int
+    feature_shape: tuple
+    fetch: Callable[[int], tuple[np.ndarray, np.ndarray,
+                                 np.ndarray, np.ndarray]]
+
+    def rows(self, ids) -> tuple[np.ndarray, ...]:
+        """Stacked padded rows for ``ids`` in DeviceData column order:
+        (x_train, y_train, n_train, x_test, y_test, mask_test)."""
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        m = len(ids)
+        feat = tuple(self.feature_shape)
+        xt = np.zeros((m, self.max_train) + feat, np.float32)
+        yt = np.zeros((m, self.max_train), np.int32)
+        nt = np.zeros((m,), np.int32)
+        xe = np.zeros((m, self.max_test) + feat, np.float32)
+        ye = np.zeros((m, self.max_test), np.int32)
+        me = np.zeros((m, self.max_test), np.float32)
+        for j, k in enumerate(ids):
+            a, b, c, d = self.fetch(int(k))
+            if len(b) > self.max_train or len(d) > self.max_test:
+                raise ValueError(
+                    f"client {int(k)}: {len(b)} train / {len(d)} test "
+                    f"samples exceed the factory's declared widths "
+                    f"({self.max_train}, {self.max_test})")
+            xt[j, : len(b)] = a
+            yt[j, : len(b)] = b
+            nt[j] = len(b)
+            xe[j, : len(d)] = c
+            ye[j, : len(d)] = d
+            me[j, : len(d)] = 1.0
+        return xt, yt, nt, xe, ye, me
+
+
+def factory_from_federated(fed: FederatedData) -> ClientDataFactory:
+    """Wrap an eagerly stacked dataset as a lazy factory (small-n
+    equivalence testing: the factory's rows are literally slices of the
+    dense arrays, so lazy ≡ dense data is exact by construction)."""
+
+    def fetch(k: int):
+        c = fed.client(k)
+        return c.x_train, c.y_train, c.x_test, c.y_test
+
+    return ClientDataFactory(
+        n_clients=fed.n_clients,
+        max_train=fed.x_train.shape[1],
+        max_test=fed.x_test.shape[1],
+        feature_shape=fed.feature_shape,
+        fetch=fetch,
+    )
 
 
 def minibatch(

@@ -38,19 +38,102 @@ def make_synthetic_lr(
     )
     out = []
     for k in range(n_clients):
-        u_k = rng.normal(0.0, np.sqrt(alpha))
-        b_k = rng.normal(0.0, np.sqrt(alpha))
-        big_b = rng.normal(0.0, np.sqrt(beta))
-        v_k = rng.normal(big_b, 1.0, size=n_features)
-        w_k = rng.normal(u_k, 1.0, size=(n_features, n_classes))
-        c_k = rng.normal(b_k, 1.0, size=n_classes)
-        x = rng.normal(
-            loc=v_k[None, :], scale=np.sqrt(cov_diag)[None, :],
-            size=(counts[k], n_features),
-        )
-        logits = x @ w_k + c_k[None, :]
-        e = np.exp(logits - logits.max(axis=1, keepdims=True))
-        probs = e / e.sum(axis=1, keepdims=True)
-        y = np.array([rng.choice(n_classes, p=p) for p in probs])
-        out.append((x.astype(np.float32), y.astype(np.int32)))
+        out.append(_client_pair(rng, int(counts[k]), alpha, beta,
+                                n_features, n_classes, cov_diag))
     return out
+
+
+def _client_pair(rng: np.random.Generator, count: int, alpha: float,
+                 beta: float, n_features: int, n_classes: int,
+                 cov_diag: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One client's Synthetic(α, β) draw from a caller-owned rng — the
+    generative math shared by the sequential generator above and the
+    per-client-seeded lazy generator below."""
+    u_k = rng.normal(0.0, np.sqrt(alpha))
+    b_k = rng.normal(0.0, np.sqrt(alpha))
+    big_b = rng.normal(0.0, np.sqrt(beta))
+    v_k = rng.normal(big_b, 1.0, size=n_features)
+    w_k = rng.normal(u_k, 1.0, size=(n_features, n_classes))
+    c_k = rng.normal(b_k, 1.0, size=n_classes)
+    x = rng.normal(
+        loc=v_k[None, :], scale=np.sqrt(cov_diag)[None, :],
+        size=(count, n_features),
+    )
+    logits = x @ w_k + c_k[None, :]
+    e = np.exp(logits - logits.max(axis=1, keepdims=True))
+    probs = e / e.sum(axis=1, keepdims=True)
+    y = np.array([rng.choice(n_classes, p=p) for p in probs])
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def make_synthetic_lr_lazy(
+    n_clients: int = 100,
+    *,
+    alpha: float = 0.5,
+    beta: float = 0.5,
+    n_features: int = 60,
+    n_classes: int = 10,
+    min_samples: int = 50,
+    mean_samples: float = 4.0,
+    seed: int = 0,
+):
+    """Per-client-seeded Synthetic(α, β): ``(counts, client_pair)``.
+
+    :func:`make_synthetic_lr` draws every client from ONE sequential rng,
+    so client k's data depends on generating clients 0..k-1 first — it
+    cannot back a lazy client plane at n = 10⁶. This twin gives each
+    client its own `SeedSequence`-derived stream (``default_rng([seed,
+    k])``), so ``client_pair(k)`` is O(1), order-independent, and
+    bit-reproducible after eviction. Sample counts are the only O(n)
+    precompute (one vectorized lognormal draw, ~8 MB at n = 10⁶), which
+    also fixes the padded row widths up front.
+
+    Same generative procedure per client, different stream layout — the
+    realized datasets differ from :func:`make_synthetic_lr` under the
+    same seed (both are valid Synthetic(α, β) draws).
+    """
+    cov_diag = np.array(
+        [(j + 1) ** (-1.2) for j in range(n_features)], dtype=np.float64
+    )
+    count_rng = np.random.default_rng([seed, n_clients])
+    counts = (
+        count_rng.lognormal(mean=mean_samples, sigma=1.0,
+                            size=n_clients).astype(int)
+        + min_samples
+    )
+
+    def client_pair(k: int) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng([seed, int(k)])
+        return _client_pair(rng, int(counts[k]), alpha, beta,
+                            n_features, n_classes, cov_diag)
+
+    return counts, client_pair
+
+
+def synthetic_lr_factory(n_clients: int = 100, *, test_frac: float = 0.25,
+                         seed: int = 0, **kw):
+    """A lazy :class:`~repro.data.loader.ClientDataFactory` over
+    :func:`make_synthetic_lr_lazy`, with the same per-client 75/25
+    train/test split :func:`~repro.data.loader.build_federated_from_pairs`
+    applies to the eager generator — the data plane of the n = 10⁶
+    lazy-plane benchmark (``benchmarks/scan_scaling.py --lazy``)."""
+    from .loader import ClientDataFactory
+    from .partition import train_test_split_indices
+
+    counts, client_pair = make_synthetic_lr_lazy(n_clients, seed=seed, **kw)
+    n_test = np.maximum(np.round(counts * test_frac).astype(int), 1)
+    n_train = counts - n_test
+    n_features = kw.get("n_features", 60)
+
+    def fetch(k: int):
+        x, y = client_pair(k)
+        tr, te = train_test_split_indices(len(y), test_frac, seed + k)
+        return x[tr], y[tr], x[te], y[te]
+
+    return ClientDataFactory(
+        n_clients=int(n_clients),
+        max_train=int(n_train.max()),
+        max_test=int(n_test.max()),
+        feature_shape=(n_features,),
+        fetch=fetch,
+    )

@@ -116,10 +116,17 @@ class TrainerBase:
     name: str = "base"
     personalized: bool = True
 
-    def __init__(self, model: SmallModel, data: DeviceData,
+    def __init__(self, model: SmallModel, data,
                  batch_size: int = 20, telemetry=None):
         self.model = model
-        self.data = data
+        # ``data`` is either eagerly stacked DeviceData (the dense
+        # client plane) or a per-client ClientDataFactory (the lazy
+        # plane, ``client_plane="lazy"`` on the RWSADMM trainers): no
+        # (n, …) arrays ever materialize, clients are fetched on visit.
+        lazy = not isinstance(data, DeviceData)
+        self.client_plane = "lazy" if lazy else "dense"
+        self.data_factory = data if lazy else None
+        self.data = None if lazy else data
         self.batch_size = int(batch_size)
         self.n_clients = data.n_clients
         self.scenario = None   # attach_scenario() / trainer kwarg
@@ -132,6 +139,22 @@ class TrainerBase:
         self.loss_fn = loss_fn
         self.grad_fn = jax.grad(loss_fn)
         self.value_and_grad_fn = jax.value_and_grad(loss_fn)
+
+        def eval_row(params, x, y, m):
+            logits = model.apply(params, x, train=False)
+            return accuracy(logits, y, m), cross_entropy(logits, y, m)
+
+        self._eval_row = eval_row
+        # Row-based evaluation over explicit test arrays — the lazy
+        # plane's eval path (the packed store rows ARE the data; there
+        # is no (n, …) stack to close over).
+        self.eval_rows_stacked = jax.jit(
+            jax.vmap(eval_row, in_axes=(0, 0, 0, 0)))
+        self.eval_rows_shared = jax.jit(
+            jax.vmap(eval_row, in_axes=(None, 0, 0, 0)))
+
+        if lazy:
+            return   # dense eval/train closures below capture self.data
 
         def eval_client(params, client):
             logits = model.apply(params, data.x_test[client], train=False)
@@ -183,6 +206,12 @@ class TrainerBase:
         return None
 
     def evaluate(self, state) -> dict:
+        if self.client_plane == "lazy":
+            # The dense path below iterates every client's stacked test
+            # set — exactly the O(n) materialization the lazy plane
+            # removes. Store-backed trainers evaluate over the resident
+            # (materialized) clients instead.
+            return self._evaluate_lazy(state)
         out: dict[str, float] = {}
         pers = self.personalized_params(state)
         if pers is not None:
@@ -197,6 +226,11 @@ class TrainerBase:
             out["loss_global"] = float(jnp.mean(loss))
         out["acc"] = out.get("acc_personalized", out.get("acc_global", 0.0))
         return out
+
+    def _evaluate_lazy(self, state) -> dict:  # pragma: no cover - interface
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support client_plane='lazy' "
+            "(only the store-backed RWSADMM trainers do)")
 
     # -- scenario plumbing (mobility / links / churn, scenarios/) ---------
     def attach_scenario(self, spec, seed: int = 0) -> None:
@@ -307,7 +341,11 @@ class TrainerBase:
 
     # -- communication accounting ------------------------------------------
     def params_bytes(self) -> int:
-        """Bytes of one model copy (cached — init is host-side and slow)."""
+        """Bytes of one model copy (cached — init is host-side and slow).
+
+        Deliberately n-independent: one template ``model.init``, never a
+        per-client iteration, so the communication ledger works the same
+        under the lazy client plane at n = 10⁶ as on the dense plane."""
         cached = getattr(self, "_params_bytes", None)
         if cached is None:
             from ..core import tree as t

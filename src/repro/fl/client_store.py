@@ -1,0 +1,314 @@
+"""Bounded LRU client-state store — the lazy client plane's core.
+
+RWSADMM's mobile server only ever touches the clients it walks to:
+over R rounds the walker activates O(R·Z) ≪ n clients, yet the dense
+plane materializes x/z pytrees and datasets for all n up front. This
+store keeps a *packed* ``(capacity, …)`` device pytree plus a packed
+:class:`~repro.fl.base.DeviceData` block, keyed by an id → slot index:
+
+* first visit **materializes** a client — ADMM state rows come from the
+  shared init template (dense init is identical for every client, so
+  lazy init ≡ dense init bit-for-bit), dataset rows from a deterministic
+  :class:`~repro.data.loader.ClientDataFactory`;
+* cold clients **evict** to a host-side spill buffer (x/z rows only —
+  datasets are regenerated from the factory on revisit, bit-identical
+  because the factory is pure);
+* revisits **restore** the spilled rows into a free slot.
+
+The packed client-state arrays are NOT owned by the store: they live in
+the (functional) trainer state and flow through ``lax.scan``. The store
+owns the mapping, the LRU order, the spill buffer, and the packed data
+block; :meth:`ensure` takes the current packed pytree and returns it
+with restored/initialized rows written.
+
+Bit-identity with the dense plane is by construction — identical row
+values, identical gather/scatter arithmetic, exact float32 host↔device
+round-trips on evict/restore — and pinned by ``tests/test_lazy_plane.py``
+rather than trusted. One subtlety the working-set rule encodes:
+schedules pad zones with client id 0 (mask 0), and the dense round body
+still gathers id 0's row and scatter-adds masked ±0.0 into it, so the
+padding id must be resident too — callers pass the raw (padded) id
+arrays to :meth:`ensure`, never pre-filtered by mask.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.loader import ClientDataFactory
+from .base import DeviceData
+
+PyTree = Any
+
+#: keys of the stats dict every ensure() call returns (all deltas)
+STORE_COUNTERS = ("hits", "misses", "evictions", "restores")
+
+
+def _dedupe_keep_order(ids: np.ndarray) -> np.ndarray:
+    """Unique ids in first-appearance order — the store's visit order
+    for a batched ensure (LRU recency follows it)."""
+    ids = np.asarray(ids).reshape(-1).astype(np.int64)
+    _, first = np.unique(ids, return_index=True)
+    return ids[np.sort(first)]
+
+
+class ClientStore:
+    """Bounded LRU store of per-client ADMM state + dataset rows.
+
+    Parameters
+    ----------
+    factory: per-client dataset source (``rows(ids)`` in DeviceData
+        column order). Its ``n_clients`` bounds the id space.
+    capacity: number of resident slots. A single :meth:`ensure` call's
+        working set may not exceed it (scan chunks ensure a whole
+        chunk's visited set at once — size capacity ≥ the R·Z bound of
+        the chunk, see docs/performance.md §7).
+    """
+
+    def __init__(self, factory: ClientDataFactory, capacity: int):
+        self.factory = factory
+        self.capacity = int(capacity)
+        self.n_clients = int(factory.n_clients)
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self._template: PyTree | None = None
+        self.data: DeviceData | None = None
+        # id → slot (-1 = not resident), slot → id (-1 = free)
+        self.slot_arr = np.full(self.n_clients, -1, dtype=np.int32)
+        self.gid_of = np.full(self.capacity, -1, dtype=np.int64)
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self._free: list[int] = list(range(self.capacity - 1, -1, -1))
+        self._spill: dict[int, list[np.ndarray]] = {}
+        self.counters = {k: 0 for k in STORE_COUNTERS}
+
+    # ------------------------------------------------------------- init --
+    def reset(self, template: PyTree) -> PyTree:
+        """(Re)initialize for a fresh run: remember the single-client
+        init ``template`` (every client's dense init — warm: x=params,
+        z=0), clear mapping/LRU/spill/counters, allocate the packed data
+        block, and return the packed ``(capacity, …)`` state pytree with
+        every slot pre-filled from the template."""
+        self._template = template
+        self.slot_arr[:] = -1
+        self.gid_of[:] = -1
+        self._lru.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._spill.clear()
+        self.counters = {k: 0 for k in STORE_COUNTERS}
+        f = self.factory
+        feat = tuple(f.feature_shape)
+        self.data = DeviceData(
+            x_train=jnp.zeros((self.capacity, f.max_train) + feat,
+                              jnp.float32),
+            y_train=jnp.zeros((self.capacity, f.max_train), jnp.int32),
+            n_train=jnp.ones((self.capacity,), jnp.int32),
+            x_test=jnp.zeros((self.capacity, f.max_test) + feat,
+                             jnp.float32),
+            y_test=jnp.zeros((self.capacity, f.max_test), jnp.int32),
+            mask_test=jnp.zeros((self.capacity, f.max_test), jnp.float32),
+        )
+        return self._packed_template()
+
+    def _packed_template(self) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(jnp.asarray(l),
+                                       (self.capacity,) + jnp.shape(l)),
+            self._template)
+
+    def _template_rows(self, m: int) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(jnp.asarray(l),
+                                       (m,) + jnp.shape(l)),
+            self._template)
+
+    # ------------------------------------------------------ introspection --
+    @property
+    def resident_ids(self) -> np.ndarray:
+        """Resident client ids, least- to most-recently visited."""
+        return np.fromiter(self._lru.keys(), dtype=np.int64,
+                           count=len(self._lru))
+
+    @property
+    def n_resident(self) -> int:
+        return len(self._lru)
+
+    @property
+    def spilled_ids(self) -> np.ndarray:
+        return np.array(sorted(self._spill), dtype=np.int64)
+
+    def slots(self, ids) -> np.ndarray:
+        """Translate global client ids → resident slot indices (any
+        shape). Every id must be resident (``ensure`` first)."""
+        ids = np.asarray(ids)
+        slots = self.slot_arr[ids]
+        if (slots < 0).any():
+            missing = np.unique(np.asarray(ids)[slots < 0])
+            raise KeyError(f"clients not resident: {missing.tolist()[:10]}")
+        return slots.astype(np.int32)
+
+    # ------------------------------------------------------------ ensure --
+    def ensure(self, clients: PyTree, ids) -> tuple[PyTree, dict]:
+        """Make every id in ``ids`` resident; returns the updated packed
+        state pytree and this call's counter deltas.
+
+        ``ids`` is deduplicated in first-appearance order, which becomes
+        the LRU touch order (visit order ⇒ eviction order). Misses claim
+        free slots first, then evict the least-recently-visited resident
+        clients *outside the current working set* — their x/z rows are
+        read back to the host spill buffer before the slot is reused.
+        """
+        if self._template is None:
+            raise RuntimeError("ClientStore.reset(template) must run "
+                               "before ensure() — call init_state first")
+        # No-op for device arrays; lifts numpy leaves (e.g. a state just
+        # restored by checkpoint.load_pytree) so .at updates work.
+        clients = jax.tree_util.tree_map(jnp.asarray, clients)
+        ids = _dedupe_keep_order(ids)
+        if len(ids) > self.capacity:
+            raise ValueError(
+                f"working set of {len(ids)} clients exceeds store "
+                f"capacity {self.capacity}; raise store_capacity or "
+                f"shorten the scan chunk (eval_every)")
+        if len(ids) and (ids.min() < 0 or ids.max() >= self.n_clients):
+            raise IndexError(f"client id out of range [0, "
+                             f"{self.n_clients}): {ids.min()},{ids.max()}")
+        stats = {k: 0 for k in STORE_COUNTERS}
+        missing = ids[self.slot_arr[ids] < 0]
+        stats["hits"] = len(ids) - len(missing)
+        stats["misses"] = len(missing)
+        for i in ids:
+            if self.slot_arr[i] >= 0:
+                self._lru.move_to_end(int(i))
+
+        if len(missing):
+            need = len(missing) - len(self._free)
+            if need > 0:
+                working = set(ids.tolist())
+                victims = [i for i in self._lru
+                           if i not in working][:need]
+                assert len(victims) == need  # capacity check above
+                clients = self._evict(clients, np.array(victims,
+                                                        dtype=np.int64))
+                stats["evictions"] = need
+            slots = np.array([self._free.pop() for _ in missing],
+                             dtype=np.int32)
+            for i, s in zip(missing, slots):
+                self.slot_arr[i] = s
+                self.gid_of[s] = i
+                self._lru[int(i)] = None
+                self._lru.move_to_end(int(i))
+            restored = np.array([i in self._spill for i in missing])
+            clients = self._write_state_rows(clients, missing, slots,
+                                             restored)
+            stats["restores"] = int(restored.sum())
+            self._write_data_rows(missing, slots)
+        # Re-touch in visit order so recency reflects ``ids`` order, not
+        # hit-then-miss processing order.
+        for i in ids:
+            self._lru.move_to_end(int(i))
+        for k in STORE_COUNTERS:
+            self.counters[k] += stats[k]
+        return clients, stats
+
+    # ----------------------------------------------------------- internals --
+    def _evict(self, clients: PyTree, victims: np.ndarray) -> PyTree:
+        vslots = self.slot_arr[victims]
+        rows = jax.device_get(jax.tree_util.tree_map(
+            lambda l: l[jnp.asarray(vslots)], clients))
+        leaves = jax.tree_util.tree_leaves(rows)
+        for j, i in enumerate(victims):
+            self._spill[int(i)] = [np.asarray(leaf[j]) for leaf in leaves]
+            del self._lru[int(i)]
+            self.slot_arr[i] = -1
+        for s in vslots:
+            self.gid_of[s] = -1
+            self._free.append(int(s))
+        return clients
+
+    def _write_state_rows(self, clients: PyTree, ids: np.ndarray,
+                          slots: np.ndarray, restored: np.ndarray) -> PyTree:
+        fresh_slots = slots[~restored]
+        if len(fresh_slots):
+            rows = self._template_rows(len(fresh_slots))
+            clients = jax.tree_util.tree_map(
+                lambda l, r: l.at[jnp.asarray(fresh_slots)].set(r),
+                clients, rows)
+        sp_ids = ids[restored]
+        if len(sp_ids):
+            sp_slots = slots[restored]
+            treedef = jax.tree_util.tree_structure(clients)
+            stacked = [np.stack([self._spill[int(i)][j] for i in sp_ids])
+                       for j in range(treedef.num_leaves)]
+            rows = jax.tree_util.tree_unflatten(treedef, stacked)
+            clients = jax.tree_util.tree_map(
+                lambda l, r: l.at[jnp.asarray(sp_slots)].set(
+                    jnp.asarray(r)),
+                clients, rows)
+            for i in sp_ids:
+                del self._spill[int(i)]
+        return clients
+
+    def _write_data_rows(self, ids: np.ndarray, slots: np.ndarray) -> None:
+        rows = self.factory.rows(ids)
+        js = jnp.asarray(slots)
+        self.data = DeviceData(*[
+            leaf.at[js].set(jnp.asarray(r))
+            for leaf, r in zip(self.data, rows)])
+
+    # -------------------------------------------------------- checkpointing --
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Host arrays capturing mapping + LRU order + spill + counters
+        (the packed state pytree itself is checkpointed by the caller as
+        part of the trainer state). Spilled x/z rows ride along stacked
+        per leaf; ``checkpoint.save_client_store`` writes this to npz."""
+        d: dict[str, np.ndarray] = {
+            "gid_of": self.gid_of.copy(),
+            "lru": self.resident_ids,
+            "counters": np.array([self.counters[k] for k in STORE_COUNTERS],
+                                 dtype=np.int64),
+            "spill_ids": self.spilled_ids,
+        }
+        if len(self._spill):
+            n_leaves = len(next(iter(self._spill.values())))
+            for j in range(n_leaves):
+                d[f"spill_leaf_{j}"] = np.stack(
+                    [self._spill[int(i)][j] for i in d["spill_ids"]])
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore mapping/LRU/spill/counters and re-materialize the
+        packed data block for resident clients (datasets are never
+        spilled — the factory regenerates them bit-identically)."""
+        if self._template is None:
+            raise RuntimeError("reset(template) before load_state_dict "
+                               "(build the store via init_state first)")
+        gid_of = np.asarray(d["gid_of"], dtype=np.int64)
+        if gid_of.shape != (self.capacity,):
+            raise ValueError(
+                f"checkpoint capacity {gid_of.shape[0]} != store "
+                f"capacity {self.capacity}")
+        self.gid_of = gid_of.copy()
+        self.slot_arr[:] = -1
+        occupied = np.flatnonzero(gid_of >= 0)
+        self.slot_arr[gid_of[occupied]] = occupied.astype(np.int32)
+        self._free = [int(s) for s in range(self.capacity - 1, -1, -1)
+                      if gid_of[s] < 0]
+        self._lru = OrderedDict((int(i), None)
+                                for i in np.asarray(d["lru"]))
+        cnt = np.asarray(d["counters"])
+        self.counters = {k: int(cnt[j])
+                         for j, k in enumerate(STORE_COUNTERS)}
+        self._spill = {}
+        spill_ids = np.asarray(d["spill_ids"], dtype=np.int64)
+        for j, i in enumerate(spill_ids):
+            self._spill[int(i)] = [
+                np.asarray(d[key][j]) for key in sorted(
+                    (k for k in d if k.startswith("spill_leaf_")),
+                    key=lambda s: int(s.rsplit("_", 1)[1]))]
+        if len(occupied):
+            self._write_data_rows(gid_of[occupied],
+                                  occupied.astype(np.int32))

@@ -140,17 +140,37 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         return FleetState(base=base, tokens=tokens)
 
     # ------------------------------------------------------------------
+    # Lazy client-plane hooks: the fleet nests the client stack/visited
+    # mask one level down (state.base), and lazy evaluation measures the
+    # global model against the fleet-mean token rather than one walker's.
+    # ------------------------------------------------------------------
+    def _state_clients(self, state):
+        return state.base.clients
+
+    def _state_visited(self, state):
+        return state.base.visited
+
+    def _with_clients(self, state, clients):
+        return state._replace(base=state.base._replace(clients=clients))
+
+    def _eval_token(self, state):
+        return self.global_params(state)
+
+    # ------------------------------------------------------------------
     # Compiled step bodies — ONE jitted function per (mode, fused) pair
     # serves both the eager driver and the lax.scan chunk body, so the
     # engines run literally the same computation per round.
     # ------------------------------------------------------------------
     def _rr_step_impl(self, state: FleetState, idx, mask, n_i, a, sync,
-                      key, iw=None, *, use_fused: bool = False):
+                      key, iw=None, gid=None, data=None, *,
+                      use_fused: bool = False):
         """Round-robin fleet round: walker ``a`` serves one zone against
         its own token (dynamic_index into the stack), then an optional
         rendezvous averages the stack. ``iw`` (biased walk policies) is
         the active walker's importance weight, threaded into the shared
-        Eq. 31 round body's y fold."""
+        Eq. 31 round body's y fold; ``gid``/``data`` thread the lazy
+        client plane through it (slot-indexed zone + packed store data,
+        see :meth:`RWSADMMTrainer._round_impl`)."""
         y_k = jax.tree_util.tree_map(
             lambda t: jax.lax.dynamic_index_in_dim(t, a, 0, keepdims=False),
             state.tokens)
@@ -160,6 +180,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                                round=state.base.server.round),
             visited=state.base.visited)
         new_base, loss = self._round_impl(base, idx, mask, n_i, key, iw,
+                                          gid, data,
                                           use_fused=use_fused)
         tokens = jax.tree_util.tree_map(
             lambda t, y: jax.lax.dynamic_update_index_in_dim(t, y, a, 0),
@@ -168,12 +189,16 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                           tokens=_rendezvous(tokens, sync)), loss
 
     def _sim_step_impl(self, state: FleetState, idx, mask, n_i, sync,
-                       key, iw=None, *, use_fused: bool = False):
+                       key, iw=None, gid=None, data=None, *,
+                       use_fused: bool = False):
         """Simultaneous fleet wall step: K disjoint zones (idx/mask are
         (K, Z)) update in one vmapped Eq. 31 pass, each against its own
         walker's token; κ decays once per wall step. ``iw`` (biased walk
         policies) carries each walker's importance weight (K,); the
-        per-walker token folds are rescaled by it post hoc."""
+        per-walker token folds are rescaled by it post hoc. Lazy plane:
+        ``idx`` holds store slots, ``gid`` the (K, Z) global ids, and
+        ``data`` the packed store rows as a traced argument."""
+        data = self.data if data is None else data
         clients = state.base.clients
         hp, kappa = self.hp, state.base.server.kappa
         k_walkers, zone = idx.shape
@@ -183,7 +208,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             k_walkers, zone, -1)
 
         def one_grad(params, client, kk):
-            xb, yb = sample_batch(self.data, client, kk, self.batch_size)
+            xb, yb = sample_batch(data, client, kk, self.batch_size)
             return self.value_and_grad_fn(params, xb, yb, kk)
 
         losses, grads = jax.vmap(jax.vmap(one_grad))(act.x, idx, keys)
@@ -225,7 +250,8 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             y=jax.tree_util.tree_map(lambda t: t[0], tokens),
             kappa=kappa * hp.kappa_decay,
             round=state.base.server.round + 1)
-        visited = state.base.visited.at[idx_f].max(m_f > 0)
+        visited = state.base.visited.at[
+            idx_f if gid is None else gid.reshape(-1)].max(m_f > 0)
         loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         return FleetState(base=RWSADMMState(clients, server, visited),
                           tokens=tokens), loss
@@ -258,13 +284,20 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         latency_s, energy_j = self._price(graph, i_k, idx, mask)
         key = markov.round_key(rng)
         sync = float((rnd + 1) % max(self.sync_every, 1) == 0)
-        args = [state, jnp.asarray(idx), jnp.asarray(mask),
+        kwargs = {}
+        if self.store is not None:
+            state, zone_idx = self._ensure_round(state, idx)
+            kwargs = {"gid": jnp.asarray(idx), "data": self.store.data}
+        else:
+            zone_idx = idx
+        args = [state, jnp.asarray(zone_idx), jnp.asarray(mask),
                 jnp.asarray(float(n_i)), jnp.asarray(k, jnp.int32),
                 jnp.asarray(sync, jnp.float32), key]
         if self._use_iw:
             args.append(jnp.asarray(walker.weight_history[-1],
                                     jnp.float32))
-        state, zone_loss = self._fleet_step_fn("roundrobin", False)(*args)
+        state, zone_loss = self._fleet_step_fn("roundrobin", False)(
+            *args, **kwargs)
         metrics = {
             "round": rnd, "walker": k, "client": int(i_k),
             "zone": n_active, "n_i": int(n_i),
@@ -290,13 +323,20 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             avail=self.scenario.availability())
         key = markov.round_key(rng)
         sync = float((rnd + 1) % max(self.sync_every, 1) == 0)
-        args = [state, jnp.asarray(idx), jnp.asarray(mask),
+        kwargs = {}
+        if self.store is not None:
+            state, zone_idx = self._ensure_round(state, idx)
+            kwargs = {"gid": jnp.asarray(idx), "data": self.store.data}
+        else:
+            zone_idx = idx
+        args = [state, jnp.asarray(zone_idx), jnp.asarray(mask),
                 jnp.asarray(n_i), jnp.asarray(sync, jnp.float32), key]
         if self._use_iw:
             args.append(jnp.asarray(
                 np.array([w.weight_history[-1] for w in self.walkers]),
                 jnp.float32))
-        state, loss = self._fleet_step_fn("simultaneous", False)(*args)
+        state, loss = self._fleet_step_fn("simultaneous", False)(
+            *args, **kwargs)
         lat_kw, en_kw = self._price_fleet_schedule(
             [graph], positions[None], idx[None], mask[None])
         active = mask.sum(axis=1).astype(int)
@@ -345,6 +385,12 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         Returns (state, {"train_loss": (R,), "kappa": (R,)})."""
         use_fused = self._engine_use_fused(engine)
         mode = getattr(sched, "mode", "roundrobin")
+        lazy = self.store is not None
+        if lazy:
+            # Chunk visited set (both fleet modes' idx layouts flatten
+            # the same way) resident before the scan; ids pre-translated
+            # to slots, global ids ride along for the visited update.
+            state, slot_idx = self._ensure_round(state, sched.idx)
         fn = self._fleet_chunk_fns.get((mode, engine))
         if fn is None:
             step = functools.partial(
@@ -352,7 +398,23 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                 else self._sim_step_impl,
                 use_fused=use_fused)
             use_iw = self._use_iw
-            if mode == "roundrobin":
+            if mode == "roundrobin" and lazy:
+                def chunk(state, data, idx, gidx, mask, n_i, keys,
+                          walker, sync, iws=None):
+                    def body(carry, per):
+                        i_r, g_r, m_r, ni_r, k_r, a_r, s_r = per[:7]
+                        w_r = per[7] if use_iw else None
+                        new_state, loss = step(carry, i_r, m_r, ni_r,
+                                               a_r, s_r, k_r, w_r,
+                                               gid=g_r, data=data)
+                        return new_state, (loss,
+                                           new_state.base.server.kappa)
+
+                    cols = (idx, gidx, mask, n_i, keys, walker, sync)
+                    if use_iw:
+                        cols = cols + (iws,)
+                    return jax.lax.scan(body, state, cols)
+            elif mode == "roundrobin":
                 def chunk(state, idx, mask, n_i, keys, walker, sync,
                           iws=None):
                     def body(carry, per):
@@ -364,6 +426,22 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                                            new_state.base.server.kappa)
 
                     cols = (idx, mask, n_i, keys, walker, sync)
+                    if use_iw:
+                        cols = cols + (iws,)
+                    return jax.lax.scan(body, state, cols)
+            elif lazy:
+                def chunk(state, data, idx, gidx, mask, n_i, keys, sync,
+                          iws=None):
+                    def body(carry, per):
+                        i_r, g_r, m_r, ni_r, k_r, s_r = per[:6]
+                        w_r = per[6] if use_iw else None
+                        new_state, loss = step(carry, i_r, m_r, ni_r,
+                                               s_r, k_r, w_r,
+                                               gid=g_r, data=data)
+                        return new_state, (loss,
+                                           new_state.base.server.kappa)
+
+                    cols = (idx, gidx, mask, n_i, keys, sync)
                     if use_iw:
                         cols = cols + (iws,)
                     return jax.lax.scan(body, state, cols)
@@ -384,8 +462,14 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             fn = jax.jit(chunk)
             self._fleet_chunk_fns[(mode, engine)] = fn
 
-        args = [jnp.asarray(sched.idx), jnp.asarray(sched.mask),
-                jnp.asarray(sched.n_i), jnp.asarray(sched.keys)]
+        args = []
+        if lazy:
+            args += [self.store.data, jnp.asarray(slot_idx),
+                     jnp.asarray(sched.idx)]
+        else:
+            args.append(jnp.asarray(sched.idx))
+        args += [jnp.asarray(sched.mask), jnp.asarray(sched.n_i),
+                 jnp.asarray(sched.keys)]
         if mode == "roundrobin":
             args.append(jnp.asarray(sched.walker))
         args.append(jnp.asarray(sched.sync))

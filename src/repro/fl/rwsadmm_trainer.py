@@ -80,10 +80,23 @@ class RWSADMMTrainer(TrainerBase):
                                           # the unbiased ``transition``
         walk_bias: float = 1.0,           # staleness exponent / label-
                                           # skew sharpening γ
+        store_capacity: int = 4096,       # lazy plane: resident slots in
+                                          # the bounded LRU client store
         telemetry=None,                   # TelemetryRun or None (off)
         seed: int = 0,
     ):
         super().__init__(model, data, batch_size, telemetry=telemetry)
+        # Lazy client plane: ``data`` was a ClientDataFactory, so client
+        # x/z pytrees and datasets materialize on first visit into a
+        # bounded (store_capacity, …) packed store instead of (n, …)
+        # stacks — the large-n training-plane lane (docs/performance.md
+        # §7). Bit-identical to the dense plane (tests/test_lazy_plane).
+        self.store = None
+        if self.client_plane == "lazy":
+            from .client_store import ClientStore
+
+            self.store = ClientStore(self.data_factory,
+                                     int(store_capacity))
         self.hp = hp
         self.solver = solver
         self.dp_clip = dp_clip
@@ -137,6 +150,11 @@ class RWSADMMTrainer(TrainerBase):
         from the padded device label arrays (None for other policies)."""
         if self.walk_policy != "label_skew":
             return None
+        if self.data is None:
+            raise ValueError(
+                "walk_policy='label_skew' needs the per-client label "
+                "histograms of the dense client plane; the lazy plane "
+                "never materializes them")
         from ..data import partition
 
         hist = partition.padded_label_histograms(
@@ -166,6 +184,8 @@ class RWSADMMTrainer(TrainerBase):
     # ------------------------------------------------------------------
     def init_state(self, key) -> RWSADMMState:
         params = self.model.init(key)
+        if self.store is not None:
+            return self._init_state_lazy(params)
         if self.warm_init:
             clients, server = rwsadmm.init_states_warm(
                 params, self.hp, self.n_clients
@@ -179,9 +199,43 @@ class RWSADMMTrainer(TrainerBase):
             visited=jnp.zeros((self.n_clients,), bool),
         )
 
+    def _init_state_lazy(self, params) -> RWSADMMState:
+        """Packed-store twin of the dense init: every client's dense
+        init row is IDENTICAL (warm: x=params, z=0; cold: x=z=0), so
+        the store pre-fills all capacity slots from that one template —
+        lazy materialization is bit-for-bit dense init by construction.
+        ``clients`` leaves are (capacity, …); ``visited`` stays a dense
+        (n,) bool (1 bit of truth per client costs ~n bytes, not the
+        O(n·p) the packed plane removes)."""
+        from ..core import tree as t
+
+        zeros = t.zeros_like(params)
+        template = (ClientState(x=params, z=zeros) if self.warm_init
+                    else ClientState(x=zeros, z=zeros))
+        clients = self.store.reset(template)
+        server = ServerState(
+            y=params if self.warm_init else zeros,
+            kappa=jnp.asarray(self.hp.kappa, jnp.float32),
+            round=jnp.asarray(0, jnp.int32),
+        )
+        return RWSADMMState(
+            clients=clients, server=server,
+            visited=jnp.zeros((self.n_clients,), bool),
+        )
+
     # ------------------------------------------------------------------
     def _round_impl(self, state: RWSADMMState, zone_idx, zone_mask, n_i,
-                    key, iw=None, *, use_fused: bool = False):
+                    key, iw=None, gid=None, data=None, *,
+                    use_fused: bool = False):
+        # Dense plane: zone_idx are global client ids, gid/data are None
+        # (empty pytrees under jit — the seed computation graph is
+        # untouched) and the stacked dataset is a compile-time closure
+        # constant. Lazy plane: zone_idx are STORE SLOTS, ``gid`` carries
+        # the global ids (visited-set bookkeeping), and the packed store
+        # data MUST arrive as a traced argument — a closure over
+        # ``self.store.data`` would bake whatever rows were resident at
+        # trace time into the executable.
+        data = self.data if data is None else data
         clients, server = state.clients, state.server
         hp, kappa = self.hp, server.kappa
 
@@ -195,7 +249,7 @@ class RWSADMMTrainer(TrainerBase):
         if self.solver == "closed_form":
             # One-step stochastic linearization (Eq. 10/11).
             def one_grad(params, client, k):
-                xb, yb = sample_batch(self.data, client, k, self.batch_size)
+                xb, yb = sample_batch(data, client, k, self.batch_size)
                 return self.value_and_grad_fn(params, xb, yb, k)
 
             losses, grads = jax.vmap(one_grad)(act.x, zone_idx, keys)
@@ -221,7 +275,7 @@ class RWSADMMTrainer(TrainerBase):
 
             def solve_one(c: ClientState, client, k):
                 def body(x, kk):
-                    xb, yb = sample_batch(self.data, client, kk,
+                    xb, yb = sample_batch(data, client, kk,
                                           self.batch_size)
                     loss, gf = self.value_and_grad_fn(x, xb, yb, kk)
                     g = rwsadmm.subproblem_grad(x, server.y, c.z, gf, hp)
@@ -296,7 +350,8 @@ class RWSADMMTrainer(TrainerBase):
             kappa=server.kappa * hp.kappa_decay,
             round=server.round + 1,
         )
-        visited = state.visited.at[zone_idx].max(m > 0)
+        visited = state.visited.at[
+            zone_idx if gid is None else gid].max(m > 0)
         zone_loss = jnp.sum(losses * m) / jnp.maximum(jnp.sum(m), 1.0)
         return RWSADMMState(clients, server, visited), zone_loss
 
@@ -313,14 +368,20 @@ class RWSADMMTrainer(TrainerBase):
         latency_s, energy_j = self._price(graph, i_k, idx, mask)
 
         key = markov.round_key(rng)
-        args = [state, jnp.asarray(idx), jnp.asarray(mask),
+        kwargs = {}
+        if self.store is not None:
+            state, zone_idx = self._ensure_round(state, idx)
+            kwargs = {"gid": jnp.asarray(idx), "data": self.store.data}
+        else:
+            zone_idx = idx
+        args = [state, jnp.asarray(zone_idx), jnp.asarray(mask),
                 jnp.asarray(float(n_i)), key]
         if self._use_iw:
             # The weight recorded at the walker's latest visit — the
             # same float the schedule's iw column carries for this round.
             args.append(jnp.asarray(self.walker.weight_history[-1],
                                     jnp.float32))
-        state, zone_loss = self._round_fn(*args)
+        state, zone_loss = self._round_fn(*args, **kwargs)
         metrics = {
             "round": rnd,
             "client": int(i_k),
@@ -334,6 +395,40 @@ class RWSADMMTrainer(TrainerBase):
             **self._staleness_metrics(idx, mask, rnd),
         }
         return state, metrics
+
+    # ------------------------------------------------------------------
+    # Lazy client plane plumbing (client_plane="lazy").
+    # ------------------------------------------------------------------
+    def _state_clients(self, state):
+        """Where the packed client pytree lives in this trainer's state
+        (the fleet wraps it one level deeper)."""
+        return state.clients
+
+    def _state_visited(self, state):
+        return state.visited
+
+    def _with_clients(self, state, clients):
+        return state._replace(clients=clients)
+
+    def _ensure_round(self, state, idx):
+        """Make one round's working set resident and translate global
+        ids → store slots. ``idx`` is the raw padded zone row — padding
+        id 0 rides along deliberately, so the dense plane's masked ±0.0
+        scatter-adds land on the same client's row in both planes."""
+        clients, stats = self.store.ensure(self._state_clients(state),
+                                           np.asarray(idx).reshape(-1))
+        self._emit_store_counters(stats)
+        return (self._with_clients(state, clients),
+                self.store.slots(np.asarray(idx)))
+
+    def _emit_store_counters(self, stats: dict) -> None:
+        """Stream one ensure call's hit/miss/evict/restore deltas into
+        telemetry (host-side only — never touches an RNG stream, so
+        telemetry-on stays bit-identical to off)."""
+        if self.telemetry is None:
+            return
+        for k, v in stats.items():
+            self.telemetry.counter(f"client_store_{k}", int(v))
 
     # ------------------------------------------------------------------
     # Compiled multi-round (lax.scan) driver.
@@ -412,13 +507,39 @@ class RWSADMMTrainer(TrainerBase):
         "kappa": (R,)}).
         """
         use_fused = self._engine_use_fused(engine)
+        lazy = self.store is not None
+        if lazy:
+            # The chunk's whole visited set (padding ids included) is
+            # gathered from the precomputed schedule BEFORE the scan, so
+            # the compiled body only carries the (capacity, …) packed
+            # pytree + packed data; ids enter the scan pre-translated
+            # to slots, with the global ids riding along for the
+            # visited-set update.
+            state, slot_idx = self._ensure_round(state, sched.idx)
 
         fn = self._chunk_fns.get(engine)
         if fn is None:
             round_fn = functools.partial(self._round_impl,
                                          use_fused=use_fused)
 
-            if self._use_iw:
+            if lazy:
+                use_iw = self._use_iw
+
+                def chunk(state, data, idx, gidx, mask, n_i, keys,
+                          iws=None):
+                    def body(carry, per):
+                        i_r, g_r, m_r, ni_r, k_r = per[:5]
+                        w_r = per[5] if use_iw else None
+                        new_state, loss = round_fn(carry, i_r, m_r, ni_r,
+                                                   k_r, w_r, gid=g_r,
+                                                   data=data)
+                        return new_state, (loss, new_state.server.kappa)
+
+                    cols = (idx, gidx, mask, n_i, keys)
+                    if use_iw:
+                        cols = cols + (iws,)
+                    return jax.lax.scan(body, state, cols)
+            elif self._use_iw:
                 # Biased walk policy: the schedule's per-round importance
                 # weights ride along as one more scan input.
                 def chunk(state, idx, mask, n_i, keys, iws):
@@ -444,8 +565,14 @@ class RWSADMMTrainer(TrainerBase):
             fn = jax.jit(chunk)
             self._chunk_fns[engine] = fn
 
-        args = [jnp.asarray(sched.idx), jnp.asarray(sched.mask),
-                jnp.asarray(sched.n_i), jnp.asarray(sched.keys)]
+        args = []
+        if lazy:
+            args += [self.store.data, jnp.asarray(slot_idx),
+                     jnp.asarray(sched.idx)]
+        else:
+            args.append(jnp.asarray(sched.idx))
+        args += [jnp.asarray(sched.mask), jnp.asarray(sched.n_i),
+                 jnp.asarray(sched.keys)]
         if self._use_iw:
             args.append(jnp.asarray(sched.iw, jnp.float32))
         final, (losses, kappas) = fn(state, *args)
@@ -453,9 +580,65 @@ class RWSADMMTrainer(TrainerBase):
         return final, {"train_loss": losses, "kappa": kappas}
 
     # ------------------------------------------------------------------
+    def _evaluate_lazy(self, state) -> dict:
+        """Evaluation restricted to the MATERIALIZED clients — the lazy
+        plane's answer to the dense path's all-n iteration. Runs the
+        row-based eval over all capacity slots (fixed shapes, one
+        executable) and averages over the occupied ones; per-slot
+        personalization mirrors :meth:`personalized_params` (visited →
+        x_i, else the token y). Reports how many clients the estimate
+        covers (``eval_clients``) — at large n this is a resident-set
+        sample of the population metric, by design."""
+        store = self.store
+        occ = store.gid_of >= 0                          # (capacity,)
+        occ_ids = np.where(occ, np.maximum(store.gid_of, 0), 0)
+        visited_slot = jnp.asarray(
+            np.asarray(self._state_visited(state))[occ_ids] & occ)
+        clients = self._state_clients(state)
+        y = self._eval_token(state)
+
+        def pers_leaf(x, y_):
+            v = visited_slot.reshape((-1,) + (1,) * y_.ndim)
+            return jnp.where(v, x, y_[None])
+
+        pers = jax.tree_util.tree_map(pers_leaf, clients.x, y)
+        d = store.data
+        n_occ = max(int(occ.sum()), 1)
+
+        def masked_stats(acc, loss):
+            acc = np.asarray(acc)[occ]
+            loss = np.asarray(loss)[occ]
+            return acc, loss
+
+        out: dict[str, float] = {}
+        acc, loss = self.eval_rows_stacked(pers, d.x_test, d.y_test,
+                                           d.mask_test)
+        acc, loss = masked_stats(acc, loss)
+        out["acc_personalized"] = float(acc.mean()) if len(acc) else 0.0
+        out["acc_personalized_std"] = float(acc.std()) if len(acc) else 0.0
+        out["loss_personalized"] = float(loss.mean()) if len(loss) else 0.0
+        acc, loss = self.eval_rows_shared(y, d.x_test, d.y_test,
+                                          d.mask_test)
+        acc, loss = masked_stats(acc, loss)
+        out["acc_global"] = float(acc.mean()) if len(acc) else 0.0
+        out["loss_global"] = float(loss.mean()) if len(loss) else 0.0
+        out["acc"] = out["acc_personalized"]
+        out["eval_clients"] = int(n_occ if occ.any() else 0)
+        return out
+
+    def _eval_token(self, state):
+        """The token unvisited clients evaluate against (the fleet
+        substitutes its rendezvous mean)."""
+        return state.server.y
+
     def personalized_params(self, state: RWSADMMState):
         """x_i for visited clients; unvisited clients fall back to the
         server token y (what the mobile server would hand them)."""
+        if self.store is not None:
+            raise NotImplementedError(
+                "personalized_params would materialize an (n, …) stack; "
+                "under client_plane='lazy' use evaluate() (resident-set "
+                "metrics) or read rows off trainer.store")
         def leaf(x, y):
             v = state.visited.reshape((-1,) + (1,) * (y.ndim))
             return jnp.where(v, x, y[None])
@@ -473,6 +656,10 @@ class RWSADMMTrainer(TrainerBase):
     # -- diagnostics -----------------------------------------------------
     def lyapunov(self, state: RWSADMMState, key) -> dict:
         """L_β and constraint residuals (Eq. 8 / Eq. 7) for monitoring."""
+        if self.store is not None:
+            raise NotImplementedError(
+                "lyapunov iterates all n clients' data — a dense-plane "
+                "diagnostic; run it on a dense twin at small n")
         losses = []
         for c in range(self.n_clients):
             xi = jax.tree_util.tree_map(lambda l: l[c], state.clients.x)

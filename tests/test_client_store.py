@@ -1,0 +1,269 @@
+"""Property tests for the bounded LRU client-state store (the lazy
+client plane's core, ``repro.fl.client_store``).
+
+Invariants, each as a hypothesis property with a deterministic
+seed-sweep twin (pattern of ``test_scenario_properties.py``):
+
+* residency never exceeds capacity, and the store's LRU bookkeeping
+  (resident set + order, spill set, per-call counters) tracks an
+  independent python oracle replay exactly;
+* evict → restore is bit-exact: rows written before eviction come back
+  bit-for-bit on revisit, and never-written rows equal the init
+  template;
+* visit order dictates eviction order (least-recently-visited outside
+  the working set goes first);
+* capacity ≥ the visited set degenerates to the dense plane: zero
+  evictions, zero restores;
+* a single working set larger than capacity refuses loudly.
+"""
+import os
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
+from repro.checkpoint import load_client_store, save_client_store
+from repro.data import synthetic_lr_factory
+from repro.fl.client_store import STORE_COUNTERS, ClientStore
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile(
+        "smoke", max_examples=20, deadline=None,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    hypothesis.settings.register_profile("default", deadline=None)
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "default"))
+
+N_CLIENTS = 12
+
+
+def _make_store(capacity, n=N_CLIENTS, seed=0):
+    factory = synthetic_lr_factory(
+        n_clients=n, n_features=5, n_classes=3, min_samples=4,
+        mean_samples=1.0, seed=seed)
+    store = ClientStore(factory, capacity)
+    template = {"x": jnp.full((3,), 0.5, jnp.float32),
+                "z": jnp.zeros((2,), jnp.float32)}
+    clients = store.reset(template)
+    return store, clients, template
+
+
+def _write_rows(store, clients, mirror, ids, tag):
+    """Scatter a distinguishable value into each visited row (simulating
+    a training update) and mirror it host-side for later comparison."""
+    slots = store.slots(np.asarray(ids))
+    for i, s in zip(ids, slots):
+        val = np.float32(1.0 + tag + i / 64.0)
+        clients = jax.tree_util.tree_map(
+            lambda l: l.at[int(s)].set(val), clients)
+        mirror[int(i)] = val
+    return clients
+
+
+def _row_leaves(clients, slot):
+    return [np.asarray(leaf[slot])
+            for leaf in jax.tree_util.tree_leaves(clients)]
+
+
+def _check_row(store, clients, template, mirror, i):
+    """Row for client ``i`` (resident or spilled) must equal the last
+    value written, or the template if never written."""
+    if store.slot_arr[i] >= 0:
+        leaves = _row_leaves(clients, int(store.slot_arr[i]))
+    elif int(i) in store._spill:
+        leaves = store._spill[int(i)]
+    else:
+        return  # never materialized — nothing to check
+    expect = (jax.tree_util.tree_leaves(template) if int(i) not in mirror
+              else [np.full(np.shape(t), mirror[int(i)], np.float32)
+                    for t in jax.tree_util.tree_leaves(template)])
+    for got, want in zip(leaves, expect):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def check_lru_oracle(zones, capacity, n=N_CLIENTS):
+    """Drive the store through ``zones`` (a visit sequence of id lists,
+    possibly with repeats/padding) against an independent LRU oracle."""
+    store, clients, template = _make_store(capacity, n=n)
+    mirror: dict[int, np.float32] = {}
+    oracle: OrderedDict[int, None] = OrderedDict()
+    spilled: set[int] = set()
+    for t, zone in enumerate(zones):
+        zone = [int(i) % n for i in zone]
+        uniq = list(dict.fromkeys(zone))
+        if len(uniq) > capacity:
+            with pytest.raises(ValueError, match="exceeds store capacity"):
+                store.ensure(clients, np.asarray(zone))
+            continue  # refused before any mutation
+        clients, stats = store.ensure(clients, np.asarray(zone))
+
+        # -- oracle replay of this ensure call ------------------------
+        missing = [i for i in uniq if i not in oracle]
+        exp = {"hits": len(uniq) - len(missing), "misses": len(missing),
+               "evictions": 0, "restores": 0}
+        need = len(missing) - (capacity - len(oracle))
+        if need > 0:
+            victims = [i for i in oracle if i not in set(uniq)][:need]
+            for v in victims:
+                del oracle[v]
+                spilled.add(v)
+            exp["evictions"] = need
+        for i in missing:
+            if i in spilled:
+                exp["restores"] += 1
+                spilled.discard(i)
+            oracle[i] = None
+        for i in uniq:
+            oracle.move_to_end(i)
+        assert stats == exp, f"step {t}: {stats} != oracle {exp}"
+
+        # -- structural invariants ------------------------------------
+        assert store.n_resident == len(oracle) <= capacity
+        assert list(store.resident_ids) == list(oracle)
+        assert set(store.spilled_ids.tolist()) == spilled
+        # id→slot and slot→id maps are mutual inverses on residents
+        for i in oracle:
+            assert store.gid_of[store.slot_arr[i]] == i
+
+        clients = _write_rows(store, clients, mirror, uniq, tag=t)
+
+    # Every materialized client's row survives arbitrary evict/restore
+    # churn bit-for-bit (resident or in the spill buffer).
+    for i in range(n):
+        _check_row(store, clients, template, mirror, i)
+    # ...and a final revisit restores each spilled row bit-exactly.
+    for i in store.spilled_ids.tolist():
+        clients, stats = store.ensure(clients, np.asarray([i]))
+        assert stats["restores"] == 1
+        _check_row(store, clients, template, mirror, i)
+    return store
+
+
+def check_dense_degeneration(zones, capacity, n=N_CLIENTS):
+    """capacity ≥ the whole visited set ⇒ the store is just a dense
+    plane over the visited ids: no evictions, no restores, every
+    visited client stays resident."""
+    store, clients, _ = _make_store(capacity, n=n)
+    visited: set[int] = set()
+    for zone in zones:
+        zone = [int(i) % min(n, capacity) for i in zone]
+        visited.update(zone)
+        clients, _ = store.ensure(clients, np.asarray(zone))
+    assert store.counters["evictions"] == 0
+    assert store.counters["restores"] == 0
+    assert set(store.resident_ids.tolist()) == visited
+    assert store.spilled_ids.size == 0
+
+
+# ------------------------------------------------------------------
+# hypothesis properties + deterministic twins
+# ------------------------------------------------------------------
+ZONES = st.lists(
+    st.lists(st.integers(0, N_CLIENTS - 1), min_size=1, max_size=6),
+    min_size=1, max_size=14)
+
+
+@hypothesis.given(zones=ZONES, capacity=st.integers(2, N_CLIENTS))
+def test_lru_oracle_property(zones, capacity):
+    check_lru_oracle(zones, capacity)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_lru_oracle_sampled(seed):
+    rng = np.random.default_rng(seed)
+    zones = [rng.integers(0, N_CLIENTS, size=rng.integers(1, 7)).tolist()
+             for _ in range(rng.integers(3, 15))]
+    check_lru_oracle(zones, capacity=int(rng.integers(2, N_CLIENTS + 1)))
+
+
+@hypothesis.given(zones=ZONES, capacity=st.integers(4, N_CLIENTS))
+def test_dense_degeneration_property(zones, capacity):
+    check_dense_degeneration(zones, capacity)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_dense_degeneration_sampled(seed):
+    rng = np.random.default_rng(seed)
+    zones = [rng.integers(0, N_CLIENTS, size=rng.integers(1, 5)).tolist()
+             for _ in range(rng.integers(2, 10))]
+    check_dense_degeneration(zones, capacity=int(rng.integers(4, 13)))
+
+
+def test_visit_order_is_eviction_order():
+    """Visit 0..5 in order into a capacity-6 store, then force two
+    evictions: the two least-recently-visited ids (0, 1) spill first."""
+    store, clients, _ = _make_store(capacity=6)
+    for i in range(6):
+        clients, _ = store.ensure(clients, np.asarray([i]))
+    clients, stats = store.ensure(clients, np.asarray([6, 7]))
+    assert stats == {"hits": 0, "misses": 2, "evictions": 2, "restores": 0}
+    assert set(store.spilled_ids.tolist()) == {0, 1}
+    # Re-touching 2 protects it: next eviction takes 3.
+    clients, _ = store.ensure(clients, np.asarray([2]))
+    clients, stats = store.ensure(clients, np.asarray([8]))
+    assert stats["evictions"] == 1
+    assert 3 in store.spilled_ids.tolist()
+    assert 2 in store.resident_ids.tolist()
+
+
+def test_working_set_over_capacity_raises():
+    store, clients, _ = _make_store(capacity=3)
+    with pytest.raises(ValueError, match="exceeds store capacity"):
+        store.ensure(clients, np.arange(4))
+    # duplicates don't count against the working set
+    clients, stats = store.ensure(clients, np.asarray([1, 1, 2, 2, 1]))
+    assert stats == {"hits": 0, "misses": 2, "evictions": 0, "restores": 0}
+
+
+def test_out_of_range_and_unreset_errors():
+    store, clients, _ = _make_store(capacity=4)
+    with pytest.raises(IndexError):
+        store.ensure(clients, np.asarray([N_CLIENTS]))
+    with pytest.raises(KeyError, match="not resident"):
+        store.slots(np.asarray([5]))
+    fresh = ClientStore(store.factory, 4)
+    with pytest.raises(RuntimeError, match="reset"):
+        fresh.ensure(clients, np.asarray([0]))
+    with pytest.raises(ValueError, match="capacity"):
+        ClientStore(store.factory, 0)
+
+
+def test_state_dict_roundtrip_with_spill(tmp_path):
+    """Checkpoint round-trip through npz: a fresh store restored from
+    disk reproduces the mapping, LRU order, counters, spill rows, and
+    re-materialized packed dataset rows exactly."""
+    store, clients, template = _make_store(capacity=4)
+    mirror: dict[int, np.float32] = {}
+    for t, zone in enumerate([[0, 1, 2], [3, 4], [5, 0], [6, 7]]):
+        clients, _ = store.ensure(clients, np.asarray(zone))
+        clients = _write_rows(store, clients, mirror, zone, tag=t)
+    assert store.spilled_ids.size > 0
+    path = str(tmp_path / "store.npz")
+    save_client_store(path, store)
+
+    fresh, _, _ = _make_store(capacity=4)
+    load_client_store(path, fresh)
+    np.testing.assert_array_equal(fresh.gid_of, store.gid_of)
+    np.testing.assert_array_equal(fresh.slot_arr, store.slot_arr)
+    assert list(fresh.resident_ids) == list(store.resident_ids)
+    np.testing.assert_array_equal(fresh.spilled_ids, store.spilled_ids)
+    assert fresh.counters == store.counters
+    for i in store.spilled_ids.tolist():
+        for a, b in zip(fresh._spill[int(i)], store._spill[int(i)]):
+            np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree_util.tree_leaves(fresh.data),
+                    jax.tree_util.tree_leaves(store.data)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # wrong-capacity restore refuses
+    wrong, _, _ = _make_store(capacity=5)
+    with pytest.raises(ValueError, match="capacity"):
+        load_client_store(path, wrong)
+
+
+def test_counter_keys_stable():
+    """The telemetry event names derive from STORE_COUNTERS — pin the
+    schema so dashboards don't silently lose a series."""
+    assert STORE_COUNTERS == ("hits", "misses", "evictions", "restores")

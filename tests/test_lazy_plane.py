@@ -1,0 +1,284 @@
+"""Lazy client plane ≡ dense plane, pinned bit-for-bit.
+
+The bounded LRU store (``repro.fl.client_store``) promises that a
+trainer built on a :class:`~repro.data.loader.ClientDataFactory`
+reproduces the dense ``(n, …)`` run exactly: identical init rows,
+identical gather/scatter arithmetic on identical values, exact float32
+host↔device round-trips on evict/restore. These tests pin that promise
+across the eager and scan engines, dense and sparse graph backends, the
+single walker and the K=3 fleet — plus a mid-run checkpoint round-trip
+with spilled clients, and regression pins on the dense-plane eval path
+the refactor touched.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    load_client_store,
+    load_pytree,
+    save_client_store,
+    save_pytree,
+)
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.data import (
+    factory_from_federated,
+    make_image_dataset,
+    pathological_split,
+)
+from repro.data.loader import build_federated
+from repro.fl.base import to_device_data
+from repro.fl.fleet_trainer import FleetRWSADMMTrainer
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.fl.simulation import run_simulation
+from repro.models.small import get_model
+from repro.scenarios import get_scenario_config
+
+N = 8
+
+
+@pytest.fixture(scope="module")
+def fed():
+    imgs, labels = make_image_dataset(400, seed=0)
+    parts = pathological_split(labels, N, seed=0)
+    f = build_federated(imgs, labels, parts)
+    model = get_model("mlr", (28, 28, 1))
+    return to_device_data(f), factory_from_federated(f), model
+
+
+def _scenario(backend):
+    return dataclasses.replace(get_scenario_config("lossy_links"),
+                               graph_backend=backend, neighbor_k_max=8)
+
+
+def _make(fed, *, lazy, fleet=0, backend="dense", capacity=8):
+    dense, factory, model = fed
+    data = factory if lazy else dense
+    kw = dict(zone_size=4, batch_size=16, solver="closed_form",
+              scenario=_scenario(backend), seed=0)
+    if lazy:
+        kw["store_capacity"] = capacity
+    if fleet:
+        return FleetRWSADMMTrainer(model, data, RWSADMMHparams(beta=10.0),
+                                   n_walkers=fleet, sync_every=3, **kw)
+    return RWSADMMTrainer(model, data, RWSADMMHparams(beta=10.0), **kw)
+
+
+def _run(tr, *, engine, rounds=8):
+    return run_simulation(tr, rounds=rounds, eval_every=4, seed=0,
+                          engine=engine)
+
+
+def _materialize_all(tr, state):
+    """Reassemble the lazy run's client rows into dense (n, …) order
+    from resident slots + the spill buffer + the init template."""
+    clients = jax.device_get(tr._state_clients(state))
+    leaves, treedef = jax.tree_util.tree_flatten(clients)
+    tmpl = [np.asarray(l)
+            for l in jax.tree_util.tree_leaves(tr.store._template)]
+    rows = []
+    for i in range(tr.n_clients):
+        s = int(tr.store.slot_arr[i])
+        if s >= 0:
+            rows.append([np.asarray(leaf[s]) for leaf in leaves])
+        elif i in tr.store._spill:
+            rows.append([np.asarray(r) for r in tr.store._spill[i]])
+        else:
+            rows.append(tmpl)
+    stacked = [np.stack([r[j] for r in rows]) for j in range(len(leaves))]
+    return jax.tree_util.tree_unflatten(treedef, stacked)
+
+
+# ------------------------------------------------------------------
+# bit-identity pins
+# ------------------------------------------------------------------
+@pytest.mark.parametrize("fleet", [0, 3])
+def test_eager_lazy_matches_dense_with_evictions(fed, fleet):
+    """Eager engine, capacity 5 < n: the run churns through evictions
+    and restores, and every per-round metric still matches the dense
+    plane exactly (same draws, same floats)."""
+    rd = _run(_make(fed, lazy=False, fleet=fleet), engine="eager")
+    tl = _make(fed, lazy=True, fleet=fleet, capacity=5)
+    rl = _run(tl, engine="eager")
+    assert tl.store.counters["evictions"] > 0
+    assert tl.store.counters["restores"] > 0
+    assert len(rd.round_metrics) == len(rl.round_metrics)
+    for m0, m1 in zip(rd.round_metrics, rl.round_metrics):
+        assert m0 == m1
+    assert rd.total_comm_bytes == rl.total_comm_bytes
+
+
+@pytest.mark.parametrize("fleet", [0, 3])
+def test_scan_lazy_matches_dense(fed, fleet):
+    """Scan engine: chunks gather the whole chunk's visited set before
+    entering lax.scan; the compiled body sees only the packed store."""
+    rd = _run(_make(fed, lazy=False, fleet=fleet), engine="scan")
+    tl = _make(fed, lazy=True, fleet=fleet, capacity=N)
+    rl = _run(tl, engine="scan")
+    for m0, m1 in zip(rd.round_metrics, rl.round_metrics):
+        assert m0 == m1
+
+
+def test_final_state_rows_match_dense(fed):
+    """Beyond metrics: reassembling the lazy plane's rows (resident +
+    spilled + never-visited template) reproduces the dense client stack
+    leaf-for-leaf, and the server token matches exactly."""
+    dense_tr = _make(fed, lazy=False)
+    rng = np.random.default_rng(0)
+    sd = dense_tr.init_state(jax.random.PRNGKey(0))
+    lazy_tr = _make(fed, lazy=True, capacity=5)
+    rng2 = np.random.default_rng(0)
+    sl = lazy_tr.init_state(jax.random.PRNGKey(0))
+    for r in range(10):
+        sd, _ = dense_tr.round(sd, r, rng)
+        sl, _ = lazy_tr.round(sl, r, rng2)
+    assert lazy_tr.store.spilled_ids.size > 0
+    rebuilt = _materialize_all(lazy_tr, sl)
+    for a, b in zip(jax.tree_util.tree_leaves(rebuilt),
+                    jax.tree_util.tree_leaves(jax.device_get(sd.clients))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(sl.server),
+                    jax.tree_util.tree_leaves(sd.server)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(sl.visited),
+                                  np.asarray(sd.visited))
+
+
+def test_lazy_eval_full_residency_matches_dense(fed):
+    """With capacity == n every visited client is resident, so the lazy
+    resident-set metrics cover the full population: global metrics match
+    the dense eval to float tolerance (summation order differs — slots
+    are in visit order, the dense stack in id order)."""
+    rd = _run(_make(fed, lazy=False), engine="eager", rounds=12)
+    tl = _make(fed, lazy=True, capacity=N)
+    rl = _run(tl, engine="eager", rounds=12)
+    hd = {h["round"]: h for h in rd.history}
+    hl = {h["round"]: h for h in rl.history}
+    assert set(hd) == set(hl)
+    final = max(hd)
+    assert hl[final]["eval_clients"] == N
+    for key in ("acc_global", "loss_global", "acc_personalized",
+                "loss_personalized"):
+        np.testing.assert_allclose(hl[final][key], hd[final][key],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_lazy_checkpoint_roundtrip_with_spill(fed, tmp_path):
+    """Interrupt a lazy run mid-churn (spilled clients present), persist
+    trainer state + store to npz, restore into a freshly reset store,
+    continue — losses and final rows match the uninterrupted run
+    bit-for-bit."""
+    # uninterrupted reference
+    tru = _make(fed, lazy=True, capacity=5)
+    rngu = np.random.default_rng(0)
+    su = tru.init_state(jax.random.PRNGKey(0))
+    ref_losses = []
+    for r in range(13):
+        su, m = tru.round(su, r, rngu)
+        ref_losses.append(m["train_loss"])
+
+    # interrupted at round 7
+    tri = _make(fed, lazy=True, capacity=5)
+    rngi = np.random.default_rng(0)
+    si = tri.init_state(jax.random.PRNGKey(0))
+    losses = []
+    for r in range(7):
+        si, m = tri.round(si, r, rngi)
+        losses.append(m["train_loss"])
+    assert tri.store.spilled_ids.size > 0, "interrupt must catch spill"
+    save_pytree(str(tmp_path / "state.npz"), si, step=7)
+    save_client_store(str(tmp_path / "store.npz"), tri.store)
+
+    # restore: fresh template + freshly reset store (the new-process
+    # path), walker continuity via the same trainer/rng as in
+    # test_checkpoint.py
+    template = _make(fed, lazy=True, capacity=5).init_state(
+        jax.random.PRNGKey(0))
+    si = load_pytree(str(tmp_path / "state.npz"), template)
+    tri.init_state(jax.random.PRNGKey(0))      # resets tri.store
+    load_client_store(str(tmp_path / "store.npz"), tri.store)
+    for r in range(7, 13):
+        si, m = tri.round(si, r, rngi)
+        losses.append(m["train_loss"])
+    np.testing.assert_array_equal(np.asarray(losses),
+                                  np.asarray(ref_losses))
+    for a, b in zip(jax.tree_util.tree_leaves(_materialize_all(tri, si)),
+                    jax.tree_util.tree_leaves(_materialize_all(tru, su))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------
+# regression pins on the refactored dense paths
+# ------------------------------------------------------------------
+def test_dense_eval_unchanged_by_row_refactor(fed):
+    """The dense plane's evaluate() still runs the stacked closures; pin
+    that the new row-based eval (what the lazy plane uses) computes the
+    same per-client numbers on the same inputs, so the two paths can
+    never drift apart silently."""
+    dense, _, _ = fed
+    tr = _make(fed, lazy=False)
+    rng = np.random.default_rng(0)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    for r in range(6):
+        state, _ = tr.round(state, r, rng)
+    out = tr.evaluate(state)
+    assert set(out) >= {"acc_personalized", "acc_global", "acc"}
+
+    pers = tr.personalized_params(state)
+    acc_rows, loss_rows = tr.eval_rows_stacked(
+        pers, dense.x_test, dense.y_test, dense.mask_test)
+    np.testing.assert_allclose(float(jnp.mean(acc_rows)),
+                               out["acc_personalized"], rtol=1e-6)
+    np.testing.assert_allclose(float(jnp.mean(loss_rows)),
+                               out["loss_personalized"], rtol=1e-6)
+    acc_g, loss_g = tr.eval_rows_shared(
+        tr.global_params(state), dense.x_test, dense.y_test,
+        dense.mask_test)
+    np.testing.assert_allclose(float(jnp.mean(acc_g)), out["acc_global"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(jnp.mean(loss_g)),
+                               out["loss_global"], rtol=1e-6)
+
+
+def test_factory_rows_match_dense_stack(fed):
+    """factory_from_federated materializes exactly the rows the dense
+    to_device_data stacking produces — same padding, same dtypes."""
+    dense, factory, _ = fed
+    ids = np.arange(N)
+    rows = factory.rows(ids)
+    for got, want in zip(rows, dense):
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jax.device_get(want)))
+
+
+def test_lazy_guards(fed):
+    """APIs that would materialize (n, …) stacks refuse under the lazy
+    plane instead of silently exploding memory."""
+    tr = _make(fed, lazy=True, capacity=5)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="lazy"):
+        tr.personalized_params(state)
+    with pytest.raises(NotImplementedError):
+        tr.lyapunov(state, jax.random.PRNGKey(1))
+
+
+# ------------------------------------------------------------------
+# full cross-engine / cross-backend sweep (slow lane)
+# ------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ["eager", "scan", "scan_fused"])
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+@pytest.mark.parametrize("fleet", [0, 3])
+def test_lazy_equivalence_sweep(fed, engine, backend, fleet):
+    rd = _run(_make(fed, lazy=False, fleet=fleet, backend=backend),
+              engine=engine)
+    cap = 5 if engine == "eager" else N
+    tl = _make(fed, lazy=True, fleet=fleet, backend=backend, capacity=cap)
+    rl = _run(tl, engine=engine)
+    for m0, m1 in zip(rd.round_metrics, rl.round_metrics):
+        assert m0 == m1
+    assert [h["round"] for h in rd.history] \
+        == [h["round"] for h in rl.history]

@@ -290,3 +290,120 @@ def test_snapshot_without_acc_does_not_crash(fed, tmp_path, capsys):
     sim._snapshot(NoAccTrainer(), None, 5, 123, hist, True, "noacc")
     assert hist[0]["round"] == 5
     assert "acc" not in hist[0]
+
+
+# ------------------------------------------------ lazy-plane counters ---
+@pytest.fixture(scope="module")
+def fed_lazy():
+    """Same partition as ``fed`` but kept as a ClientDataFactory, for
+    store-backed (client_plane='lazy') trainers."""
+    from repro.data import factory_from_federated
+
+    imgs, labels = make_image_dataset(400, seed=0)
+    parts = pathological_split(labels, 8, seed=0)
+    f = build_federated(imgs, labels, parts)
+    model = get_model("mlr", (28, 28, 1))
+    return factory_from_federated(f), model
+
+
+def _make_lazy_trainer(fed_lazy, capacity):
+    factory, model = fed_lazy
+    return RWSADMMTrainer(model, factory, RWSADMMHparams(beta=10.0),
+                          zone_size=4, batch_size=16,
+                          solver="closed_form",
+                          scenario=_scenario("dense"), seed=0,
+                          store_capacity=capacity)
+
+
+def _store_counter_events(events_path):
+    from repro.fl.client_store import STORE_COUNTERS
+
+    prefix = "client_store_"
+    evs = [e for e in read_events(events_path)
+           if e["t"] == "counter" and e["name"].startswith(prefix)]
+    order = [prefix + k for k in STORE_COUNTERS]
+    # one ensure call emits the four counters in STORE_COUNTERS order
+    assert [e["name"] for e in evs] \
+        == order * (len(evs) // len(order))
+    return evs
+
+
+@pytest.mark.parametrize("engine,capacity", [("eager", 5), ("scan", 8)])
+def test_lazy_telemetry_on_is_bit_identical(fed_lazy, tmp_path, engine,
+                                            capacity):
+    """The store's hit/miss/evict/restore counters are host-side only:
+    recording them must not change a lazy run (exact float equality),
+    and the counter stream must actually be present."""
+    from repro.fl.client_store import STORE_COUNTERS
+
+    res_off = run_simulation(_make_lazy_trainer(fed_lazy, capacity),
+                             rounds=8, eval_every=4, seed=0,
+                             engine=engine)
+    with TelemetryRun(str(tmp_path / engine), seed=0) as tel:
+        res_on = run_simulation(_make_lazy_trainer(fed_lazy, capacity),
+                                rounds=8, eval_every=4, seed=0,
+                                engine=engine, telemetry=tel)
+    for m0, m1 in zip(res_off.round_metrics, res_on.round_metrics):
+        assert m0 == m1
+    for h0, h1 in zip(res_off.history, res_on.history):
+        assert h0 == h1
+    names = {e["name"] for e in _store_counter_events(tel.events_path)}
+    assert names == {f"client_store_{k}" for k in STORE_COUNTERS}
+
+
+def test_lazy_store_counters_match_oracle(fed_lazy, fed, tmp_path):
+    """Counter exactness: the recorded per-round deltas must equal an
+    independent LRU-oracle replay of the schedule's visited set (raw
+    padded zone rows — padding id 0 counts, by design), and the stream
+    totals must equal the store's cumulative counters."""
+    import collections
+
+    import numpy as np
+
+    from repro.fl.client_store import STORE_COUNTERS
+
+    capacity, rounds = 5, 8
+    tr = _make_lazy_trainer(fed_lazy, capacity)
+    with TelemetryRun(str(tmp_path / "run"), seed=0) as tel:
+        run_simulation(tr, rounds=rounds, eval_every=4, seed=0,
+                       engine="eager", telemetry=tel)
+    evs = _store_counter_events(tel.events_path)
+    assert len(evs) == rounds * len(STORE_COUNTERS)
+    got = [{k: evs[4 * r + j]["value"]
+            for j, k in enumerate(STORE_COUNTERS)}
+           for r in range(rounds)]
+    totals = collections.Counter()
+    for d in got:
+        totals.update(d)
+    assert dict(totals) == tr.store.counters
+    assert totals["evictions"] > 0 and totals["restores"] > 0
+
+    # Oracle: a dense twin's schedule replays the same walk draws, so
+    # its padded zone rows are exactly what the lazy run ensured.
+    twin = _make_trainer(fed, "dense")
+    sched = twin.schedule(rounds, np.random.default_rng(0))
+    oracle: collections.OrderedDict = collections.OrderedDict()
+    spilled: set = set()
+    expect = []
+    for r in range(rounds):
+        row = np.asarray(sched.idx)[r].reshape(-1)
+        uniq = list(dict.fromkeys(int(i) for i in row))
+        missing = [i for i in uniq if i not in oracle]
+        d = {"hits": len(uniq) - len(missing), "misses": len(missing),
+             "evictions": 0, "restores": 0}
+        need = len(missing) - (capacity - len(oracle))
+        if need > 0:
+            victims = [i for i in oracle if i not in set(uniq)][:need]
+            for v in victims:
+                del oracle[v]
+                spilled.add(v)
+            d["evictions"] = need
+        for i in missing:
+            if i in spilled:
+                d["restores"] += 1
+                spilled.discard(i)
+            oracle[i] = None
+        for i in uniq:
+            oracle.move_to_end(i)
+        expect.append(d)
+    assert got == expect
