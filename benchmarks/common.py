@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import os
 import resource
+import sys
 import time
 
 import numpy as np
@@ -140,15 +141,75 @@ def run_peak_rss_mb() -> float:
     return _run_peak_mb
 
 
+def runtime_stamp() -> dict:
+    """The jax runtime columns every bench row carries: backend name,
+    visible device count, and the mesh the row ran under (``None`` =
+    unsharded; sharded rows overwrite it with e.g. ``"data:8"``). Rows
+    are only comparable across PRs within one runtime shape — these
+    columns make that shape diffable."""
+    try:
+        import jax
+
+        return {"jax_backend": jax.default_backend(),
+                "device_count": int(jax.device_count()),
+                "mesh": None}
+    except Exception:   # jax-free tooling contexts
+        return {"jax_backend": None, "device_count": None, "mesh": None}
+
+
 def bench_row(name: str, *, n: int, engine: str, us_per_round: float,
               k: int = 1, **extra) -> dict:
     """One BENCH_scaling.json record (schema: name, n, K, engine,
-    us_per_round, peak_rss_mb + free-form extras)."""
+    us_per_round, peak_rss_mb, jax_backend, device_count, mesh +
+    free-form extras)."""
     row = {"name": name, "n": int(n), "K": int(k), "engine": engine,
            "us_per_round": round(float(us_per_round), 1),
            "peak_rss_mb": round(peak_rss_mb(), 1)}
+    row.update(runtime_stamp())
     row.update(extra)
     return row
+
+
+def backfill_bench_rows(path: str | None = None) -> str:
+    """One-off migration: re-emit every existing BENCH_scaling.json row
+    through the atomic writer with the :func:`runtime_stamp` columns
+    backfilled. Historical rows all ran single-device CPU, so missing
+    columns get exactly that; rows that already carry the columns are
+    untouched."""
+    from repro.telemetry import atomic_write_json, load_bench_rows
+
+    path = path or BENCH_JSON
+    rows = load_bench_rows(path)
+    for r in rows:
+        r.setdefault("jax_backend", "cpu")
+        r.setdefault("device_count", 1)
+        r.setdefault("mesh", None)
+    return atomic_write_json(path, rows)
+
+
+def ensure_multidevice_harness(count: int, module: str) -> None:
+    """Olmax-style multi-device CPU harness (SNIPPETS §1–2): make this
+    bench process see ``count`` host platform devices and run under
+    tcmalloc. Call FIRST THING in ``main()`` — the XLA flag only takes
+    effect before the jax backend initializes. tcmalloc can only load
+    at process start, so when the library exists but is not preloaded
+    the process re-execs itself ONCE (``python -m module argv…``) with
+    the full env from ``launch.hostdevices``."""
+    from repro.launch.hostdevices import (
+        ensure_host_platform_devices,
+        host_device_env,
+    )
+
+    ensure_host_platform_devices(count)
+    env = host_device_env(count)
+    want = env.get("LD_PRELOAD")
+    if (want and want != os.environ.get("LD_PRELOAD")
+            and os.environ.get("_REPRO_BENCH_REEXEC") != "1"):
+        env["_REPRO_BENCH_REEXEC"] = "1"
+        sys.stdout.flush()
+        sys.stderr.flush()
+        os.execve(sys.executable,
+                  [sys.executable, "-m", module] + sys.argv[1:], env)
 
 
 def write_bench_rows(rows: list[dict], path: str | None = None) -> str:

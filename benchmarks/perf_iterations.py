@@ -10,11 +10,10 @@ kept in EXPERIMENTS.md §Perf.
 """
 import os
 
-if "xla_force_host_platform_device_count" not in os.environ.get(
-        "XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count=512 "
-        + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.hostdevices import ensure_host_platform_devices
+
+# Must precede backend init (first computation), hence top-of-module.
+ensure_host_platform_devices(512)
 
 import argparse  # noqa: E402
 import json  # noqa: E402

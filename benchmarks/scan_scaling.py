@@ -161,7 +161,8 @@ def control_plane(clients=(2000, 10000, 50000), rounds: int = 64,
 
 
 def lazy_plane(clients=(100_000, 1_000_000), rounds: int = 32,
-               capacity: int = 1024) -> dict:
+               capacity: int = 1024, *, shard_devices: int | None = None,
+               prefetch: bool = False) -> dict:
     """Full TRAINING rounds at n up to 10⁶ on the lazy client plane:
     bounded LRU store + on-demand dataset materialization + sparse
     control plane, scan engine. The dense plane would need the (n, …)
@@ -169,7 +170,15 @@ def lazy_plane(clients=(100_000, 1_000_000), rounds: int = 32,
     for this workload — while the lazy plane's footprint is set by
     ``capacity`` (store rows) plus the O(n·k) control plane, which is
     what the ``peak_rss_mb`` column certifies. Returns {n: s_per_round}
-    and appends rows to BENCH_scaling.json."""
+    and appends rows to BENCH_scaling.json.
+
+    ``shard_devices``: place the packed store over a "data" mesh of
+    that many (host platform) devices — row tag ``scan_shard{d}``; run
+    under ``--shard-devices`` so the devices exist. ``prefetch``: stage
+    each next chunk's dataset rows on a host thread while the current
+    chunk executes (row tag suffix ``_prefetch``); the timed region
+    then pipelines schedule → prefetch → chunk exactly like
+    ``run_simulation`` does."""
     import dataclasses as _dc
 
     from repro.data import synthetic_lr_factory
@@ -200,33 +209,62 @@ def lazy_plane(clients=(100_000, 1_000_000), rounds: int = 32,
         # stacks are the biggest transient at n = 10⁶ (≈0.5 GB each at
         # chunk 8) — the store itself stays capacity-bounded.
         cfg = _dc.replace(cfg, rollout_chunk=8)
+        mesh = None
+        if shard_devices:
+            from repro.fl.sharding import FLSharding
+
+            mesh = FLSharding(n_devices=shard_devices)
         trainer = RWSADMMTrainer(
             model, factory,
             RWSADMMHparams(beta=10.0, kappa=0.001, epsilon=1e-5),
             zone_size=8, batch_size=20, solver="closed_form",
-            scenario=cfg, seed=0, store_capacity=capacity)
+            scenario=cfg, seed=0, store_capacity=capacity,
+            prefetch=prefetch, mesh=mesh)
         state = trainer.init_state(jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
         sched = trainer.schedule(rounds, rng, start_round=0)
         state, _ = trainer.run_chunk(state, sched, engine="scan")
-        jax.block_until_ready(state.server.y)
+        jax.block_until_ready(trainer.global_params(state))
+        # Timed region: TWO pipelined chunks (schedule + ensure + scan),
+        # the steady-state structure run_simulation drives — with
+        # prefetch the next window's schedule/staging hides behind the
+        # executing chunk, without it each window schedules up front.
+        n_chunks, sched_next, r0 = 2, None, rounds
         t0 = time.perf_counter()
-        sched = trainer.schedule(rounds, rng, start_round=rounds)
-        state, stacked = trainer.run_chunk(state, sched, engine="scan")
-        jax.block_until_ready(stacked["train_loss"])
-        sec = (time.perf_counter() - t0) / rounds
+        for w in range(n_chunks):
+            if sched_next is None:
+                sched_next = trainer.schedule(rounds, rng, start_round=r0)
+            sched, sched_next = sched_next, None
+            r0 += rounds
+            state, stacked = trainer.run_chunk(state, sched,
+                                               engine="scan")
+            if prefetch and w + 1 < n_chunks:
+                sched_next = trainer.schedule(rounds, rng,
+                                              start_round=r0)
+                trainer.prefetch_chunk(sched_next)
+            jax.block_until_ready(stacked["train_loss"])
+        sec = (time.perf_counter() - t0) / (n_chunks * rounds)
         c = trainer.store.counters
-        name = f"scan_scaling/lazy_plane/n{n}/scan"
+        tag = "scan" + (f"_shard{shard_devices}" if shard_devices
+                        else "") + ("_prefetch" if prefetch else "")
+        name = f"scan_scaling/lazy_plane/n{n}/{tag}"
         emit(name, sec * 1e6,
              f"rounds_per_s={1.0 / sec:.1f} "
              f"peak_rss_mb={peak_rss_mb():.0f} "
              f"resident={trainer.store.n_resident}/{capacity} "
              f"miss={c['misses']} evict={c['evictions']}")
+        extra = {}
+        if shard_devices:
+            extra["mesh"] = f"data:{shard_devices}"
+        if prefetch:
+            extra["prefetch_hits"] = c["prefetch_hits"]
+            extra["prefetch_misses"] = c["prefetch_misses"]
         json_rows.append(bench_row(
             name, n=n, engine="scan", us_per_round=sec * 1e6,
-            rounds=2 * rounds, capacity=capacity,
+            rounds=(n_chunks + 1) * rounds, capacity=capacity,
             resident=trainer.store.n_resident,
-            store_misses=c["misses"], store_evictions=c["evictions"]))
+            store_misses=c["misses"], store_evictions=c["evictions"],
+            **extra))
         results[n] = sec
         del trainer, state, sched, stacked, factory
     write_bench_rows(json_rows)
@@ -257,15 +295,29 @@ def main() -> None:
                     help="lazy-plane timed rounds (one scan chunk)")
     ap.add_argument("--lazy-capacity", type=int, default=1024,
                     help="lazy-plane store capacity (resident slots)")
+    ap.add_argument("--shard-devices", type=int, default=None,
+                    help="lazy plane: shard the packed store over this "
+                    "many host platform devices (olmax-style multi-"
+                    "device CPU harness; re-execs under tcmalloc)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="lazy plane: async next-chunk dataset staging")
     ap.add_argument("--assert-rss-mb", type=float, default=None,
                     help="exit nonzero if peak RSS exceeds this (the "
                     "sparse-backend / lazy-plane CI memory gate)")
     args = ap.parse_args()
+    if args.shard_devices:
+        from .common import ensure_multidevice_harness
+
+        # Must precede the first computation (backend init).
+        ensure_multidevice_harness(args.shard_devices,
+                                   "benchmarks.scan_scaling")
     print("name,us_per_call,derived")
     if args.lazy:
         lazy_plane(clients=tuple(args.lazy_clients),
                    rounds=args.lazy_rounds,
-                   capacity=args.lazy_capacity)
+                   capacity=args.lazy_capacity,
+                   shard_devices=args.shard_devices,
+                   prefetch=args.prefetch)
     else:
         if not args.control_plane:
             run(rounds=args.rounds, clients=tuple(args.clients))

@@ -23,6 +23,9 @@ class APFLState(NamedTuple):
 class APFLTrainer(TrainerBase):
     name = "apfl"
     personalized = True
+    # The stacked (n, …) personal models v_i live in the trainer state —
+    # incompatible with the bounded-store lazy plane.
+    lazy_capable = False
 
     def __init__(self, model, data: DeviceData, *, alpha: float = 0.5,
                  lr: float = 0.05, local_steps: int = 10,

@@ -19,6 +19,9 @@ class DittoState(NamedTuple):
 class DittoTrainer(TrainerBase):
     name = "ditto"
     personalized = True
+    # The stacked (n, …) personal models v_i live in the trainer state —
+    # incompatible with the bounded-store lazy plane.
+    lazy_capable = False
 
     def __init__(self, model, data: DeviceData, *, lam: float = 1.0,
                  lr: float = 0.05, local_steps: int = 10,

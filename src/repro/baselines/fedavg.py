@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..fl.base import DeviceData, TrainerBase
+from ..fl.base import TrainerBase
 
 
 class FedAvgState(NamedTuple):
@@ -18,19 +18,32 @@ class FedAvgTrainer(TrainerBase):
     name = "fedavg"
     personalized = False
 
-    def __init__(self, model, data: DeviceData, *, lr: float = 0.05,
+    def __init__(self, model, data, *, lr: float = 0.05,
                  local_steps: int = 10, clients_per_round: int = 10,
-                 batch_size: int = 20, telemetry=None):
-        super().__init__(model, data, batch_size, telemetry=telemetry)
+                 batch_size: int = 20, store_capacity: int = 4096,
+                 prefetch: bool = False, mesh=None, telemetry=None):
+        # ``data`` is stacked DeviceData (dense plane) or a
+        # ClientDataFactory (lazy plane: the base builds the bounded LRU
+        # ClientStore; FedAvg keeps no per-client state, so the store
+        # manages only the packed dataset block).
+        super().__init__(model, data, batch_size, telemetry=telemetry,
+                         store_capacity=store_capacity, prefetch=prefetch,
+                         mesh=mesh)
         self.lr = lr
         self.local_steps = local_steps
         self.m = int(min(clients_per_round, self.n_clients))
         local = self.make_local_sgd(lr, local_steps)
 
-        def round_fn(w, sel, key):
+        def round_fn(w, sel, key, data=None):
+            # Dense: ``sel`` are client ids into the captured stack.
+            # Lazy: ``sel`` are store slots and ``data`` the packed
+            # block as a traced argument — same gather arithmetic, so
+            # the two planes pin bit-identical (tests/test_lazy_plane).
+            data_ = self.data if data is None else data
             keys = jax.random.split(key, self.m)
-            locals_ = jax.vmap(lambda c, k: local(w, c, k))(sel, keys)
-            weights = self.data.n_train[sel].astype(jnp.float32)
+            locals_ = jax.vmap(lambda c, k: local(w, c, k, data_))(sel,
+                                                                   keys)
+            weights = data_.n_train[sel].astype(jnp.float32)
             weights = weights / jnp.sum(weights)
 
             def avg(ls):
@@ -42,12 +55,19 @@ class FedAvgTrainer(TrainerBase):
         self._round_fn = jax.jit(round_fn)
 
     def init_state(self, key) -> FedAvgState:
+        if self.store is not None:
+            self._reset_store()
         return FedAvgState(w=self.model.init(key))
 
     def round(self, state: FedAvgState, rnd: int, rng: np.random.Generator):
         sel = self.select_clients(rnd, rng, self.m)
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
-        w = self._round_fn(state.w, jnp.asarray(sel), key)
+        if self.store is not None:
+            _, slots = self._ensure_round(state, sel)
+            w = self._round_fn(state.w, jnp.asarray(slots), key,
+                               data=self.store.data)
+        else:
+            w = self._round_fn(state.w, jnp.asarray(sel), key)
         return FedAvgState(w=w), {
             "round": rnd,
             "comm_bytes": self.comm_bytes_per_round(self.m),

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..fl.base import DeviceData, TrainerBase, sample_batch
+from ..fl.base import TrainerBase, sample_batch
 
 
 class PerFedAvgState(NamedTuple):
@@ -23,23 +23,30 @@ class PerFedAvgTrainer(TrainerBase):
     name = "perfedavg"
     personalized = True
 
-    def __init__(self, model, data: DeviceData, *, alpha: float = 0.03,
+    def __init__(self, model, data, *, alpha: float = 0.03,
                  beta: float = 0.05, local_steps: int = 10,
                  clients_per_round: int = 10, batch_size: int = 20,
-                 telemetry=None):
-        super().__init__(model, data, batch_size, telemetry=telemetry)
+                 store_capacity: int = 4096, prefetch: bool = False,
+                 mesh=None, telemetry=None):
+        # ``data``: stacked DeviceData or a ClientDataFactory (lazy
+        # plane — datasets materialize through the bounded LRU store).
+        super().__init__(model, data, batch_size, telemetry=telemetry,
+                         store_capacity=store_capacity, prefetch=prefetch,
+                         mesh=mesh)
         self.alpha, self.beta = alpha, beta
         self.m = int(min(clients_per_round, self.n_clients))
 
-        def maml_steps(w, client, key):
+        def maml_steps(w, client, key, data=None):
+            data_ = self.data if data is None else data
+
             def body(p, k):
                 k1, k2 = jax.random.split(k)
-                x1, y1 = sample_batch(self.data, client, k1, batch_size)
+                x1, y1 = sample_batch(data_, client, k1, batch_size)
                 g1 = self.grad_fn(p, x1, y1, k1)
                 p_in = jax.tree_util.tree_map(
                     lambda a, b: a - alpha * b, p, g1
                 )
-                x2, y2 = sample_batch(self.data, client, k2, batch_size)
+                x2, y2 = sample_batch(data_, client, k2, batch_size)
                 g2 = self.grad_fn(p_in, x2, y2, k2)
                 p = jax.tree_util.tree_map(lambda a, b: a - beta * b, p, g2)
                 return p, None
@@ -48,31 +55,48 @@ class PerFedAvgTrainer(TrainerBase):
             w, _ = jax.lax.scan(body, w, keys)
             return w
 
-        def round_fn(w, sel, key):
+        def round_fn(w, sel, key, data=None):
+            # Lazy plane: ``sel`` are store slots, ``data`` the packed
+            # block as a traced argument (dense: client ids + closure).
+            data_ = self.data if data is None else data
             keys = jax.random.split(key, self.m)
-            locals_ = jax.vmap(lambda c, k: maml_steps(w, c, k))(sel, keys)
+            locals_ = jax.vmap(lambda c, k: maml_steps(w, c, k, data_))(
+                sel, keys)
             return jax.tree_util.tree_map(
                 lambda ls: jnp.mean(ls, axis=0), locals_
             )
 
         self._round_fn = jax.jit(round_fn)
 
-        def adapt(w, client, key):
-            xb, yb = sample_batch(self.data, client, key, batch_size)
+        def adapt(w, client, key, data=None):
+            data_ = self.data if data is None else data
+            xb, yb = sample_batch(data_, client, key, batch_size)
             g = self.grad_fn(w, xb, yb, key)
             return jax.tree_util.tree_map(lambda a, b: a - alpha * b, w, g)
 
         self._adapt_all = jax.jit(
             jax.vmap(adapt, in_axes=(None, 0, 0))
         )
+        # Row-based twin for the lazy plane's resident-set eval: adapt
+        # over every store slot against the packed data block.
+        self._adapt_rows = jax.jit(
+            jax.vmap(adapt, in_axes=(None, 0, 0, None))
+        )
 
     def init_state(self, key) -> PerFedAvgState:
+        if self.store is not None:
+            self._reset_store()
         return PerFedAvgState(w=self.model.init(key))
 
     def round(self, state, rnd: int, rng: np.random.Generator):
         sel = self.select_clients(rnd, rng, self.m)
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
-        w = self._round_fn(state.w, jnp.asarray(sel), key)
+        if self.store is not None:
+            _, slots = self._ensure_round(state, sel)
+            w = self._round_fn(state.w, jnp.asarray(slots), key,
+                               data=self.store.data)
+        else:
+            w = self._round_fn(state.w, jnp.asarray(sel), key)
         return PerFedAvgState(w=w), {
             "round": rnd,
             "comm_bytes": self.comm_bytes_per_round(self.m),
@@ -83,6 +107,15 @@ class PerFedAvgTrainer(TrainerBase):
         clients = jnp.arange(self.n_clients)
         keys = jax.random.split(jax.random.PRNGKey(1234), self.n_clients)
         return self._adapt_all(state.w, clients, keys)
+
+    def _lazy_personalized_rows(self, state):
+        # Per-slot deployment protocol (one α-step on the slot's own
+        # rows); keys are slot-indexed, so this is the dense eval's
+        # sampling scheme applied to the resident set.
+        cap = self.store.capacity
+        keys = jax.random.split(jax.random.PRNGKey(1234), cap)
+        return self._adapt_rows(state.w, jnp.arange(cap), keys,
+                                self.store.data)
 
     def global_params(self, state):
         return state.w

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..fl.base import DeviceData, TrainerBase, sample_batch
+from ..fl.base import TrainerBase, sample_batch
 
 
 class PFedMeState(NamedTuple):
@@ -23,21 +23,27 @@ class PFedMeTrainer(TrainerBase):
     name = "pfedme"
     personalized = True
 
-    def __init__(self, model, data: DeviceData, *, lam: float = 15.0,
+    def __init__(self, model, data, *, lam: float = 15.0,
                  inner_lr: float = 0.05, inner_steps: int = 5,
                  local_rounds: int = 5, eta: float = 0.05,
                  server_beta: float = 1.0, clients_per_round: int = 10,
-                 batch_size: int = 20, telemetry=None):
-        super().__init__(model, data, batch_size, telemetry=telemetry)
+                 batch_size: int = 20, store_capacity: int = 4096,
+                 prefetch: bool = False, mesh=None, telemetry=None):
+        # ``data``: stacked DeviceData or a ClientDataFactory (lazy
+        # plane — datasets materialize through the bounded LRU store).
+        super().__init__(model, data, batch_size, telemetry=telemetry,
+                         store_capacity=store_capacity, prefetch=prefetch,
+                         mesh=mesh)
         self.m = int(min(clients_per_round, self.n_clients))
         self.lam, self.inner_lr = lam, inner_lr
         self.inner_steps, self.local_rounds = inner_steps, local_rounds
         self.eta, self.server_beta = eta, server_beta
 
-        def prox_solve(w_i, client, key):
+        def prox_solve(w_i, client, key, data=None):
             """K inner SGD steps on h(θ) = f(θ; ξ) + λ/2||θ − w_i||²,
             with a fixed minibatch ξ per prox solve (pFedMe's sampling)."""
-            xb, yb = sample_batch(self.data, client, key, batch_size)
+            data_ = self.data if data is None else data
+            xb, yb = sample_batch(data_, client, key, batch_size)
 
             def h(theta):
                 return (self.loss_fn(theta, xb, yb, key)
@@ -54,9 +60,9 @@ class PFedMeTrainer(TrainerBase):
             theta, _ = jax.lax.scan(body, theta, jnp.arange(inner_steps))
             return theta
 
-        def local(w, client, key):
+        def local(w, client, key, data=None):
             def body(w_i, k):
-                theta = prox_solve(w_i, client, k)
+                theta = prox_solve(w_i, client, k, data)
                 w_i = jax.tree_util.tree_map(
                     lambda a, t: a - eta * lam * (a - t), w_i, theta
                 )
@@ -66,9 +72,12 @@ class PFedMeTrainer(TrainerBase):
             w_i, _ = jax.lax.scan(body, w, keys)
             return w_i
 
-        def round_fn(w, sel, key):
+        def round_fn(w, sel, key, data=None):
+            # Lazy plane: ``sel`` are store slots, ``data`` the packed
+            # block as a traced argument (dense: client ids + closure).
             keys = jax.random.split(key, self.m)
-            w_locals = jax.vmap(lambda c, k: local(w, c, k))(sel, keys)
+            w_locals = jax.vmap(lambda c, k: local(w, c, k, data))(sel,
+                                                                   keys)
             w_avg = jax.tree_util.tree_map(
                 lambda ls: jnp.mean(ls, axis=0), w_locals
             )
@@ -81,14 +90,25 @@ class PFedMeTrainer(TrainerBase):
         self._prox_all = jax.jit(
             jax.vmap(prox_solve, in_axes=(None, 0, 0))
         )
+        # Row-based twin for the lazy plane's resident-set eval.
+        self._prox_rows = jax.jit(
+            jax.vmap(prox_solve, in_axes=(None, 0, 0, None))
+        )
 
     def init_state(self, key) -> PFedMeState:
+        if self.store is not None:
+            self._reset_store()
         return PFedMeState(w=self.model.init(key))
 
     def round(self, state, rnd: int, rng: np.random.Generator):
         sel = self.select_clients(rnd, rng, self.m)
         key = jax.random.PRNGKey(rng.integers(2**31 - 1))
-        w = self._round_fn(state.w, jnp.asarray(sel), key)
+        if self.store is not None:
+            _, slots = self._ensure_round(state, sel)
+            w = self._round_fn(state.w, jnp.asarray(slots), key,
+                               data=self.store.data)
+        else:
+            w = self._round_fn(state.w, jnp.asarray(sel), key)
         return PFedMeState(w=w), {
             "round": rnd,
             "comm_bytes": self.comm_bytes_per_round(self.m),
@@ -99,6 +119,14 @@ class PFedMeTrainer(TrainerBase):
         clients = jnp.arange(self.n_clients)
         keys = jax.random.split(jax.random.PRNGKey(99), self.n_clients)
         return self._prox_all(state.w, clients, keys)
+
+    def _lazy_personalized_rows(self, state):
+        # Per-slot Moreau-envelope personalization against the packed
+        # data block (keys slot-indexed).
+        cap = self.store.capacity
+        keys = jax.random.split(jax.random.PRNGKey(99), cap)
+        return self._prox_rows(state.w, jnp.arange(cap), keys,
+                               self.store.data)
 
     def global_params(self, state):
         return state.w

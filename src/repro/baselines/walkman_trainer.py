@@ -25,6 +25,9 @@ class WalkmanState(NamedTuple):
 class WalkmanTrainer(TrainerBase):
     name = "walkman"
     personalized = False
+    # Walkman's consensus state is a stacked (n, …) client pytree with
+    # no store-backed round body — dense plane only.
+    lazy_capable = False
 
     def __init__(self, model, data: DeviceData, *, beta: float = 3.0,
                  min_degree: int = 5, regen_every: int = 10,

@@ -115,14 +115,22 @@ class TrainerBase:
 
     name: str = "base"
     personalized: bool = True
+    #: whether this trainer can run on the lazy client plane
+    #: (``data=ClientDataFactory`` + the bounded LRU store). Trainers
+    #: that keep dense per-client ``(n, …)`` stacks in their state
+    #: (Ditto, APFL, Walkman) set this False and refuse loudly.
+    lazy_capable: bool = True
 
     def __init__(self, model: SmallModel, data,
-                 batch_size: int = 20, telemetry=None):
+                 batch_size: int = 20, telemetry=None, *,
+                 store_capacity: int = 4096, prefetch: bool = False,
+                 mesh=None):
         self.model = model
         # ``data`` is either eagerly stacked DeviceData (the dense
         # client plane) or a per-client ClientDataFactory (the lazy
-        # plane, ``client_plane="lazy"`` on the RWSADMM trainers): no
-        # (n, …) arrays ever materialize, clients are fetched on visit.
+        # plane, ``client_plane="lazy"``): no (n, …) arrays ever
+        # materialize, clients are fetched on visit through the bounded
+        # LRU ClientStore built below.
         lazy = not isinstance(data, DeviceData)
         self.client_plane = "lazy" if lazy else "dense"
         self.data_factory = data if lazy else None
@@ -131,6 +139,35 @@ class TrainerBase:
         self.n_clients = data.n_clients
         self.scenario = None   # attach_scenario() / trainer kwarg
         self.telemetry = telemetry   # TelemetryRun or None (off)
+        # Device-sharded client plane: with a mesh, every leading
+        # client/capacity axis goes data-parallel over its "data" axis
+        # (fl/sharding.py); without one, placement is untouched.
+        self.fl_sharding = None
+        if mesh is not None:
+            from .sharding import FLSharding
+
+            self.fl_sharding = (mesh if isinstance(mesh, FLSharding)
+                                else FLSharding(mesh))
+        self.store = None
+        if lazy:
+            if not self.lazy_capable:
+                raise NotImplementedError(
+                    f"{type(self).__name__} keeps dense per-client "
+                    "(n, …) state stacks and does not support "
+                    "client_plane='lazy'; pass stacked DeviceData")
+            from .client_store import ClientStore
+
+            self.store = ClientStore(self.data_factory,
+                                     int(store_capacity),
+                                     prefetch=prefetch,
+                                     sharding=self.fl_sharding)
+            self.store.telemetry = telemetry
+        elif self.fl_sharding is not None:
+            # Shard the dense stacked data once; the closures below
+            # capture the sharded copy so jitted rounds see data-parallel
+            # inputs and propagate the placement.
+            data = self.fl_sharding.shard_rows(data)
+            self.data = data
 
         def loss_fn(params, xb, yb, rng):
             logits = model.apply(params, xb, train=True, rng=rng)
@@ -181,12 +218,16 @@ class TrainerBase:
 
     # -- local inner loops ------------------------------------------------
     def make_local_sgd(self, lr: float, steps: int) -> Callable:
-        """(params, client, key) -> params after ``steps`` SGD steps on the
-        client's data. jit/vmap-safe."""
+        """(params, client, key[, data]) -> params after ``steps`` SGD
+        steps on the client's data. jit/vmap-safe. ``data`` defaults to
+        the dense stacked plane; the lazy plane passes the packed store
+        block as a traced argument (``client`` is then a store slot)."""
 
-        def run(params, client, key):
+        def run(params, client, key, data=None):
+            data_ = self.data if data is None else data
+
             def body(p, k):
-                xb, yb = sample_batch(self.data, client, k, self.batch_size)
+                xb, yb = sample_batch(data_, client, k, self.batch_size)
                 g = self.grad_fn(p, xb, yb, k)
                 p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
                 return p, None
@@ -227,10 +268,97 @@ class TrainerBase:
         out["acc"] = out.get("acc_personalized", out.get("acc_global", 0.0))
         return out
 
-    def _evaluate_lazy(self, state) -> dict:  # pragma: no cover - interface
-        raise NotImplementedError(
-            f"{type(self).__name__} does not support client_plane='lazy' "
-            "(only the store-backed RWSADMM trainers do)")
+    def _evaluate_lazy(self, state) -> dict:
+        """Evaluation restricted to the MATERIALIZED clients — the lazy
+        plane's answer to the dense path's all-n iteration. Runs the
+        row-based eval over all capacity slots (fixed shapes, one
+        executable) and averages over the occupied ones. Personalized
+        rows come from :meth:`_lazy_personalized_rows` (None → global
+        eval only, e.g. FedAvg); the global model from
+        :meth:`global_params`. Reports how many clients the estimate
+        covers (``eval_clients``) — at large n this is a resident-set
+        sample of the population metric, by design."""
+        store = self.store
+        occ = store.gid_of >= 0                          # (capacity,)
+        d = store.data
+
+        def masked_stats(acc, loss):
+            return np.asarray(acc)[occ], np.asarray(loss)[occ]
+
+        out: dict[str, float] = {}
+        pers = self._lazy_personalized_rows(state)
+        if pers is not None:
+            acc, loss = self.eval_rows_stacked(pers, d.x_test, d.y_test,
+                                               d.mask_test)
+            acc, loss = masked_stats(acc, loss)
+            out["acc_personalized"] = float(acc.mean()) if len(acc) else 0.0
+            out["acc_personalized_std"] = (float(acc.std())
+                                           if len(acc) else 0.0)
+            out["loss_personalized"] = (float(loss.mean())
+                                        if len(loss) else 0.0)
+        glob = self.global_params(state)
+        if glob is not None:
+            acc, loss = self.eval_rows_shared(glob, d.x_test, d.y_test,
+                                              d.mask_test)
+            acc, loss = masked_stats(acc, loss)
+            out["acc_global"] = float(acc.mean()) if len(acc) else 0.0
+            out["loss_global"] = float(loss.mean()) if len(loss) else 0.0
+        out["acc"] = out.get("acc_personalized",
+                             out.get("acc_global", 0.0))
+        out["eval_clients"] = int(occ.sum())
+        return out
+
+    def _lazy_personalized_rows(self, state) -> PyTree | None:
+        """Per-slot ``(capacity, …)`` personalized parameters for the
+        lazy eval path, or None when this trainer evaluates the global
+        model only. RWSADMM substitutes visited clients' x rows; the
+        adaptation-based baselines adapt the global model on each
+        resident slot's data rows."""
+        return None
+
+    # -- lazy client-plane plumbing (client_plane="lazy") -----------------
+    def _state_clients(self, state) -> PyTree:
+        """Where the packed per-client state pytree lives in this
+        trainer's state. The FedAvg-family baselines keep NO per-client
+        state — the store then manages only the packed data block."""
+        return ()
+
+    def _state_visited(self, state):
+        return None
+
+    def _with_clients(self, state, clients):
+        return state
+
+    def _store_template(self) -> PyTree:
+        """Single-client init row the store broadcasts into fresh slots
+        (empty for trainers with no per-client state)."""
+        return ()
+
+    def _reset_store(self) -> PyTree:
+        """(Re)initialize the client store for a fresh run; returns the
+        packed ``(capacity, …)`` state pytree. Call from init_state."""
+        return self.store.reset(self._store_template())
+
+    def _ensure_round(self, state, idx):
+        """Make one working set resident and translate global ids →
+        store slots. ``idx`` is the raw padded id array — padding id 0
+        rides along deliberately, so the dense plane's masked ±0.0
+        scatter-adds land on the same client's row in both planes."""
+        clients, stats = self.store.ensure(self._state_clients(state),
+                                           np.asarray(idx).reshape(-1))
+        self._emit_store_counters(stats)
+        return (self._with_clients(state, clients),
+                self.store.slots(np.asarray(idx)))
+
+    def _emit_store_counters(self, stats: dict) -> None:
+        """Stream one ensure call's hit/miss/evict/restore (+ prefetch,
+        when enabled) deltas into telemetry (host-side only — never
+        touches an RNG stream, so telemetry-on stays bit-identical to
+        off)."""
+        if self.telemetry is None:
+            return
+        for k, v in stats.items():
+            self.telemetry.counter(f"client_store_{k}", int(v))
 
     # -- scenario plumbing (mobility / links / churn, scenarios/) ---------
     def attach_scenario(self, spec, seed: int = 0) -> None:
@@ -290,6 +418,8 @@ class TrainerBase:
         self.telemetry = run
         if self.scenario is not None:
             self.scenario.telemetry = run
+        if self.store is not None:
+            self.store.telemetry = run
 
     def _phase(self, name: str, **meta):
         """A phase-timer span against the attached telemetry run, or a

@@ -32,6 +32,7 @@ arrays to :meth:`ensure`, never pre-filtered by mask.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable
 
@@ -46,6 +47,13 @@ PyTree = Any
 
 #: keys of the stats dict every ensure() call returns (all deltas)
 STORE_COUNTERS = ("hits", "misses", "evictions", "restores")
+
+#: extra stats keys when async prefetch is enabled (``prefetch=True``):
+#: of the misses one ensure() materialized, how many were served from
+#: the staging buffer (hits) vs drawn synchronously (misses). Emitted
+#: as ``client_store_prefetch_{hits,misses}`` telemetry counters — only
+#: when prefetch is on, so the default event stream is unchanged.
+PREFETCH_COUNTERS = ("prefetch_hits", "prefetch_misses")
 
 
 def _dedupe_keep_order(ids: np.ndarray) -> np.ndarray:
@@ -67,14 +75,28 @@ class ClientStore:
         working set may not exceed it (scan chunks ensure a whole
         chunk's visited set at once — size capacity ≥ the R·Z bound of
         the chunk, see docs/performance.md §7).
+    prefetch: enable the async staging pipeline — :meth:`prefetch`
+        materializes a predicted working set's dataset rows on a host
+        thread (pure numpy factory draws) while device compute runs;
+        the next :meth:`ensure` joins the thread and consumes the
+        staged rows. Values are identical either way (the factory is
+        pure), so prefetch-on ≡ prefetch-off bit-for-bit.
+    sharding: optional ``fl.sharding.FLSharding`` — the packed data
+        block (and the packed state pytree :meth:`reset` returns) get
+        their leading capacity axis placed over the mesh "data" axis;
+        scatter writes preserve the placement.
     """
 
-    def __init__(self, factory: ClientDataFactory, capacity: int):
+    def __init__(self, factory: ClientDataFactory, capacity: int, *,
+                 prefetch: bool = False, sharding=None):
         self.factory = factory
         self.capacity = int(capacity)
         self.n_clients = int(factory.n_clients)
         if self.capacity < 1:
             raise ValueError("capacity must be >= 1")
+        self.prefetch_enabled = bool(prefetch)
+        self.sharding = sharding
+        self.telemetry = None   # set via the owning trainer
         self._template: PyTree | None = None
         self.data: DeviceData | None = None
         # id → slot (-1 = not resident), slot → id (-1 = free)
@@ -83,7 +105,19 @@ class ClientStore:
         self._lru: OrderedDict[int, None] = OrderedDict()
         self._free: list[int] = list(range(self.capacity - 1, -1, -1))
         self._spill: dict[int, list[np.ndarray]] = {}
-        self.counters = {k: 0 for k in STORE_COUNTERS}
+        # id → staged dataset rows (one entry per DeviceData column),
+        # written only by the prefetch worker, read/consumed only after
+        # _join_prefetch() — the double-buffering fence.
+        self._staging: dict[int, list[np.ndarray]] = {}
+        self._inflight: threading.Thread | None = None
+        self.counters = {k: 0 for k in self._counter_keys()}
+
+    def _counter_keys(self) -> tuple:
+        """Counter names this store tracks: prefetch pipeline counters
+        exist only when the pipeline does, so prefetch-off stores keep
+        the original 4-counter contract exactly."""
+        return STORE_COUNTERS + (PREFETCH_COUNTERS
+                                 if self.prefetch_enabled else ())
 
     # ------------------------------------------------------------- init --
     def reset(self, template: PyTree) -> PyTree:
@@ -92,13 +126,19 @@ class ClientStore:
         z=0), clear mapping/LRU/spill/counters, allocate the packed data
         block, and return the packed ``(capacity, …)`` state pytree with
         every slot pre-filled from the template."""
-        self._template = template
+        self._join_prefetch()
+        # Private copy: the caller's template leaves typically alias the
+        # trainer state (warm init: x = server.y = params), and the
+        # sharded plane's chunk closures DONATE that state — a shared
+        # buffer would be deleted under the store's feet.
+        self._template = jax.tree_util.tree_map(jnp.array, template)
         self.slot_arr[:] = -1
         self.gid_of[:] = -1
         self._lru.clear()
         self._free = list(range(self.capacity - 1, -1, -1))
         self._spill.clear()
-        self.counters = {k: 0 for k in STORE_COUNTERS}
+        self._staging.clear()
+        self.counters = {k: 0 for k in self._counter_keys()}
         f = self.factory
         feat = tuple(f.feature_shape)
         self.data = DeviceData(
@@ -111,6 +151,9 @@ class ClientStore:
             y_test=jnp.zeros((self.capacity, f.max_test), jnp.int32),
             mask_test=jnp.zeros((self.capacity, f.max_test), jnp.float32),
         )
+        if self.sharding is not None:
+            self.data = self.sharding.shard_rows(self.data)
+            return self.sharding.shard_rows(self._packed_template())
         return self._packed_template()
 
     def _packed_template(self) -> PyTree:
@@ -164,6 +207,9 @@ class ClientStore:
         if self._template is None:
             raise RuntimeError("ClientStore.reset(template) must run "
                                "before ensure() — call init_state first")
+        # Double-buffering fence: any in-flight prefetch staging must
+        # land before this ensure reads/consumes the staging buffer.
+        self._join_prefetch()
         # No-op for device arrays; lifts numpy leaves (e.g. a state just
         # restored by checkpoint.load_pytree) so .at updates work.
         clients = jax.tree_util.tree_map(jnp.asarray, clients)
@@ -180,6 +226,10 @@ class ClientStore:
         missing = ids[self.slot_arr[ids] < 0]
         stats["hits"] = len(ids) - len(missing)
         stats["misses"] = len(missing)
+        if self.prefetch_enabled:
+            staged = sum(1 for i in missing if int(i) in self._staging)
+            stats["prefetch_hits"] = staged
+            stats["prefetch_misses"] = len(missing) - staged
         for i in ids:
             if self.slot_arr[i] >= 0:
                 self._lru.move_to_end(int(i))
@@ -210,9 +260,62 @@ class ClientStore:
         # hit-then-miss processing order.
         for i in ids:
             self._lru.move_to_end(int(i))
-        for k in STORE_COUNTERS:
-            self.counters[k] += stats[k]
+        for k, v in stats.items():
+            self.counters[k] += v
         return clients, stats
+
+    # ---------------------------------------------------------- prefetch --
+    def prefetch(self, ids) -> int:
+        """Stage a predicted working set's dataset rows on a background
+        host thread (async prefetch pipeline): the ids in ``ids`` that
+        are not resident and not already staged get their factory rows
+        drawn off the critical path, so the next :meth:`ensure` (which
+        joins the thread first) serves them as ``prefetch_hits`` instead
+        of drawing synchronously.
+
+        Returns the number of ids handed to the worker. No-op unless
+        the store was built with ``prefetch=True``. The worker touches
+        only the factory (pure numpy) and the staging dict — never the
+        mapping, the LRU order, the spill buffer, or device state — so
+        a concurrently executing device chunk is undisturbed and the
+        run's trajectory is bit-identical with prefetch off.
+        """
+        if not self.prefetch_enabled:
+            return 0
+        self._join_prefetch()          # at most one worker in flight
+        ids = _dedupe_keep_order(ids)
+        todo = np.array([int(i) for i in ids
+                         if self.slot_arr[i] < 0
+                         and int(i) not in self._staging],
+                        dtype=np.int64)
+        if len(todo) == 0:
+            return 0
+        telemetry = self.telemetry
+
+        def work():
+            def stage():
+                cols = [np.asarray(c) for c in self.factory.rows(todo)]
+                for k, i in enumerate(todo):
+                    self._staging[int(i)] = [c[k] for c in cols]
+
+            if telemetry is None:
+                stage()
+            else:
+                # The span's t0/seconds place the staging work on the
+                # run timeline — overlapping the scan_chunk span when
+                # the pipeline works (docs/performance.md §8).
+                with telemetry.phase("prefetch_stage", ids=len(todo)):
+                    stage()
+
+        self._inflight = threading.Thread(
+            target=work, name="client-store-prefetch", daemon=True)
+        self._inflight.start()
+        return len(todo)
+
+    def _join_prefetch(self) -> None:
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
 
     # ----------------------------------------------------------- internals --
     def _evict(self, clients: PyTree, victims: np.ndarray) -> PyTree:
@@ -253,11 +356,33 @@ class ClientStore:
         return clients
 
     def _write_data_rows(self, ids: np.ndarray, slots: np.ndarray) -> None:
-        rows = self.factory.rows(ids)
+        rows = self._materialize_rows(ids)
         js = jnp.asarray(slots)
         self.data = DeviceData(*[
             leaf.at[js].set(jnp.asarray(r))
             for leaf, r in zip(self.data, rows)])
+
+    def _materialize_rows(self, ids: np.ndarray):
+        """Dataset rows for ``ids`` in order — from the prefetch staging
+        buffer where staged (consumed), from the factory otherwise. The
+        factory is pure, so either path yields identical bytes."""
+        staged = np.array([int(i) in self._staging for i in ids],
+                          dtype=bool)
+        if not staged.any():
+            return self.factory.rows(ids)
+        fresh_ids = ids[~staged]
+        fresh = (self.factory.rows(fresh_ids) if len(fresh_ids)
+                 else None)
+        out = []
+        for j in range(len(DeviceData._fields)):
+            fi = iter(range(len(fresh_ids)))
+            out.append(np.stack([
+                self._staging[int(i)][j] if staged[k]
+                else np.asarray(fresh[j])[next(fi)]
+                for k, i in enumerate(ids)]))
+        for i in ids[staged]:
+            del self._staging[int(i)]
+        return tuple(out)
 
     # -------------------------------------------------------- checkpointing --
     def state_dict(self) -> dict[str, np.ndarray]:
@@ -299,9 +424,12 @@ class ClientStore:
                       if gid_of[s] < 0]
         self._lru = OrderedDict((int(i), None)
                                 for i in np.asarray(d["lru"]))
+        # Checkpoints save the core counters only (prefetch counters
+        # restart at zero — they describe a process-local pipeline).
         cnt = np.asarray(d["counters"])
-        self.counters = {k: int(cnt[j])
-                         for j, k in enumerate(STORE_COUNTERS)}
+        self.counters = {k: 0 for k in self._counter_keys()}
+        self.counters.update(
+            {k: int(cnt[j]) for j, k in enumerate(STORE_COUNTERS)})
         self._spill = {}
         spill_ids = np.asarray(d["spill_ids"], dtype=np.int64)
         for j, i in enumerate(spill_ids):

@@ -137,6 +137,10 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         tokens = jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (self.n_walkers,) + l.shape),
             base.server.y)
+        if self.fl_sharding is not None:
+            # The (K, …) token stack has a walker (not client) leading
+            # axis — it replicates like the single-server token.
+            tokens = self.fl_sharding.replicate(tokens)
         return FleetState(base=base, tokens=tokens)
 
     # ------------------------------------------------------------------
@@ -390,7 +394,8 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             # Chunk visited set (both fleet modes' idx layouts flatten
             # the same way) resident before the scan; ids pre-translated
             # to slots, global ids ride along for the visited update.
-            state, slot_idx = self._ensure_round(state, sched.idx)
+            with self._phase("ensure", rounds=int(sched.rounds)):
+                state, slot_idx = self._ensure_round(state, sched.idx)
         fn = self._fleet_chunk_fns.get((mode, engine))
         if fn is None:
             step = functools.partial(
@@ -459,7 +464,12 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
                     if use_iw:
                         cols = cols + (iws,)
                     return jax.lax.scan(body, state, cols)
-            fn = jax.jit(chunk)
+            if self.fl_sharding is not None:
+                # Sharded plane: donate the chunk carry (see the base
+                # trainer's run_chunk) — opt-in, default path unchanged.
+                fn = jax.jit(chunk, donate_argnums=(0,))
+            else:
+                fn = jax.jit(chunk)
             self._fleet_chunk_fns[(mode, engine)] = fn
 
         args = []

@@ -82,21 +82,23 @@ class RWSADMMTrainer(TrainerBase):
                                           # skew sharpening γ
         store_capacity: int = 4096,       # lazy plane: resident slots in
                                           # the bounded LRU client store
+        prefetch: bool = False,           # lazy plane: stage the next
+                                          # chunk's dataset rows on a
+                                          # host thread (bit-identical)
+        mesh=None,                        # Mesh/FLSharding: shard the
+                                          # client plane's leading axis
+                                          # over the mesh "data" axis
         telemetry=None,                   # TelemetryRun or None (off)
         seed: int = 0,
     ):
-        super().__init__(model, data, batch_size, telemetry=telemetry)
-        # Lazy client plane: ``data`` was a ClientDataFactory, so client
-        # x/z pytrees and datasets materialize on first visit into a
-        # bounded (store_capacity, …) packed store instead of (n, …)
-        # stacks — the large-n training-plane lane (docs/performance.md
-        # §7). Bit-identical to the dense plane (tests/test_lazy_plane).
-        self.store = None
-        if self.client_plane == "lazy":
-            from .client_store import ClientStore
-
-            self.store = ClientStore(self.data_factory,
-                                     int(store_capacity))
+        # Lazy client plane: when ``data`` is a ClientDataFactory, the
+        # base builds the bounded (store_capacity, …) LRU ClientStore —
+        # client x/z pytrees and datasets materialize on first visit
+        # instead of as (n, …) stacks (docs/performance.md §7), pinned
+        # bit-identical to the dense plane (tests/test_lazy_plane).
+        super().__init__(model, data, batch_size, telemetry=telemetry,
+                         store_capacity=store_capacity,
+                         prefetch=prefetch, mesh=mesh)
         self.hp = hp
         self.solver = solver
         self.dp_clip = dp_clip
@@ -194,10 +196,16 @@ class RWSADMMTrainer(TrainerBase):
             clients, server = rwsadmm.init_states(
                 params, self.hp, self.n_clients
             )
-        return RWSADMMState(
-            clients=clients, server=server,
-            visited=jnp.zeros((self.n_clients,), bool),
-        )
+        visited = jnp.zeros((self.n_clients,), bool)
+        if self.fl_sharding is not None:
+            # Data-parallel client plane: the (n, …) stacks split over
+            # the mesh "data" axis, the walking token replicates. The
+            # jitted round/chunk bodies propagate these placements.
+            clients = self.fl_sharding.shard_rows(clients)
+            server = self.fl_sharding.replicate(server)
+            visited = self.fl_sharding.shard_rows(visited)
+        return RWSADMMState(clients=clients, server=server,
+                            visited=visited)
 
     def _init_state_lazy(self, params) -> RWSADMMState:
         """Packed-store twin of the dense init: every client's dense
@@ -212,16 +220,20 @@ class RWSADMMTrainer(TrainerBase):
         zeros = t.zeros_like(params)
         template = (ClientState(x=params, z=zeros) if self.warm_init
                     else ClientState(x=zeros, z=zeros))
+        # The store shards the packed rows itself when built with a
+        # sharding (capacity axis over "data").
         clients = self.store.reset(template)
         server = ServerState(
             y=params if self.warm_init else zeros,
             kappa=jnp.asarray(self.hp.kappa, jnp.float32),
             round=jnp.asarray(0, jnp.int32),
         )
-        return RWSADMMState(
-            clients=clients, server=server,
-            visited=jnp.zeros((self.n_clients,), bool),
-        )
+        visited = jnp.zeros((self.n_clients,), bool)
+        if self.fl_sharding is not None:
+            server = self.fl_sharding.replicate(server)
+            visited = self.fl_sharding.shard_rows(visited)
+        return RWSADMMState(clients=clients, server=server,
+                            visited=visited)
 
     # ------------------------------------------------------------------
     def _round_impl(self, state: RWSADMMState, zone_idx, zone_mask, n_i,
@@ -410,25 +422,15 @@ class RWSADMMTrainer(TrainerBase):
     def _with_clients(self, state, clients):
         return state._replace(clients=clients)
 
-    def _ensure_round(self, state, idx):
-        """Make one round's working set resident and translate global
-        ids → store slots. ``idx`` is the raw padded zone row — padding
-        id 0 rides along deliberately, so the dense plane's masked ±0.0
-        scatter-adds land on the same client's row in both planes."""
-        clients, stats = self.store.ensure(self._state_clients(state),
-                                           np.asarray(idx).reshape(-1))
-        self._emit_store_counters(stats)
-        return (self._with_clients(state, clients),
-                self.store.slots(np.asarray(idx)))
-
-    def _emit_store_counters(self, stats: dict) -> None:
-        """Stream one ensure call's hit/miss/evict/restore deltas into
-        telemetry (host-side only — never touches an RNG stream, so
-        telemetry-on stays bit-identical to off)."""
-        if self.telemetry is None:
-            return
-        for k, v in stats.items():
-            self.telemetry.counter(f"client_store_{k}", int(v))
+    def prefetch_chunk(self, sched) -> int:
+        """Hand the NEXT chunk's working set to the store's async
+        staging pipeline (no-op unless ``prefetch=True``): dataset rows
+        for its predicted misses materialize on a host thread while the
+        current chunk executes (``run_simulation`` drives this —
+        docs/performance.md §8)."""
+        if self.store is None or not self.store.prefetch_enabled:
+            return 0
+        return self.store.prefetch(np.asarray(sched.idx).reshape(-1))
 
     # ------------------------------------------------------------------
     # Compiled multi-round (lax.scan) driver.
@@ -515,7 +517,8 @@ class RWSADMMTrainer(TrainerBase):
             # pytree + packed data; ids enter the scan pre-translated
             # to slots, with the global ids riding along for the
             # visited-set update.
-            state, slot_idx = self._ensure_round(state, sched.idx)
+            with self._phase("ensure", rounds=int(sched.rounds)):
+                state, slot_idx = self._ensure_round(state, sched.idx)
 
         fn = self._chunk_fns.get(engine)
         if fn is None:
@@ -562,7 +565,15 @@ class RWSADMMTrainer(TrainerBase):
                     return jax.lax.scan(
                         body, state, (idx, mask, n_i, keys))
 
-            fn = jax.jit(chunk)
+            if self.fl_sharding is not None:
+                # Sharded plane: donate the chunk carry so XLA reuses
+                # the per-device client-row buffers in place instead of
+                # doubling resident state for every chunk. Opt-in only —
+                # the default path keeps the input state alive (tests
+                # reuse states across engines).
+                fn = jax.jit(chunk, donate_argnums=(0,))
+            else:
+                fn = jax.jit(chunk)
             self._chunk_fns[engine] = fn
 
         args = []
@@ -580,15 +591,11 @@ class RWSADMMTrainer(TrainerBase):
         return final, {"train_loss": losses, "kappa": kappas}
 
     # ------------------------------------------------------------------
-    def _evaluate_lazy(self, state) -> dict:
-        """Evaluation restricted to the MATERIALIZED clients — the lazy
-        plane's answer to the dense path's all-n iteration. Runs the
-        row-based eval over all capacity slots (fixed shapes, one
-        executable) and averages over the occupied ones; per-slot
-        personalization mirrors :meth:`personalized_params` (visited →
-        x_i, else the token y). Reports how many clients the estimate
-        covers (``eval_clients``) — at large n this is a resident-set
-        sample of the population metric, by design."""
+    def _lazy_personalized_rows(self, state):
+        """Per-slot personalization for the resident-set eval, mirroring
+        :meth:`personalized_params`: slots whose client the walk has
+        visited evaluate their x row, the rest the token y (what the
+        mobile server would hand them)."""
         store = self.store
         occ = store.gid_of >= 0                          # (capacity,)
         occ_ids = np.where(occ, np.maximum(store.gid_of, 0), 0)
@@ -601,30 +608,7 @@ class RWSADMMTrainer(TrainerBase):
             v = visited_slot.reshape((-1,) + (1,) * y_.ndim)
             return jnp.where(v, x, y_[None])
 
-        pers = jax.tree_util.tree_map(pers_leaf, clients.x, y)
-        d = store.data
-        n_occ = max(int(occ.sum()), 1)
-
-        def masked_stats(acc, loss):
-            acc = np.asarray(acc)[occ]
-            loss = np.asarray(loss)[occ]
-            return acc, loss
-
-        out: dict[str, float] = {}
-        acc, loss = self.eval_rows_stacked(pers, d.x_test, d.y_test,
-                                           d.mask_test)
-        acc, loss = masked_stats(acc, loss)
-        out["acc_personalized"] = float(acc.mean()) if len(acc) else 0.0
-        out["acc_personalized_std"] = float(acc.std()) if len(acc) else 0.0
-        out["loss_personalized"] = float(loss.mean()) if len(loss) else 0.0
-        acc, loss = self.eval_rows_shared(y, d.x_test, d.y_test,
-                                          d.mask_test)
-        acc, loss = masked_stats(acc, loss)
-        out["acc_global"] = float(acc.mean()) if len(acc) else 0.0
-        out["loss_global"] = float(loss.mean()) if len(loss) else 0.0
-        out["acc"] = out["acc_personalized"]
-        out["eval_clients"] = int(n_occ if occ.any() else 0)
-        return out
+        return jax.tree_util.tree_map(pers_leaf, clients.x, y)
 
     def _eval_token(self, state):
         """The token unvisited clients evaluate against (the fleet

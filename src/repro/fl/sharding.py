@@ -1,0 +1,75 @@
+"""Client-plane sharding: NamedShardings over a 1-D "data" mesh.
+
+The FL trainers' big arrays all share one layout: a leading client axis
+— dense stacked client-state pytrees and ``DeviceData`` columns are
+``(n, …)``, the lazy plane's packed store rows are ``(capacity, …)``.
+:class:`FLSharding` gives every such leaf a ``NamedSharding`` that
+splits that leading axis across the mesh "data" axis, reusing the
+divisibility-fallback ``_spec`` rule from ``launch/sharding.py``: a
+leading dim that does not divide the device count falls back to
+replication on that leaf (so ragged shapes never break lowering — but
+pick ``capacity % n_devices == 0`` to actually shard the store; see
+docs/performance.md §8).
+
+Everything with no client axis (server/token pytrees, schedule scalars)
+stays replicated. Inside jit we rely on sharding propagation: the
+Eq. 31 zone update, rendezvous means, and row-based eval are all
+elementwise/reduction programs over the leading axis, so placing the
+inputs is enough — XLA partitions the loops and inserts collectives
+only at the scalar reductions.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..launch.mesh import make_data_mesh
+from ..launch.sharding import _spec
+
+
+class FLSharding:
+    """Thin bridge: mesh + per-leaf row/replicated placements."""
+
+    def __init__(self, mesh=None, *, n_devices: int | None = None):
+        self.mesh = mesh if mesh is not None \
+            else make_data_mesh(n_devices)
+        if "data" not in self.mesh.axis_names:
+            raise ValueError(
+                f"FL mesh needs a 'data' axis, got {self.mesh.axis_names}")
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape["data"])
+
+    # ---- per-leaf shardings -----------------------------------------
+    def row_sharding(self, leaf) -> NamedSharding:
+        """Leading axis over "data" (divisibility fallback → replicate)."""
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return self.replicated_sharding()
+        wanted = [("data",)] + [None] * (len(shape) - 1)
+        return NamedSharding(self.mesh, _spec(self.mesh, shape, wanted))
+
+    def replicated_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # ---- pytree placement -------------------------------------------
+    def shard_rows(self, tree):
+        """device_put every leaf with its leading axis over "data".
+
+        device_put with an identical sharding is a no-op, so re-placing
+        an already-sharded tree (e.g. after store ensure() writes) is
+        cheap."""
+        return jax.tree_util.tree_map(
+            lambda leaf: jax.device_put(leaf, self.row_sharding(leaf)),
+            tree)
+
+    def replicate(self, tree):
+        sh = self.replicated_sharding()
+        return jax.tree_util.tree_map(
+            lambda leaf: jax.device_put(leaf, sh), tree)
+
+    def row_shardings(self, tree):
+        """Sharding pytree matching ``tree`` (for jit in/out_shardings)."""
+        return jax.tree_util.tree_map(self.row_sharding, tree)

@@ -195,6 +195,18 @@ def _run_simulation_scan(
     history: list[dict] = []
     round_metrics: list[dict] = []
     total_comm = 0
+    # Async prefetch (lazy plane, opt-in): while one window's compiled
+    # scan executes on device, the host precomputes the NEXT window's
+    # schedule and hands its ids to the store's staging thread, so the
+    # following ensure() starts from pre-materialized rows. Schedule
+    # draws stay in exactly the same rng order (windows are scheduled
+    # strictly left to right; metrics/eval consume no rng), so
+    # prefetch-on trajectories are bit-identical to prefetch-off
+    # (pinned in tests/test_lazy_plane.py).
+    prefetching = (getattr(trainer, "store", None) is not None
+                   and trainer.store.prefetch_enabled
+                   and hasattr(trainer, "prefetch_chunk"))
+    sched = None
     t0 = time.perf_counter()
     r = 0
     with maybe_trace(telemetry):
@@ -202,15 +214,28 @@ def _run_simulation_scan(
             # Align chunks to eval boundaries so snapshots land on the
             # same rounds as the eager driver.
             r_next = min(((r // eval_every) + 1) * eval_every, rounds)
-            with trainer._phase("schedule", round=r,
-                                chunk_rounds=r_next - r):
-                sched = trainer.schedule(r_next - r, rng, start_round=r)
+            if sched is None:   # not handed over by a prefetch iteration
+                with trainer._phase("schedule", round=r,
+                                    chunk_rounds=r_next - r):
+                    sched = trainer.schedule(r_next - r, rng,
+                                             start_round=r)
+            sched_next = None
             with trainer._phase("scan_chunk", round=r, engine=engine,
                                 chunk_rounds=r_next - r,
                                 includes_compile=trainer.chunk_is_cold(
                                     engine, r_next - r)) as sp:
                 state, stacked = trainer.run_chunk(state, sched,
                                                    engine=engine)
+                if prefetching and r_next < rounds:
+                    # The chunk is dispatched (async) — overlap the next
+                    # window's host work behind it, then fence.
+                    r_nn = min(((r_next // eval_every) + 1) * eval_every,
+                               rounds)
+                    with trainer._phase("schedule", round=r_next,
+                                        chunk_rounds=r_nn - r_next):
+                        sched_next = trainer.schedule(
+                            r_nn - r_next, rng, start_round=r_next)
+                    trainer.prefetch_chunk(sched_next)
                 if telemetry is not None:
                     sp.fence((state, stacked))
             # The trainer rebuilds the per-round metric entries (one
@@ -231,6 +256,7 @@ def _run_simulation_scan(
                 for v in visit_events_from_schedule(sched, r, entries):
                     telemetry.visit(**v)
             r = r_next
+            sched = sched_next
             if r % eval_every == 0 or r == rounds:
                 _snapshot(trainer, state, r, total_comm, history, verbose,
                           f"{trainer.name}/{engine}", telemetry)

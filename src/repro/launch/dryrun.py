@@ -1,11 +1,7 @@
-import os
+from .hostdevices import ensure_host_platform_devices
 
-if "xla_force_host_platform_device_count" not in os.environ.get(
-        "XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count=512 "
-        + os.environ.get("XLA_FLAGS", "")
-    )
+# Must precede backend init (first computation), hence top-of-module.
+ensure_host_platform_devices(512)
 
 """Multi-pod dry-run (deliverable e).
 
@@ -23,6 +19,7 @@ Usage:
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
+import os  # noqa: E402
 import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402

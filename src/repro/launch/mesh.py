@@ -17,6 +17,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_data_mesh(n_devices: int | None = None):
+    """1-D "data" mesh over all (or the first ``n_devices``) local
+    devices — the FL client plane's shard unit is the leading
+    client/capacity axis, so a single data axis is the whole story."""
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"requested {n_devices} devices, have {len(devs)} "
+                "(set --xla_force_host_platform_device_count before "
+                "backend init for CPU hosts)")
+        devs = devs[:n_devices]
+    return jax.make_mesh((len(devs),), ("data",), devices=devs)
+
+
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for CI-grade dry-run tests (8 host devices)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))

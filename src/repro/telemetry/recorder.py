@@ -28,6 +28,7 @@ import logging
 import os
 import subprocess
 import sys
+import threading
 import time
 from typing import Any
 
@@ -126,8 +127,15 @@ class PhaseSpan:
     def __exit__(self, exc_type, exc, tb) -> None:
         self.seconds = time.perf_counter() - self._t0
         if exc_type is None:
+            # ``t0`` (seconds since the run opened) lets the report CLI
+            # reconstruct the span timeline — e.g. show the prefetch
+            # staging span overlapping the scan_chunk span it hides
+            # behind. Wall-clock, so (like ``seconds``) excluded from
+            # the byte-identical-events determinism contract.
             self._run.emit("phase", name=self.name,
-                           seconds=self.seconds, **self.meta)
+                           seconds=self.seconds,
+                           t0=round(self._t0 - self._run._t_open, 6),
+                           **self.meta)
 
 
 class _NullSpan(PhaseSpan):
@@ -176,6 +184,10 @@ class TelemetryRun:
         self.manifest_path = os.path.join(run_dir, "manifest.json")
         os.makedirs(run_dir, exist_ok=True)
         self._fh = open(self.events_path, "a", buffering=1)
+        # Serializes appends: the lazy plane's prefetch worker emits its
+        # staging phase span from a background thread while the main
+        # thread streams round events.
+        self._emit_lock = threading.Lock()
         self._counts: dict[str, int] = {}
         self._t_open = time.perf_counter()
         jx, pkgs = _environment()
@@ -217,8 +229,9 @@ class TelemetryRun:
             raise ev.TelemetryError(
                 f"telemetry run {self.run_id!r} is closed")
         line = ev.encode_event({"t": etype, **fields})
-        self._fh.write(line + "\n")
-        self._counts[etype] = self._counts.get(etype, 0) + 1
+        with self._emit_lock:
+            self._fh.write(line + "\n")
+            self._counts[etype] = self._counts.get(etype, 0) + 1
 
     def round(self, metrics: dict) -> None:
         """One training round's ``round_metrics`` entry."""

@@ -14,7 +14,12 @@ seed-sweep twin (pattern of ``test_scenario_properties.py``):
   the working set goes first);
 * capacity ≥ the visited set degenerates to the dense plane: zero
   evictions, zero restores;
-* a single working set larger than capacity refuses loudly.
+* a single working set larger than capacity refuses loudly;
+* async prefetch is invisible to the LRU: a prefetch-on store driven
+  through a stage-next/ensure-current pipeline tracks a prefetch-off
+  twin bit-for-bit (residency, spills, base counters, row data), and
+  its ``prefetch_{hits,misses}`` counters replay a python staging-set
+  oracle exactly.
 """
 import os
 from collections import OrderedDict
@@ -27,7 +32,11 @@ import pytest
 from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
 from repro.checkpoint import load_client_store, save_client_store
 from repro.data import synthetic_lr_factory
-from repro.fl.client_store import STORE_COUNTERS, ClientStore
+from repro.fl.client_store import (
+    PREFETCH_COUNTERS,
+    STORE_COUNTERS,
+    ClientStore,
+)
 
 if HAVE_HYPOTHESIS:
     hypothesis.settings.register_profile(
@@ -40,11 +49,11 @@ if HAVE_HYPOTHESIS:
 N_CLIENTS = 12
 
 
-def _make_store(capacity, n=N_CLIENTS, seed=0):
+def _make_store(capacity, n=N_CLIENTS, seed=0, prefetch=False):
     factory = synthetic_lr_factory(
         n_clients=n, n_features=5, n_classes=3, min_samples=4,
         mean_samples=1.0, seed=seed)
-    store = ClientStore(factory, capacity)
+    store = ClientStore(factory, capacity, prefetch=prefetch)
     template = {"x": jnp.full((3,), 0.5, jnp.float32),
                 "z": jnp.zeros((2,), jnp.float32)}
     clients = store.reset(template)
@@ -263,7 +272,95 @@ def test_state_dict_roundtrip_with_spill(tmp_path):
         load_client_store(path, wrong)
 
 
+# ------------------------------------------------------------------
+# async prefetch: LRU-invisible staging, oracle-exact counters
+# ------------------------------------------------------------------
+def check_prefetch_oracle(zones, capacity, n=N_CLIENTS):
+    """Drive a prefetch-on store through the scan pipeline's shape —
+    ensure the current zone, then stage the next zone behind it — and
+    replay every step against (a) a prefetch-off twin fed the same
+    visits and (b) an independent python staging-set oracle."""
+    sp, cp, template = _make_store(capacity, n=n, prefetch=True)
+    s0, c0, _ = _make_store(capacity, n=n)
+    staged: set[int] = set()
+    mirror_p: dict[int, np.float32] = {}
+    mirror_0: dict[int, np.float32] = {}
+    zones = [[int(i) % n for i in z] for z in zones]
+    zones = [z for z in zones
+             if len(dict.fromkeys(z)) <= capacity]  # refusals: LRU oracle
+    for t, zone in enumerate(zones):
+        uniq = list(dict.fromkeys(zone))
+        miss = [i for i in uniq if sp.slot_arr[i] < 0]
+        exp_hits = sum(1 for i in miss if i in staged)
+        cp, stp = sp.ensure(cp, np.asarray(zone))
+        c0, st0 = s0.ensure(c0, np.asarray(zone))
+        # base stats equal the prefetch-off twin; prefetch stats match
+        # the staging-set oracle (consumed rows were staged earlier)
+        assert stp == {**st0, "prefetch_hits": exp_hits,
+                       "prefetch_misses": len(miss) - exp_hits}
+        staged -= set(miss)            # ensure() pops what it consumed
+        assert set(sp._staging) == staged
+        # the LRU never sees the staging buffer: identical bookkeeping
+        assert list(sp.resident_ids) == list(s0.resident_ids)
+        assert set(sp.spilled_ids.tolist()) \
+            == set(s0.spilled_ids.tolist())
+        cp = _write_rows(sp, cp, mirror_p, uniq, tag=t)
+        c0 = _write_rows(s0, c0, mirror_0, uniq, tag=t)
+        if t + 1 < len(zones):
+            nxt = list(dict.fromkeys(zones[t + 1]))
+            todo = [i for i in nxt
+                    if sp.slot_arr[i] < 0 and i not in staged]
+            assert sp.prefetch(np.asarray(zones[t + 1])) == len(todo)
+            staged |= set(todo)
+            sp._join_prefetch()
+            assert set(sp._staging) == staged
+    # staged draws come from the same pure factory as sync draws: the
+    # packed dataset block and every client row are bit-identical
+    for a, b in zip(jax.tree_util.tree_leaves(sp.data),
+                    jax.tree_util.tree_leaves(s0.data)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(cp),
+                    jax.tree_util.tree_leaves(c0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for i in range(n):
+        _check_row(sp, cp, template, mirror_p, i)
+    base = {k: sp.counters[k] for k in STORE_COUNTERS}
+    assert base == {k: s0.counters[k] for k in STORE_COUNTERS}
+
+
+@hypothesis.given(zones=ZONES, capacity=st.integers(2, N_CLIENTS))
+def test_prefetch_oracle_property(zones, capacity):
+    check_prefetch_oracle(zones, capacity)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_prefetch_oracle_sampled(seed):
+    rng = np.random.default_rng(seed)
+    zones = [rng.integers(0, N_CLIENTS, size=rng.integers(1, 6)).tolist()
+             for _ in range(rng.integers(3, 12))]
+    check_prefetch_oracle(zones,
+                          capacity=int(rng.integers(2, N_CLIENTS + 1)))
+
+
+def test_prefetch_requires_flag_and_is_idempotent():
+    """prefetch() on a store built without the flag is a hard no-op;
+    with the flag, re-staging the same ids hands the worker nothing."""
+    s0, c0, _ = _make_store(capacity=4)
+    assert s0.prefetch(np.asarray([0, 1])) == 0
+    assert "prefetch_hits" not in s0.counters
+    sp, cp, _ = _make_store(capacity=4, prefetch=True)
+    assert sp.prefetch(np.asarray([0, 1, 1])) == 2
+    assert sp.prefetch(np.asarray([0, 1])) == 0   # already staged
+    cp, stats = sp.ensure(cp, np.asarray([0, 1]))
+    assert stats["prefetch_hits"] == 2 and sp._staging == {}
+    assert sp.prefetch(np.asarray([0, 1])) == 0   # now resident
+
+
 def test_counter_keys_stable():
-    """The telemetry event names derive from STORE_COUNTERS — pin the
-    schema so dashboards don't silently lose a series."""
+    """The telemetry event names derive from STORE_COUNTERS (plus the
+    PREFETCH_COUNTERS pair when staging is on) — pin the schema so
+    dashboards don't silently lose a series."""
     assert STORE_COUNTERS == ("hits", "misses", "evictions", "restores")
+    assert PREFETCH_COUNTERS == ("prefetch_hits", "prefetch_misses")
+    store, _, _ = _make_store(capacity=3, prefetch=True)
+    assert set(store.counters) == set(STORE_COUNTERS + PREFETCH_COUNTERS)

@@ -54,13 +54,15 @@ def _scenario(backend):
                                graph_backend=backend, neighbor_k_max=8)
 
 
-def _make(fed, *, lazy, fleet=0, backend="dense", capacity=8):
+def _make(fed, *, lazy, fleet=0, backend="dense", capacity=8,
+          prefetch=False):
     dense, factory, model = fed
     data = factory if lazy else dense
     kw = dict(zone_size=4, batch_size=16, solver="closed_form",
               scenario=_scenario(backend), seed=0)
     if lazy:
         kw["store_capacity"] = capacity
+        kw["prefetch"] = prefetch
     if fleet:
         return FleetRWSADMMTrainer(model, data, RWSADMMHparams(beta=10.0),
                                    n_walkers=fleet, sync_every=3, **kw)
@@ -208,6 +210,62 @@ def test_lazy_checkpoint_roundtrip_with_spill(fed, tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(_materialize_all(tri, si)),
                     jax.tree_util.tree_leaves(_materialize_all(tru, su))):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("fleet", [0, 3])
+def test_prefetch_on_matches_off_bit_identical(fed, fleet):
+    """Async prefetch (the scan loop stages the next chunk's dataset
+    rows on a host thread while the current chunk executes) must be a
+    pure latency optimization: the factory is deterministic and
+    ensure() fences on the worker, so metrics, eval history, and the
+    base store counters are bit-identical with prefetch on — only the
+    ``prefetch_{hits,misses}`` pair appears, and the pipeline actually
+    staged something."""
+    t0 = _make(fed, lazy=True, fleet=fleet, capacity=N)
+    r0 = _run(t0, engine="scan", rounds=12)
+    t1 = _make(fed, lazy=True, fleet=fleet, capacity=N, prefetch=True)
+    r1 = _run(t1, engine="scan", rounds=12)
+    for m0, m1 in zip(r0.round_metrics, r1.round_metrics):
+        assert m0 == m1
+    for h0, h1 in zip(r0.history, r1.history):
+        assert h0 == h1
+    from repro.fl.client_store import PREFETCH_COUNTERS, STORE_COUNTERS
+    assert {k: t1.store.counters[k] for k in STORE_COUNTERS} \
+        == t0.store.counters
+    assert set(t1.store.counters) \
+        == set(STORE_COUNTERS + PREFETCH_COUNTERS)
+    assert (t1.store.counters["prefetch_hits"]
+            + t1.store.counters["prefetch_misses"]) > 0
+
+
+def test_fedavg_lazy_matches_dense(fed):
+    """The FedAvg family rides the shared store via the lifted
+    ``_evaluate_lazy``: with capacity == n the lazy round runs the
+    dense gather arithmetic on packed rows — the global model
+    trajectory is bit-identical, and eval at full residency matches to
+    the usual slot-vs-id summation-order tolerance."""
+    from repro.baselines import FedAvgTrainer
+
+    dense, factory, model = fed
+    kw = dict(lr=0.05, local_steps=3, clients_per_round=N,
+              batch_size=16)
+    td = FedAvgTrainer(model, dense, **kw)
+    tl = FedAvgTrainer(model, factory, store_capacity=N, **kw)
+    rngd, rngl = np.random.default_rng(0), np.random.default_rng(0)
+    sd = td.init_state(jax.random.PRNGKey(0))
+    sl = tl.init_state(jax.random.PRNGKey(0))
+    for r in range(4):
+        sd, md = td.round(sd, r, rngd)
+        sl, ml = tl.round(sl, r, rngl)
+        assert md == ml
+    for a, b in zip(jax.tree_util.tree_leaves(sd.w),
+                    jax.tree_util.tree_leaves(sl.w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ed, el = td.evaluate(sd), tl.evaluate(sl)
+    assert el["eval_clients"] == N
+    for key in ("acc_global", "loss_global"):
+        np.testing.assert_allclose(el[key], ed[key],
+                                   rtol=1e-5, atol=1e-6)
 
 
 # ------------------------------------------------------------------

@@ -1,0 +1,284 @@
+"""Device-sharded client plane ≡ single-device, pinned.
+
+The FL trainers accept ``mesh=FLSharding(...)`` and place every
+leading-client-axis array (dense stacked client pytrees, the lazy
+store's packed ``(capacity, …)`` rows) over the mesh "data" axis, with
+the chunk carry donated on the sharded path (``fl/sharding.py``,
+docs/performance.md §8). These tests pin that sharding is a pure
+placement decision:
+
+* training trajectories (per-round metrics) are **bit-identical** to
+  the unsharded run across eager/scan × dense/lazy × the K=3 fleet;
+* eval history is bit-identical on the lazy path and equal to float
+  tolerance on the dense path (the only divergence: the dense eval's
+  ``jnp.mean`` over the sharded client axis reduces in per-device
+  partial sums, reordering the float32 summation);
+* async prefetch under sharding stays bit-identical to prefetch-off.
+
+The real matrix needs ≥ 8 devices, which the tier-1 CPU run does not
+have — so the sweep runs in a subprocess under
+``--xla_force_host_platform_device_count=8`` (the multi-device CPU
+harness the benchmarks use), following the ``test_dryrun_launch.py``
+pattern. A single-device-mesh pin runs in-process so the sharded code
+path (placements + donated chunk carry) is exercised by plain tier-1.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import dataclasses, json
+import numpy as np
+import jax
+
+from repro.core.rwsadmm import RWSADMMHparams
+from repro.data import (factory_from_federated, make_image_dataset,
+                        pathological_split)
+from repro.data.loader import build_federated
+from repro.fl.base import to_device_data
+from repro.fl.fleet_trainer import FleetRWSADMMTrainer
+from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+from repro.fl.sharding import FLSharding
+from repro.fl.simulation import run_simulation
+from repro.models.small import get_model
+from repro.scenarios import get_scenario_config
+
+N = 8
+assert jax.device_count() >= 8, jax.devices()
+imgs, labels = make_image_dataset(400, seed=0)
+parts = pathological_split(labels, N, seed=0)
+f = build_federated(imgs, labels, parts)
+dense, factory = to_device_data(f), factory_from_federated(f)
+model = get_model("mlr", (28, 28, 1))
+scen = dataclasses.replace(get_scenario_config("lossy_links"),
+                           graph_backend="dense", neighbor_k_max=8)
+
+
+def make(*, lazy, fleet=0, mesh=None, prefetch=False):
+    kw = dict(zone_size=4, batch_size=16, solver="closed_form",
+              scenario=scen, seed=0, mesh=mesh)
+    data = factory if lazy else dense
+    if lazy:
+        kw["store_capacity"] = N
+        kw["prefetch"] = prefetch
+    if fleet:
+        return FleetRWSADMMTrainer(model, data, RWSADMMHparams(beta=10.0),
+                                   n_walkers=fleet, sync_every=3, **kw)
+    return RWSADMMTrainer(model, data, RWSADMMHparams(beta=10.0), **kw)
+
+
+def run(tr, engine):
+    return run_simulation(tr, rounds=8, eval_every=4, seed=0,
+                          engine=engine)
+
+
+def devices_of(arr):
+    return {s.device.id for s in arr.addressable_shards}
+
+
+out = {"device_count": jax.device_count(), "configs": []}
+
+# --- placement: (8, ...) rows really span all 8 devices -------------
+sh = FLSharding()
+tl = make(lazy=True, mesh=sh)
+tl.init_state(jax.random.PRNGKey(0))
+out["store_rows_devices"] = len(devices_of(tl.store.data.x_train))
+td = make(lazy=False, mesh=sh)
+sd = td.init_state(jax.random.PRNGKey(0))
+leaf = jax.tree_util.tree_leaves(sd.clients.x)[0]
+out["dense_rows_devices"] = len(devices_of(leaf))
+out["server_replicated"] = bool(
+    jax.tree_util.tree_leaves(sd.server.y)[0].sharding
+    .is_fully_replicated)
+# divisibility fallback: a leading dim that does not divide the device
+# count replicates instead of breaking lowering
+out["ragged_replicated"] = bool(
+    sh.row_sharding(np.zeros((6, 3), np.float32)).is_fully_replicated)
+
+# --- sharded == single across the engine/plane/fleet matrix ---------
+EVAL_KEYS = ("acc_global", "loss_global", "acc_personalized",
+             "loss_personalized")
+for engine, lazy, fleet in [("eager", False, 0), ("scan", False, 0),
+                            ("eager", True, 0), ("scan", True, 0),
+                            ("scan", True, 3)]:
+    r0 = run(make(lazy=lazy, fleet=fleet), engine)
+    r1 = run(make(lazy=lazy, fleet=fleet, mesh=FLSharding()), engine)
+    hdiff = max(abs(h0[k] - h1[k])
+                for h0, h1 in zip(r0.history, r1.history)
+                for k in EVAL_KEYS if k in h0)
+    out["configs"].append({
+        "engine": engine, "lazy": lazy, "fleet": fleet,
+        "rounds": len(r0.round_metrics),
+        "metrics_exact": all(
+            m0 == m1 for m0, m1 in
+            zip(r0.round_metrics, r1.round_metrics)),
+        "max_hist_diff": float(hdiff),
+    })
+
+# --- prefetch on == off under sharding ------------------------------
+r0 = run(make(lazy=True, mesh=FLSharding()), "scan")
+tp = make(lazy=True, mesh=FLSharding(), prefetch=True)
+r1 = run(tp, "scan")
+out["prefetch_exact"] = (
+    all(m0 == m1 for m0, m1 in zip(r0.round_metrics, r1.round_metrics))
+    and all(h0 == h1 for h0, h1 in zip(r0.history, r1.history)))
+out["prefetch_counters"] = {
+    k: v for k, v in tp.store.counters.items() if "prefetch" in k}
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=540,
+                          env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_sharded_rows_span_all_devices(sweep):
+    """Placement, not folklore: packed store rows and dense stacked
+    client rows land on all 8 devices; server/token pytrees replicate;
+    a ragged leading dim falls back to replication (the documented
+    ``capacity % n_devices`` rule)."""
+    assert sweep["device_count"] == 8
+    assert sweep["store_rows_devices"] == 8
+    assert sweep["dense_rows_devices"] == 8
+    assert sweep["server_replicated"]
+    assert sweep["ragged_replicated"]
+
+
+def test_sharded_trajectories_match_single(sweep):
+    """Per-round training metrics are bit-identical sharded vs single
+    across eager/scan × dense/lazy × the K=3 fleet; eval history agrees
+    within the dense-eval partial-sum tolerance."""
+    assert len(sweep["configs"]) == 5
+    for cfg in sweep["configs"]:
+        assert cfg["rounds"] == 8, cfg
+        assert cfg["metrics_exact"], cfg
+        if cfg["lazy"]:
+            # lazy eval reduces over gathered (replicated) rows — the
+            # reduction order cannot change, so exact stays exact
+            assert cfg["max_hist_diff"] == 0.0, cfg
+        else:
+            assert cfg["max_hist_diff"] < 1e-5, cfg
+
+
+def test_sharded_prefetch_matches_off(sweep):
+    """Async prefetch under the sharded plane: trajectory and eval
+    history bit-identical to prefetch-off, and the pipeline actually
+    staged rows (counters present and active)."""
+    assert sweep["prefetch_exact"]
+    counters = sweep["prefetch_counters"]
+    assert set(counters) == {"prefetch_hits", "prefetch_misses"}
+    assert counters["prefetch_hits"] + counters["prefetch_misses"] > 0
+
+
+# ------------------------------------------------------------------
+# in-process pins (tier-1: single device)
+# ------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fed():
+    import dataclasses
+
+    from repro.data import (
+        factory_from_federated,
+        make_image_dataset,
+        pathological_split,
+    )
+    from repro.data.loader import build_federated
+    from repro.fl.base import to_device_data
+    from repro.models.small import get_model
+    from repro.scenarios import get_scenario_config
+
+    imgs, labels = make_image_dataset(400, seed=0)
+    parts = pathological_split(labels, 8, seed=0)
+    f = build_federated(imgs, labels, parts)
+    scen = dataclasses.replace(get_scenario_config("lossy_links"),
+                               graph_backend="dense", neighbor_k_max=8)
+    return (to_device_data(f), factory_from_federated(f),
+            get_model("mlr", (28, 28, 1)), scen)
+
+
+def _trainer(fed, *, lazy, mesh=None):
+    from repro.core.rwsadmm import RWSADMMHparams
+    from repro.fl.rwsadmm_trainer import RWSADMMTrainer
+
+    dense, factory, model, scen = fed
+    kw = dict(zone_size=4, batch_size=16, solver="closed_form",
+              scenario=scen, seed=0, mesh=mesh)
+    if lazy:
+        kw["store_capacity"] = 8
+    return RWSADMMTrainer(model, factory if lazy else dense,
+                          RWSADMMHparams(beta=10.0), **kw)
+
+
+@pytest.mark.parametrize("lazy", [False, True])
+def test_single_device_mesh_is_identity(fed, lazy):
+    """mesh=FLSharding() on however many devices the test session has
+    (one, under tier-1) must be a no-op on the numbers: same schedule,
+    same floats, same history — while still driving the sharded code
+    path (NamedSharding placements + donated chunk carry)."""
+    from repro.fl.sharding import FLSharding
+    from repro.fl.simulation import run_simulation
+
+    r0 = run_simulation(_trainer(fed, lazy=lazy), rounds=8,
+                        eval_every=4, seed=0, engine="scan")
+    r1 = run_simulation(_trainer(fed, lazy=lazy, mesh=FLSharding()),
+                        rounds=8, eval_every=4, seed=0, engine="scan")
+    for m0, m1 in zip(r0.round_metrics, r1.round_metrics):
+        assert m0 == m1
+    for h0, h1 in zip(r0.history, r1.history):
+        assert h0 == h1
+
+
+def test_mesh_needs_data_axis():
+    from jax.sharding import Mesh
+
+    from repro.fl.sharding import FLSharding
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    with pytest.raises(ValueError, match="data"):
+        FLSharding(mesh)
+
+
+def test_scalars_replicate():
+    """Leaves with no leading client axis (schedule scalars, token
+    pytrees) get the replicated sharding."""
+    from repro.fl.sharding import FLSharding
+
+    sh = FLSharding()
+    assert sh.row_sharding(jnp.float32(1.0)).is_fully_replicated
+    tree = sh.replicate({"a": jnp.arange(3)})
+    assert tree["a"].sharding.is_fully_replicated
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs >= 8 devices in-process (run under "
+                           "--xla_force_host_platform_device_count=8)")
+def test_direct_sharded_store_placement(fed):
+    """When the session itself has >= 8 devices (the CI sharded-smoke
+    harness), the lazy store's packed rows span them without the
+    subprocess indirection."""
+    from repro.fl.sharding import FLSharding
+
+    tr = _trainer(fed, lazy=True, mesh=FLSharding(n_devices=8))
+    tr.init_state(jax.random.PRNGKey(0))
+    devs = {s.device.id
+            for s in tr.store.data.x_train.addressable_shards}
+    assert len(devs) == 8
