@@ -9,7 +9,6 @@
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.fl.rwsadmm_trainer import RWSADMMTrainer
 from repro.core.rwsadmm import RWSADMMHparams

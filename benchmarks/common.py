@@ -26,7 +26,6 @@ from repro.data import (
 from repro.data.loader import build_federated, build_federated_from_pairs
 from repro.fl.base import to_device_data
 from repro.fl.rwsadmm_trainer import RWSADMMTrainer
-from repro.models.small import get_model
 
 
 def mnist_like_fed(n_clients: int = 20, n_samples: int = 3000,

@@ -30,11 +30,15 @@ def _time(fn, *args, iters=5):
 
 
 def run() -> None:
-    key = jax.random.PRNGKey(0)
+    # One derived subkey per buffer: reusing one key across draws
+    # hands every buffer the same bits (q == k == v), which lets XLA
+    # CSE away loads and skews the bandwidth numbers.
+    root = jax.random.PRNGKey(0)
+    keys = iter(jax.random.split(root, 8))
 
     # fused RWSADMM update, 10M params
     n = 10_000_000
-    x = jax.random.normal(key, (n,))
+    x = jax.random.normal(next(keys), (n,))
     f = jax.jit(lambda x_, z_, y_, g_: rwsadmm_fused_update_ref(
         x_, z_, y_, g_, 0.01, beta=1.0, eps_half=5e-6, n_total=20.0))
     dt = _time(f, x, x * 0.1, x + 0.01, x * 0.3)
@@ -43,8 +47,8 @@ def run() -> None:
 
     # masked multi-client zone update (Eq. 31), Z=8 × 1M params
     zone, n_z = 8, 1_000_000
-    xs = jax.random.normal(key, (zone, n_z))
-    y = jax.random.normal(jax.random.fold_in(key, 1), (n_z,))
+    xs = jax.random.normal(next(keys), (zone, n_z))
+    y = jax.random.normal(next(keys), (n_z,))
     mask = jnp.ones((zone,))
     f = jax.jit(lambda x_, z_, y_, g_: rwsadmm_zone_fused_update_ref(
         x_, z_, y_, g_, mask, 0.01, beta=1.0, eps_half=5e-6, n_total=20.0))
@@ -55,9 +59,9 @@ def run() -> None:
 
     # flash decode, 32k cache
     b, h, kv, hd, s = 4, 8, 2, 128, 32768
-    q = jax.random.normal(key, (b, h, hd), jnp.bfloat16)
-    k = jax.random.normal(key, (b, s, kv, hd), jnp.bfloat16)
-    v = jax.random.normal(key, (b, s, kv, hd), jnp.bfloat16)
+    q = jax.random.normal(next(keys), (b, h, hd), jnp.bfloat16)
+    k = jax.random.normal(next(keys), (b, s, kv, hd), jnp.bfloat16)
+    v = jax.random.normal(next(keys), (b, s, kv, hd), jnp.bfloat16)
     length = jnp.full((b,), s, jnp.int32)
     f = jax.jit(lambda q_, k_, v_: flash_decode_ref(q_, k_, v_, length))
     dt = _time(f, q, k, v)
@@ -65,8 +69,8 @@ def run() -> None:
          f"GBps={(2 * b * s * kv * hd * 2) / dt / 1e9:.1f}")
 
     # rglru scan 4k×1024
-    a = jax.nn.sigmoid(jax.random.normal(key, (4, 4096, 1024)))
-    bb = jax.random.normal(key, (4, 4096, 1024))
+    a = jax.nn.sigmoid(jax.random.normal(next(keys), (4, 4096, 1024)))
+    bb = jax.random.normal(next(keys), (4, 4096, 1024))
     f = jax.jit(rglru_scan_ref)
     dt = _time(f, a, bb)
     emit("kernel/rglru_scan_4k", dt * 1e6,

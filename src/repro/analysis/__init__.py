@@ -1,0 +1,29 @@
+"""Repo-wide static analysis: lint rules, jaxpr audits, compile budget.
+
+Three layers, one CLI (``python -m repro.analysis.check``):
+
+1. **AST lint** (`lint.py` / `rules.py`) — repo-specific invariant
+   rules the generic linters can't express: ambient ``np.random``
+   calls, unseeded generators, JAX PRNG key reuse, host syncs inside
+   jit-reachable functions, Python branches on traced values, leftover
+   ``jax.debug`` calls, mutable default arguments. Suppress a finding
+   inline with ``# repro: allow(<rule>)``.
+2. **jaxpr audit** (`jaxpr_audit.py` / `registry.py`) — traces every
+   registered jitted step closure across the real trainer matrix
+   (single/fleet x eager/scan/scan_fused x dense/lazy x sharded) and
+   walks the jaxprs: no float64 ops, no baked-in constants above the
+   per-closure byte budget, donation applied on the sharded path, no
+   callback primitives in hot paths.
+3. **compile-budget sentinel** (`compile_budget.py`) — runs the smoke
+   sweep under JAX's compile logging and asserts the per-closure
+   distinct-compilation counts match ``analysis/compile_budget.json``.
+
+See ``docs/static_analysis.md`` for the rule catalog and workflows.
+"""
+from .findings import Finding
+from .jaxpr_audit import ClosureAudit, audit_closure
+from .lint import LintEngine, lint_paths
+from .rules import ALL_RULES
+
+__all__ = ["Finding", "LintEngine", "lint_paths", "ALL_RULES",
+           "ClosureAudit", "audit_closure"]

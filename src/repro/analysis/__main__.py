@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — alias for the check CLI."""
+import sys
+
+from .check import main
+
+sys.exit(main())

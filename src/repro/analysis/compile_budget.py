@@ -1,0 +1,121 @@
+"""Layer 3: compile-budget sentinel.
+
+XLA compilations are the dominant fixed cost of the smoke sweeps, and a
+silent retrace (a closure rebuilt per call, a python float leaking into
+a traced signature, a cache keyed on the wrong tuple) multiplies them
+without failing any numeric test. The sentinel runs a FIXED tiny sweep
+(``registry.SMOKE`` × eager/scan/scan_fused) under a compile-event
+listener and compares the per-closure distinct-compilation counts to a
+golden manifest (``analysis/compile_budget.json``). Any drift — up OR
+down — fails, so both regressions and stale manifests surface.
+
+Counting mechanism: jax's dispatch layer logs one
+``Finished XLA compilation of jit(<name>) in <secs> sec`` line per
+actual backend compile on the ``jax._src.dispatch`` logger. A handler
+parses the closure name out of each line; ambient tiny-op compiles
+(``jit(broadcast_in_dim)`` warm-up noise that varies with process
+history) are filtered out by keeping only the step/driver closure names
+the trainers own.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import json
+import logging
+import re
+from pathlib import Path
+from typing import Iterator, Sequence
+
+_COMPILE_RE = re.compile(
+    r"Finished (?:XLA |jaxpr to MLIR module )?"
+    r"(?:compilation|conversion) of jit\((?P<name>[^)]*)\)")
+
+#: closure names the trainers own — everything else (ambient jnp-op
+#: compiles, eval closures) is noise for the budget
+_INTERESTING = re.compile(r"^(chunk|_round_impl|_rr_step_impl|"
+                          r"_sim_step_impl|round_impl)")
+
+_LOGGER_NAME = "jax._src.dispatch"
+
+
+class _CompileCounter(logging.Handler):
+    def __init__(self, counts: collections.Counter):
+        super().__init__(level=logging.DEBUG)
+        self.counts = counts
+
+    def emit(self, record: logging.LogRecord) -> None:
+        m = _COMPILE_RE.match(record.getMessage())
+        if m and "compilation" in record.getMessage():
+            self.counts[m.group("name")] += 1
+
+
+@contextlib.contextmanager
+def compile_log() -> Iterator[collections.Counter]:
+    """Count XLA compilations by jitted-closure name inside the block."""
+    counts: collections.Counter = collections.Counter()
+    handler = _CompileCounter(counts)
+    logger = logging.getLogger(_LOGGER_NAME)
+    old_level, old_prop = logger.level, logger.propagate
+    logger.addHandler(handler)
+    logger.setLevel(logging.DEBUG)
+    logger.propagate = False      # keep DEBUG spew off the root logger
+    try:
+        yield counts
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(old_level)
+        logger.propagate = old_prop
+
+
+def _filter(counts: collections.Counter) -> dict[str, int]:
+    return {k: int(v) for k, v in sorted(counts.items())
+            if _INTERESTING.match(k)}
+
+
+def measure_budget(engines: Sequence[str] = ("eager", "scan",
+                                             "scan_fused"),
+                   ) -> dict[str, int]:
+    """Run the fixed smoke sweep cold and return per-closure distinct
+    compile counts. Trainers are built fresh inside, so the counts are
+    deterministic regardless of what the process compiled before."""
+    from .registry import SMOKE, run_cell
+
+    with compile_log() as counts:
+        for spec in SMOKE:
+            run_cell(spec, engines)
+    return _filter(counts)
+
+
+def compare_budget(measured: dict[str, int], golden: dict[str, int]
+                   ) -> list[str]:
+    """Human-readable drift lines; empty means the budget holds."""
+    problems = []
+    for name in sorted(set(measured) | set(golden)):
+        got, want = measured.get(name, 0), golden.get(name, 0)
+        if got > want:
+            problems.append(
+                f"{name}: {got} compilations (golden {want}) — retrace "
+                "or cache-key regression")
+        elif got < want:
+            problems.append(
+                f"{name}: {got} compilations (golden {want}) — sweep "
+                "shrank; refresh analysis/compile_budget.json")
+    return problems
+
+
+def load_golden(path: str | Path) -> dict[str, int]:
+    data = json.loads(Path(path).read_text())
+    return {str(k): int(v) for k, v in data["compilations"].items()}
+
+
+def write_golden(path: str | Path, measured: dict[str, int]) -> None:
+    payload = {
+        "comment": "Golden distinct-XLA-compilation counts for the "
+                   "fixed smoke sweep (repro.analysis.compile_budget). "
+                   "Regenerate with python -m repro.analysis.check "
+                   "--write-budget.",
+        "sweep": "registry.SMOKE x (eager, scan, scan_fused)",
+        "compilations": dict(sorted(measured.items())),
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,0 +1,171 @@
+"""Layer 2: jaxpr auditor for the registered jitted step closures.
+
+Every step closure the trainers register (``TrainerBase.capture_jitted``
+records ``(name, fn, args, kwargs)`` at the exact call sites) is traced
+— NOT re-executed — and its jaxpr checked for the compiled-path
+invariants the repo pins elsewhere by behaviour:
+
+* **no-float64-op** — no equation output is float64/complex128 (the
+  whole stack is float32; a stray f64 silently doubles bandwidth and
+  breaks the bit-identity pins).
+* **baked-constant** — closure constants stay under a per-closure byte
+  budget. The dense client plane deliberately bakes the dataset (its
+  budget is the dataset size + slack); the lazy plane must NOT (its
+  budget is far below the store's packed-data size), which is the
+  traced-not-baked invariant the lazy-plane PR established.
+* **callback-in-jit** — no ``debug_callback`` / ``pure_callback`` /
+  ``io_callback`` primitives survive into the step jaxprs (leftover
+  ``jax.debug.print`` forces host syncs every round).
+* **donation-mismatch** — the sharded chunk path must actually donate
+  its carry (``donate_argnums=(0,)`` shows up as ``tf.aliasing_output``
+  in the lowered StableHLO); the unsharded path must not.
+
+``fn.trace(*args).jaxpr`` is used instead of ``jax.make_jaxpr`` because
+only the former exposes the closure constants (``.consts``) — wrapping
+a jitted fn in ``make_jaxpr`` yields one opaque ``pjit`` equation with
+an empty const list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Iterator
+
+import numpy as np
+
+from .findings import Finding
+
+#: primitives that escape to the host from inside a compiled step
+_CALLBACK_PRIMS = {
+    "debug_callback", "pure_callback", "io_callback", "callback",
+    "debug_print",
+}
+
+_WIDE_DTYPES = {"float64", "complex128"}
+
+#: default const budget for closures that must not bake bulk data
+DEFAULT_CONST_BUDGET = 256 * 1024
+
+
+@dataclasses.dataclass
+class ClosureAudit:
+    """Result of auditing one captured closure."""
+    name: str
+    n_eqns: int
+    const_bytes: int
+    const_budget: int
+    donated: bool | None      # None: donation not checked for this one
+    findings: list[Finding]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "n_eqns": self.n_eqns,
+            "const_bytes": self.const_bytes,
+            "const_budget": self.const_budget,
+            "donated": self.donated,
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+def _sub_jaxprs(value: Any) -> Iterator[Any]:
+    """Yield jaxprs hiding inside an eqn param (scan/cond bodies…)."""
+    if hasattr(value, "eqns"):                       # Jaxpr
+        yield value
+    elif hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
+        yield value.jaxpr                            # ClosedJaxpr
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """All equations, recursing into sub-jaxprs (scan bodies etc.)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for param in eqn.params.values():
+            for sub in _sub_jaxprs(param):
+                yield from iter_eqns(sub)
+
+
+def _const_nbytes(consts: Iterable[Any]) -> int:
+    total = 0
+    for c in consts:
+        nbytes = getattr(c, "nbytes", None)
+        if nbytes is None:
+            try:
+                nbytes = np.asarray(c).nbytes
+            except Exception:
+                nbytes = 0
+        total += int(nbytes)
+    return total
+
+
+def audit_closure(name: str, fn, args, kwargs=None, *,
+                  const_budget: int = DEFAULT_CONST_BUDGET,
+                  expect_donation: bool | None = None) -> ClosureAudit:
+    """Trace one captured jitted closure and check the invariants.
+
+    ``expect_donation`` — ``True``/``False`` asserts the lowered module
+    does / does not alias an input to an output; ``None`` skips the
+    (more expensive) lowering entirely.
+    """
+    kwargs = dict(kwargs or {})
+    path = f"<jaxpr:{name}>"
+    findings: list[Finding] = []
+
+    closed = fn.trace(*args, **kwargs).jaxpr        # ClosedJaxpr
+    const_bytes = _const_nbytes(closed.consts)
+    if const_bytes > const_budget:
+        findings.append(Finding(
+            rule="baked-constant", path=path, line=1, col=0,
+            message=(f"{const_bytes} bytes of closure constants exceed "
+                     f"the {const_budget}-byte budget — bulk data must "
+                     "enter as a traced argument, not a baked const"),
+            snippet=name))
+
+    n_eqns = 0
+    wide_seen: set[str] = set()
+    callback_seen: set[str] = set()
+    for eqn in iter_eqns(closed.jaxpr):
+        n_eqns += 1
+        prim = eqn.primitive.name
+        if prim in _CALLBACK_PRIMS and prim not in callback_seen:
+            callback_seen.add(prim)
+            findings.append(Finding(
+                rule="callback-in-jit", path=path, line=1, col=0,
+                message=(f"host-callback primitive '{prim}' in the "
+                         "compiled step — remove leftover debugging / "
+                         "host escapes"),
+                snippet=f"{name}:{prim}"))
+        for var in eqn.outvars:
+            dtype = getattr(getattr(var, "aval", None), "dtype", None)
+            dname = getattr(dtype, "name", None)
+            if dname in _WIDE_DTYPES and prim not in wide_seen:
+                wide_seen.add(prim)
+                findings.append(Finding(
+                    rule="float64-op", path=path, line=1, col=0,
+                    message=(f"'{prim}' produces {dname} — the step "
+                             "closures are pinned to float32"),
+                    snippet=f"{name}:{prim}"))
+
+    donated: bool | None = None
+    if expect_donation is not None:
+        text = fn.lower(*args, **kwargs).as_text()
+        donated = "tf.aliasing_output" in text
+        if donated != expect_donation:
+            what = ("carry not donated on the sharded path (resident "
+                    "state doubles per chunk)" if expect_donation else
+                    "unexpected donation on the default path (input "
+                    "states must stay alive)")
+            findings.append(Finding(
+                rule="donation-mismatch", path=path, line=1, col=0,
+                message=what, snippet=name))
+
+    return ClosureAudit(name=name, n_eqns=n_eqns,
+                        const_bytes=const_bytes,
+                        const_budget=const_budget, donated=donated,
+                        findings=findings)

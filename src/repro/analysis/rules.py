@@ -1,0 +1,561 @@
+"""Repo-specific AST lint rules.
+
+Every rule here guards an invariant the test suite can only pin by
+example: seeded-RNG-everywhere (reproducible trajectories), sync-free
+jitted hot paths (eager == scan bit-identity and no hidden device
+round-trips), and no leftover debug plumbing. Rules that generic
+linters express natively (import hygiene, unused names) live in the
+ruff config instead — see docs/static_analysis.md.
+
+A rule sees one :class:`ModuleContext` (parsed tree + import-alias map
++ the jit-reachable function set) and yields :class:`Finding`s. The
+engine applies ``# repro: allow(<rule>)`` suppressions afterwards.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from .findings import Finding
+
+# ---------------------------------------------------------------------------
+# Module context: parsed source + alias resolution + jit reachability.
+# ---------------------------------------------------------------------------
+
+#: transforms whose function argument runs traced (first positional arg)
+_TRACING_ENTRYPOINTS = {
+    "jax.jit", "jit",
+    "jax.lax.scan", "lax.scan",
+    "jax.vmap", "vmap",
+    "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat",
+    "jax.pmap",
+}
+
+#: jax.random constructors/derivations that do NOT consume a key
+_KEY_NONCONSUMING = {
+    "PRNGKey", "key", "fold_in", "key_data", "wrap_key_data", "clone",
+    "split",  # split consumes, but tracked separately (it *retires* a key)
+}
+
+#: numpy.random attributes that are seeded-constructor machinery, not
+#: ambient global-state sampling
+_NP_RANDOM_OK = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64",
+}
+
+
+def _attr_chain(node: ast.AST) -> str | None:
+    """Dotted source text of a Name/Attribute chain ("np.random.rand")."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class ModuleContext:
+    """Everything the rules need to know about one parsed module."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.aliases = self._collect_aliases(tree)
+        self._functions = [n for n in ast.walk(tree)
+                           if isinstance(n, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))]
+        self.jit_reachable = self._jit_reachable()
+
+    # -- alias map ----------------------------------------------------
+    @staticmethod
+    def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+        """local name -> canonical dotted module/attribute path."""
+        aliases: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}")
+        return aliases
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Canonical dotted path of a call target / attribute chain,
+        with the leading segment resolved through the import aliases
+        ("jnp.asarray" -> "jax.numpy.asarray")."""
+        chain = _attr_chain(node)
+        if chain is None:
+            return None
+        head, _, rest = chain.partition(".")
+        head = self.aliases.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    # -- jit reachability ---------------------------------------------
+    def _jit_reachable(self) -> set[ast.AST]:
+        """Function nodes whose bodies run under trace: jit-decorated,
+        passed to jax.jit / lax.scan / vmap / grad at some call site,
+        or (transitively) called by such a function within this module.
+        Nested defs are covered by walking the reachable subtrees."""
+        by_name: dict[str, list[ast.AST]] = {}
+        for fn in self._functions:
+            by_name.setdefault(fn.name, []).append(fn)
+
+        # Local function aliases: ``impl = self._rr_step_impl if cond
+        # else self._sim_step_impl`` — map the variable name to every
+        # known def its RHS references, so jit(partial(impl, ...)) and
+        # calls through the alias still mark the real bodies.
+        var_refs: dict[str, set[str]] = {}
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            refs = {(_attr_chain(sub) or "").rsplit(".", 1)[-1]
+                    for sub in ast.walk(node.value)
+                    if isinstance(sub, (ast.Name, ast.Attribute))}
+            refs &= set(by_name)
+            if refs:
+                var_refs.setdefault(node.targets[0].id, set()).update(refs)
+
+        def defs_for(name: str) -> list[ast.AST]:
+            out = list(by_name.get(name, []))
+            for ref in var_refs.get(name, ()):
+                out.extend(by_name.get(ref, []))
+            return out
+
+        entries: set[ast.AST] = set()
+        for fn in self._functions:
+            for dec in fn.decorator_list:
+                if self._is_tracing_transform(dec):
+                    entries.add(fn)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = self.resolve(node.func)
+            is_entry = target in _TRACING_ENTRYPOINTS
+            is_partial_entry = (
+                target in ("functools.partial", "partial") and node.args
+                and self.resolve(node.args[0]) in _TRACING_ENTRYPOINTS)
+            if not (is_entry or is_partial_entry):
+                continue
+            cands: Iterable[ast.AST] = (
+                node.args[1:] if is_partial_entry else node.args)
+            for arg in cands:
+                resolved = self.resolve(arg)
+                name = (resolved or "").rsplit(".", maxsplit=1)[-1]
+                entries.update(defs_for(name))
+                if isinstance(arg, ast.Lambda):
+                    entries.add(arg)
+                if (isinstance(arg, ast.Call)
+                        and self.resolve(arg.func) in (
+                            "functools.partial", "partial")
+                        and arg.args):
+                    inner = (self.resolve(arg.args[0]) or "")
+                    entries.update(defs_for(inner.rsplit(".", 1)[-1]))
+
+        # Transitive closure over same-module calls (bare name or
+        # self.<method>), walking reachable subtrees.
+        reachable = set(entries)
+        frontier = list(entries)
+        while frontier:
+            fn = frontier.pop()
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func) or ""
+                name = chain.rsplit(".", maxsplit=1)[-1]
+                if chain in (name, f"self.{name}", f"cls.{name}"):
+                    for cand in defs_for(name):
+                        if cand not in reachable:
+                            reachable.add(cand)
+                            frontier.append(cand)
+        return reachable
+
+    @staticmethod
+    def _is_tracing_transform(dec: ast.AST) -> bool:
+        chain = _attr_chain(dec)
+        if chain in _TRACING_ENTRYPOINTS:
+            return True
+        if isinstance(dec, ast.Call):
+            target = _attr_chain(dec.func)
+            if target in _TRACING_ENTRYPOINTS:
+                return True
+            if target in ("functools.partial", "partial") and dec.args:
+                return _attr_chain(dec.args[0]) in _TRACING_ENTRYPOINTS
+        return False
+
+    # -- helpers -------------------------------------------------------
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        snippet = (self.lines[line - 1].strip()
+                   if 0 < line <= len(self.lines) else "")
+        return Finding(rule=rule, path=self.path, line=line,
+                       col=getattr(node, "col_offset", 0),
+                       message=message, snippet=snippet)
+
+    def reachable_subtrees(self) -> Iterator[ast.AST]:
+        """Jit-reachable function nodes, outermost-first, with nested
+        reachable functions pruned (their subtree is already covered)."""
+        covered: set[ast.AST] = set()
+        for fn in sorted(self.jit_reachable,
+                         key=lambda n: (n.lineno, n.col_offset)):
+            if fn in covered:
+                continue
+            for sub in ast.walk(fn):
+                if sub is not fn and sub in self.jit_reachable:
+                    covered.add(sub)
+            yield fn
+
+
+# ---------------------------------------------------------------------------
+# Rules.
+# ---------------------------------------------------------------------------
+
+class Rule:
+    name: str = ""
+    description: str = ""
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        raise NotImplementedError  # pragma: no cover - interface
+
+
+class AmbientNpRandomRule(Rule):
+    """Ambient ``np.random.*`` sampling mutates hidden global state —
+    one call anywhere desynchronizes every seeded trajectory pin in the
+    repo. Only seeded ``Generator`` streams are allowed."""
+
+    name = "ambient-np-random"
+    description = ("ambient numpy.random global-state call; use a "
+                   "seeded np.random.default_rng(seed) Generator")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.resolve(node.func) or ""
+            if not target.startswith("numpy.random."):
+                continue
+            attr = target.removeprefix("numpy.random.").split(".")[0]
+            if attr not in _NP_RANDOM_OK:
+                yield ctx.finding(
+                    self.name, node,
+                    f"ambient numpy.random.{attr}() uses hidden global "
+                    "RNG state; draw from a seeded default_rng stream")
+
+
+class UnseededDefaultRngRule(Rule):
+    """``default_rng()`` without a seed draws OS entropy — every run
+    takes a different trajectory, which silently defeats the repo's
+    bit-identity pins."""
+
+    name = "unseeded-default-rng"
+    description = "np.random.default_rng() without an explicit seed"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.resolve(node.func) or ""
+            if not target.endswith("random.default_rng"):
+                continue
+            unseeded = (not node.args and not node.keywords) or (
+                len(node.args) == 1 and isinstance(node.args[0],
+                                                   ast.Constant)
+                and node.args[0].value is None)
+            if unseeded:
+                yield ctx.finding(
+                    self.name, node,
+                    "default_rng() without a seed is entropy-seeded; "
+                    "pass an explicit seed (or derived SeedSequence)")
+
+
+class PrngKeyReuseRule(Rule):
+    """A JAX PRNG key consumed twice yields correlated randomness: two
+    samplers see identical bits. Straight-line double consumption of
+    the same key name (without re-binding via split/fold_in) is flagged.
+    """
+
+    name = "prng-key-reuse"
+    description = ("jax.random key consumed twice without split/fold_in"
+                   " between uses")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx._functions:
+            yield from self._check_fn(ctx, fn)
+
+    def _check_fn(self, ctx: ModuleContext, fn) -> Iterator[Finding]:
+        # Linear event stream in source order; loop bodies are skipped
+        # (per-iteration derivation is the common legit pattern there).
+        events: list[tuple[int, int, str, str]] = []
+
+        def visit(node, in_loop: bool):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not fn:
+                return  # nested scopes analyzed on their own
+            if isinstance(node, (ast.For, ast.While)):
+                # Loop bodies get their own analysis: a key consumed
+                # every iteration WITHOUT per-iteration re-binding
+                # (split/fold_in assignment, or being the loop target)
+                # hands every iteration identical bits.
+                assigned: set[str] = set()
+                consumed: list[tuple[int, int, str]] = []
+
+                def scan_loop(n):
+                    if isinstance(n, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)):
+                        return       # nested scopes analyzed on their own
+                    for tgt, _ in _assignment_targets(n):
+                        assigned.add(tgt.id)
+                    if isinstance(n, ast.Call):
+                        target = ctx.resolve(n.func) or ""
+                        if (target.startswith("jax.random.")
+                                and n.args
+                                and isinstance(n.args[0], ast.Name)):
+                            attr = target.removeprefix("jax.random.")
+                            if attr not in _KEY_NONCONSUMING:
+                                consumed.append((n.lineno, n.col_offset,
+                                                 n.args[0].id))
+                    for child in ast.iter_child_nodes(n):
+                        scan_loop(child)
+
+                if isinstance(node, ast.For):
+                    for sub in ast.walk(node.target):
+                        if isinstance(sub, ast.Name):
+                            assigned.add(sub.id)
+                for child in node.body + getattr(node, "orelse", []):
+                    scan_loop(child)
+                for line, col, name in consumed:
+                    if name not in assigned:
+                        events.append((line, col, "loop-consume", name))
+                return
+            if isinstance(node, ast.Call):
+                target = ctx.resolve(node.func) or ""
+                if (target.startswith("jax.random.")
+                        and node.args
+                        and isinstance(node.args[0], ast.Name)):
+                    attr = target.removeprefix("jax.random.")
+                    if attr not in _KEY_NONCONSUMING and not in_loop:
+                        events.append((node.lineno, node.col_offset,
+                                       "consume", node.args[0].id))
+                    elif attr == "split":
+                        events.append((node.lineno, node.col_offset,
+                                       "retire", node.args[0].id))
+            for tgt_node, kind in _assignment_targets(node):
+                events.append((tgt_node.lineno, tgt_node.col_offset,
+                               kind, tgt_node.id))
+            for child in ast.iter_child_nodes(node):
+                visit(child, in_loop)
+
+        for stmt in fn.body:
+            visit(stmt, False)
+
+        events.sort(key=lambda e: (e[0], e[1]))
+        used: dict[str, str] = {}   # name -> how it was last consumed
+        for line, col, kind, name in events:
+            if kind == "assign":
+                used.pop(name, None)
+            elif kind == "loop-consume":
+                snippet = (ctx.lines[line - 1].strip()
+                           if 0 < line <= len(ctx.lines) else "")
+                yield Finding(
+                    rule=self.name, path=ctx.path, line=line, col=col,
+                    snippet=snippet,
+                    message=(f"PRNG key {name!r} consumed every loop "
+                             "iteration without re-binding; split or "
+                             "fold_in per iteration"))
+                used[name] = kind
+            elif kind in ("consume", "retire"):
+                if name in used:
+                    snippet = (ctx.lines[line - 1].strip()
+                               if 0 < line <= len(ctx.lines) else "")
+                    yield Finding(
+                        rule=self.name, path=ctx.path, line=line,
+                        col=col, snippet=snippet,
+                        message=(f"PRNG key {name!r} already consumed "
+                                 f"({used[name]}); split or fold_in "
+                                 "before reusing it"))
+                used[name] = kind
+
+
+def _assignment_targets(node):
+    """(Name node, "assign") pairs this statement (re)binds."""
+    out = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign,
+                           ast.NamedExpr)):
+        targets = [node.target]
+    else:
+        return out
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                out.append((sub, "assign"))
+    return out
+
+
+class HostSyncInJitRule(Rule):
+    """Host syncs inside jit-reachable code either crash at trace time
+    (``float()`` on a tracer) or — worse — silently bake a trace-time
+    value into the executable. ``np.asarray`` / ``.item()`` /
+    ``device_get`` inside a traced body are always wrong; ``float(x)``
+    is flagged when ``x`` is a traced function parameter."""
+
+    name = "host-sync-in-jit"
+    description = ("host-synchronizing call inside a jit/scan-reachable"
+                   " function")
+
+    _ALWAYS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+    _CASTS = {"float", "int", "bool", "complex"}
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx.reachable_subtrees():
+            params = _subtree_param_names(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = ctx.resolve(node.func) or ""
+                if target in self._ALWAYS:
+                    yield ctx.finding(
+                        self.name, node,
+                        f"{target}() forces a device->host transfer "
+                        "inside a traced function; use jnp instead")
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in ("item",
+                                               "block_until_ready")
+                        and not node.args):
+                    yield ctx.finding(
+                        self.name, node,
+                        f".{node.func.attr}() blocks on device inside "
+                        "a traced function")
+                elif (target in self._CASTS and len(node.args) == 1
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id in params):
+                    yield ctx.finding(
+                        self.name, node,
+                        f"{target}({node.args[0].id}) on a traced "
+                        "argument concretizes it at trace time; keep "
+                        "it a jnp array (or mark it static)")
+
+
+def _subtree_param_names(fn) -> set[str]:
+    names: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            a = node.args
+            for arg in (list(a.posonlyargs) + list(a.args)
+                        + list(a.kwonlyargs)):
+                names.add(arg.arg)
+    names.discard("self")
+    names.discard("cls")
+    return names
+
+
+class TracedBranchRule(Rule):
+    """``if``/``while`` on a traced value raises ConcretizationError at
+    best; at worst (when the value is concrete at trace time) it bakes
+    one branch into the executable and silently retraces per value.
+    Flagged: branch conditions that *compute* on jnp/jax values inside
+    jit-reachable code — static config flags stay legal."""
+
+    name = "traced-branch"
+    description = ("Python branch on a jnp/jax expression inside a "
+                   "traced function; use lax.cond/jnp.where")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx.reachable_subtrees():
+            for node in ast.walk(fn):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                if self._is_traced_expr(ctx, node.test):
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    yield ctx.finding(
+                        self.name, node,
+                        f"`{kw}` on a traced jnp/jax expression; use "
+                        "jax.lax.cond / jnp.where (or hoist the value "
+                        "out of the traced body)")
+
+    @staticmethod
+    def _is_traced_expr(ctx: ModuleContext, test: ast.AST) -> bool:
+        for node in ast.walk(test):
+            if isinstance(node, ast.Call):
+                target = ctx.resolve(node.func) or ""
+                if (target.startswith("jax.numpy.")
+                        or target.startswith("jax.lax.")
+                        or target.startswith("jax.random.")):
+                    return True
+        return False
+
+
+class JaxDebugRule(Rule):
+    """``jax.debug.print`` / ``jax.debug.breakpoint`` lower to callback
+    primitives: they force host round-trips in the hot path and change
+    XLA scheduling. Debug-only — never committed on a hot path."""
+
+    name = "jax-debug"
+    description = "leftover jax.debug.* call"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.resolve(node.func) or ""
+            if target.startswith("jax.debug."):
+                yield ctx.finding(
+                    self.name, node,
+                    f"{target}() lowers to a host callback primitive; "
+                    "remove before committing (or suppress for "
+                    "intentional tooling)")
+
+
+class MutableDefaultRule(Rule):
+    """A mutable default argument is one shared object across calls —
+    state leaks between rounds/trainers. (ruff B006 also covers this
+    when installed; this rule keeps the check dependency-free.)"""
+
+    name = "mutable-default"
+    description = "mutable default argument value"
+
+    _MUTABLE_CALLS = {"list", "dict", "set", "bytearray",
+                      "collections.defaultdict", "defaultdict"}
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx._functions:
+            args = fn.args
+            for default in list(args.defaults) + [
+                    d for d in args.kw_defaults if d is not None]:
+                if self._is_mutable(ctx, default):
+                    yield ctx.finding(
+                        self.name, default,
+                        f"mutable default in {fn.name}(); use None and "
+                        "construct inside the body")
+
+    def _is_mutable(self, ctx: ModuleContext, node: ast.AST) -> bool:
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            return (ctx.resolve(node.func) or "") in self._MUTABLE_CALLS
+        return False
+
+
+ALL_RULES: tuple[Rule, ...] = (
+    AmbientNpRandomRule(),
+    UnseededDefaultRngRule(),
+    PrngKeyReuseRule(),
+    HostSyncInJitRule(),
+    TracedBranchRule(),
+    JaxDebugRule(),
+    MutableDefaultRule(),
+)
+
+RULES_BY_NAME = {r.name: r for r in ALL_RULES}

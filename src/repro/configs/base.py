@@ -9,7 +9,6 @@ family.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 

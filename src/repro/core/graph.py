@@ -12,7 +12,6 @@ This module is pure numpy/host-side: graph topology is control-plane state
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

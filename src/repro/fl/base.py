@@ -8,6 +8,7 @@ simulation reuses one compiled round function per algorithm.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -139,6 +140,12 @@ class TrainerBase:
         self.n_clients = data.n_clients
         self.scenario = None   # attach_scenario() / trainer kwarg
         self.telemetry = telemetry   # TelemetryRun or None (off)
+        # Static-analysis capture (repro.analysis.jaxpr_audit): when
+        # armed, the drivers register every jitted step closure + the
+        # exact traced call they are about to make. Off by default and
+        # a single flag test per round — the hot paths are untouched.
+        self._audit_capture = False
+        self._audit_entries: list = []
         # Device-sharded client plane: with a mesh, every leading
         # client/capacity axis goes data-parallel over its "data" axis
         # (fl/sharding.py); without one, placement is untouched.
@@ -410,6 +417,25 @@ class TrainerBase:
             self.walker.set_label_weights(label_weights)
         self.walker.reset(self.dyn_graph.current())
         self.scenario.telemetry = self.telemetry
+
+    # -- static-analysis capture (repro.analysis) -------------------------
+    def _audit_record(self, name: str, fn, args, kwargs=None) -> None:
+        """Register one jitted closure call for the jaxpr auditor."""
+        if self._audit_capture:
+            self._audit_entries.append(
+                (name, fn, tuple(args), dict(kwargs or {})))
+
+    @contextlib.contextmanager
+    def capture_jitted(self):
+        """Arm closure capture: every jitted step call made inside the
+        context is recorded as ``(name, fn, args, kwargs)`` — the jaxpr
+        auditor traces these to assert the compiled-path invariants
+        (no f64, no baked constants, donation, no callbacks)."""
+        self._audit_capture, self._audit_entries = True, []
+        try:
+            yield self._audit_entries
+        finally:
+            self._audit_capture = False
 
     def set_telemetry(self, run) -> None:
         """Attach (or detach, ``None``) a ``TelemetryRun``: the trainer

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -265,7 +265,11 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         if fn is None:
             impl = (self._rr_step_impl if mode == "roundrobin"
                     else self._sim_step_impl)
-            fn = jax.jit(functools.partial(impl, use_fused=use_fused))
+            # named partial: compile logs + the analysis compile-budget
+            # sentinel key counts by jit(<closure name>)
+            step = functools.partial(impl, use_fused=use_fused)
+            functools.update_wrapper(step, impl)
+            fn = jax.jit(step)
             self._fleet_step_fns[(mode, use_fused)] = fn
         return fn
 
@@ -300,8 +304,9 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         if self._use_iw:
             args.append(jnp.asarray(walker.weight_history[-1],
                                     jnp.float32))
-        state, zone_loss = self._fleet_step_fn("roundrobin", False)(
-            *args, **kwargs)
+        step_fn = self._fleet_step_fn("roundrobin", False)
+        self._audit_record("round:roundrobin", step_fn, args, kwargs)
+        state, zone_loss = step_fn(*args, **kwargs)
         metrics = {
             "round": rnd, "walker": k, "client": int(i_k),
             "zone": n_active, "n_i": int(n_i),
@@ -339,8 +344,9 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
             args.append(jnp.asarray(
                 np.array([w.weight_history[-1] for w in self.walkers]),
                 jnp.float32))
-        state, loss = self._fleet_step_fn("simultaneous", False)(
-            *args, **kwargs)
+        step_fn = self._fleet_step_fn("simultaneous", False)
+        self._audit_record("round:simultaneous", step_fn, args, kwargs)
+        state, loss = step_fn(*args, **kwargs)
         lat_kw, en_kw = self._price_fleet_schedule(
             [graph], positions[None], idx[None], mask[None])
         active = mask.sum(axis=1).astype(int)
@@ -485,6 +491,7 @@ class FleetRWSADMMTrainer(RWSADMMTrainer):
         args.append(jnp.asarray(sched.sync))
         if self._use_iw:
             args.append(jnp.asarray(sched.iw, jnp.float32))
+        self._audit_record(f"chunk:{mode}:{engine}", fn, [state] + args)
         final, (losses, kappas) = fn(state, *args)
         self._chunk_shapes.add((engine, sched.rounds))
         return final, {"train_loss": losses, "kappa": kappas}

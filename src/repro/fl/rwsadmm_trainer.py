@@ -124,7 +124,12 @@ class RWSADMMTrainer(TrainerBase):
         # the seed behavior. A named or explicit ScenarioConfig is
         # authoritative: its own mobility knobs override those kwargs.
         self.attach_scenario(scenario, seed=seed)
-        self._round_fn = jax.jit(functools.partial(self._round_impl))
+        # update_wrapper names the partial so jax's compile logs (and
+        # the analysis compile-budget sentinel) see jit(_round_impl)
+        # instead of jit(<unnamed wrapped function>).
+        _round = functools.partial(self._round_impl)
+        functools.update_wrapper(_round, self._round_impl)
+        self._round_fn = jax.jit(_round)
         self._chunk_fns: dict = {}   # engine -> jitted lax.scan driver
         self._chunk_shapes: set = set()   # (engine, R) already compiled
 
@@ -393,6 +398,7 @@ class RWSADMMTrainer(TrainerBase):
             # same float the schedule's iw column carries for this round.
             args.append(jnp.asarray(self.walker.weight_history[-1],
                                     jnp.float32))
+        self._audit_record("round", self._round_fn, args, kwargs)
         state, zone_loss = self._round_fn(*args, **kwargs)
         metrics = {
             "round": rnd,
@@ -586,6 +592,7 @@ class RWSADMMTrainer(TrainerBase):
                  jnp.asarray(sched.keys)]
         if self._use_iw:
             args.append(jnp.asarray(sched.iw, jnp.float32))
+        self._audit_record(f"chunk:{engine}", fn, [state] + args)
         final, (losses, kappas) = fn(state, *args)
         self._chunk_shapes.add((engine, sched.rounds))
         return final, {"train_loss": losses, "kappa": kappas}

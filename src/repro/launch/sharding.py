@@ -18,15 +18,12 @@ vocab), keeping lowering robust across all 10 architectures.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
-from ..models import attention as attn_mod
 
 
 def _axis_size(mesh, axes) -> int:

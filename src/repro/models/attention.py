@@ -8,8 +8,7 @@ Pallas ``flash_decode`` kernel (kernels/flash_decode/ref.py reuses it).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

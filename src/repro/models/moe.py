@@ -15,8 +15,6 @@ experts it is handed and psums over ``axis`` if given. Without a mesh
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

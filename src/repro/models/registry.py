@@ -1,8 +1,6 @@
 """Arch-id → model builder registry + input batch builders."""
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -13,8 +13,7 @@ see models/moe.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,6 @@ from .layers import (
     mlp_init,
     rmsnorm,
     rmsnorm_init,
-    sinusoidal_positions,
 )
 
 

@@ -7,15 +7,12 @@ cross-attention) stacks are real.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from . import attention as attn_mod
 from .layers import (
-    dense_init,
     embedding_init,
     mlp,
     mlp_init,

@@ -1,0 +1,75 @@
+"""Layer-3 fixtures: the compile counter sees exactly the real XLA
+compilations, the drift comparator reports both directions, and an
+injected retrace (cleared chunk cache between calls) fails loudly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.compile_budget import compare_budget, compile_log
+from repro.analysis.registry import CellSpec, build_cell
+
+
+def test_counter_sees_one_compile_per_closure():
+    def step_probe(x):
+        return jnp.tanh(x) @ x.T
+
+    with compile_log() as counts:
+        fn = jax.jit(step_probe)
+        fn(jnp.ones((7, 7)))
+        fn(jnp.ones((7, 7)))      # cache hit: no second compile
+    assert counts["step_probe"] == 1
+
+
+def test_counter_sees_retrace_on_new_shape():
+    def shape_probe(x):
+        return x * 2.0
+
+    with compile_log() as counts:
+        fn = jax.jit(shape_probe)
+        fn(jnp.ones((3,)))
+        fn(jnp.ones((5,)))        # new shape: distinct compilation
+    assert counts["shape_probe"] == 2
+
+
+def test_compare_budget_reports_both_directions():
+    golden = {"chunk": 6, "_round_impl": 2}
+    assert compare_budget({"chunk": 6, "_round_impl": 2}, golden) == []
+    up = compare_budget({"chunk": 7, "_round_impl": 2}, golden)
+    assert len(up) == 1 and "retrace" in up[0]
+    down = compare_budget({"chunk": 6}, golden)
+    assert len(down) == 1 and "_round_impl" in down[0]
+    new = compare_budget({"chunk": 6, "_round_impl": 2, "body": 1},
+                         golden)
+    assert len(new) == 1 and "body" in new[0]
+
+
+def test_injected_retrace_fails_loudly():
+    """Clearing the chunk-fn cache between two same-shape chunks is the
+    canonical silent-retrace bug — the sentinel must see 2 compiles
+    where the golden run sees 1."""
+    trainer = build_cell(CellSpec("single", "dense", False))
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    sched = trainer.schedule(3, rng)
+
+    with compile_log() as counts:
+        trainer.run_chunk(state, sched, engine="scan")
+        trainer._chunk_fns.clear()          # the injected bug
+        trainer.run_chunk(state, sched, engine="scan")
+    measured = {"chunk": counts["chunk"]}
+    assert measured["chunk"] == 2
+    problems = compare_budget(measured, {"chunk": 1})
+    assert len(problems) == 1 and "retrace" in problems[0]
+
+
+def test_healthy_cache_stays_on_budget():
+    trainer = build_cell(CellSpec("single", "dense", False))
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    sched = trainer.schedule(3, rng)
+
+    with compile_log() as counts:
+        trainer.run_chunk(state, sched, engine="scan")
+        trainer.run_chunk(state, sched, engine="scan")   # cache hit
+    assert counts["chunk"] == 1
+    assert compare_budget({"chunk": counts["chunk"]}, {"chunk": 1}) == []

@@ -1,0 +1,311 @@
+"""Layer-1 fixtures: every lint rule has a positive (fires) and a
+negative (stays quiet) inline fixture, plus the suppression contract
+(justified allows suppress; unjustified and stale allows are findings
+themselves) and the churn-stable fingerprint property."""
+import textwrap
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintEngine, parse_suppressions
+
+
+def lint(src: str):
+    return LintEngine().lint_source(textwrap.dedent(src), "fix.py")
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------- RNG --
+def test_ambient_np_random_fires():
+    out = lint("""
+        import numpy as np
+        def f():
+            return np.random.rand(3)
+    """)
+    assert "ambient-np-random" in rules_of(out)
+
+
+def test_generator_api_is_quiet():
+    out = lint("""
+        import numpy as np
+        def f():
+            rng = np.random.default_rng(0)
+            return rng.normal(size=3)
+    """)
+    assert out == []
+
+
+def test_unseeded_default_rng_fires():
+    out = lint("""
+        import numpy as np
+        rng = np.random.default_rng()
+    """)
+    assert rules_of(out) == ["unseeded-default-rng"]
+
+
+def test_seeded_default_rng_quiet():
+    assert lint("""
+        import numpy as np
+        rng = np.random.default_rng(1234)
+    """) == []
+
+
+def test_import_alias_resolution():
+    # `from numpy import random as npr` still resolves to numpy.random
+    out = lint("""
+        from numpy import random as npr
+        x = npr.rand(3)
+    """)
+    assert "ambient-np-random" in rules_of(out)
+
+
+# ---------------------------------------------------------- PRNG keys --
+def test_key_reuse_fires():
+    out = lint("""
+        import jax
+        def f():
+            key = jax.random.PRNGKey(0)
+            a = jax.random.normal(key, (3,))
+            b = jax.random.normal(key, (3,))
+            return a, b
+    """)
+    assert "prng-key-reuse" in rules_of(out)
+
+
+def test_split_then_use_quiet():
+    assert lint("""
+        import jax
+        def f():
+            key = jax.random.PRNGKey(0)
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.normal(k2, (3,))
+            return a, b
+    """) == []
+
+
+def test_reassigned_key_quiet():
+    assert lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            key = jax.random.fold_in(key, 1)
+            b = jax.random.normal(key, (3,))
+            return a, b
+    """) == []
+
+
+def test_consume_in_loop_fires():
+    out = lint("""
+        import jax
+        def f(key):
+            out = []
+            for i in range(4):
+                out.append(jax.random.normal(key, (3,)))
+            return out
+    """)
+    assert "prng-key-reuse" in rules_of(out)
+
+
+def test_loop_with_per_iteration_split_quiet():
+    assert lint("""
+        import jax
+        def f(key):
+            out = []
+            for i in range(4):
+                key, sub = jax.random.split(key)
+                out.append(jax.random.normal(sub, (3,)))
+            return out
+    """) == []
+
+
+def test_loop_over_split_keys_quiet():
+    assert lint("""
+        import jax
+        def f(key):
+            return [jax.random.normal(k, (3,))
+                    for k in jax.random.split(key, 4)]
+    """) == []
+
+
+# ------------------------------------------------- host syncs in jit --
+def test_host_sync_inside_jit_fires():
+    out = lint("""
+        import jax
+        import numpy as np
+        @jax.jit
+        def step(x):
+            return np.asarray(x) + 1
+    """)
+    assert "host-sync-in-jit" in rules_of(out)
+
+
+def test_item_inside_scan_body_fires():
+    out = lint("""
+        import jax
+        def run(xs):
+            def body(carry, x):
+                carry = carry + x.item()
+                return carry, x
+            return jax.lax.scan(body, 0.0, xs)
+    """)
+    assert "host-sync-in-jit" in rules_of(out)
+
+
+def test_float_on_param_inside_jit_fires():
+    out = lint("""
+        import jax
+        @jax.jit
+        def step(x):
+            return float(x)
+    """)
+    assert "host-sync-in-jit" in rules_of(out)
+
+
+def test_host_sync_outside_jit_quiet():
+    assert lint("""
+        import numpy as np
+        def metrics(x):
+            return float(np.asarray(x).mean())
+    """) == []
+
+
+def test_reachability_via_local_alias():
+    # impl = a if cond else b; jax.jit(functools.partial(impl)) — both
+    # impls are jit-reachable through the local alias.
+    out = lint("""
+        import functools
+        import jax
+        import numpy as np
+        class T:
+            def _a_impl(self, x):
+                return np.asarray(x)
+            def _b_impl(self, x):
+                return x
+            def step(self, mode, x):
+                impl = self._a_impl if mode else self._b_impl
+                return jax.jit(functools.partial(impl))(x)
+    """)
+    assert "host-sync-in-jit" in rules_of(out)
+
+
+# ------------------------------------------------------ traced branch --
+def test_traced_branch_fires():
+    out = lint("""
+        import jax
+        import jax.numpy as jnp
+        @jax.jit
+        def step(x):
+            if jnp.sum(x) > 0:
+                return x
+            return -x
+    """)
+    assert "traced-branch" in rules_of(out)
+
+
+def test_python_branch_outside_jit_quiet():
+    assert lint("""
+        def pick(n):
+            if n > 0:
+                return 1
+            return 2
+    """) == []
+
+
+# ------------------------------------------------------ jax.debug etc --
+def test_leftover_jax_debug_fires():
+    out = lint("""
+        import jax
+        def f(x):
+            jax.debug.print("x={}", x)
+            return x
+    """)
+    assert rules_of(out) == ["jax-debug"]
+
+
+def test_mutable_default_fires():
+    out = lint("""
+        def f(items=[]):
+            return items
+    """)
+    assert rules_of(out) == ["mutable-default"]
+
+
+def test_immutable_default_quiet():
+    assert lint("""
+        def f(items=(), other=None):
+            return items, other
+    """) == []
+
+
+# ------------------------------------------------------- suppressions --
+def test_justified_allow_suppresses():
+    assert lint("""
+        import numpy as np
+        x = np.random.rand(3)  # repro: allow(ambient-np-random) -- fixture
+    """) == []
+
+
+def test_allow_on_line_above():
+    assert lint("""
+        import numpy as np
+        # repro: allow(ambient-np-random) -- fixture
+        x = np.random.rand(3)
+    """) == []
+
+
+def test_unjustified_allow_is_a_finding():
+    out = lint("""
+        import numpy as np
+        x = np.random.rand(3)  # repro: allow(ambient-np-random)
+    """)
+    assert rules_of(out) == ["unjustified-suppression"]
+
+
+def test_stale_allow_is_a_finding():
+    out = lint("""
+        x = 1  # repro: allow(ambient-np-random) -- nothing here
+    """)
+    assert rules_of(out) == ["unused-suppression"]
+
+
+def test_file_wide_allow():
+    assert lint("""
+        # repro: allow-file(ambient-np-random) -- generator fixture file
+        import numpy as np
+        a = np.random.rand(3)
+        b = np.random.rand(3)
+    """) == []
+
+
+def test_docstring_allow_is_inert():
+    # allow() syntax quoted in a docstring must not register
+    out = lint('''
+        def f():
+            """Example: # repro: allow(ambient-np-random) -- doc"""
+            return 1
+    ''')
+    assert out == []
+
+
+def test_suppressions_parse_lines():
+    sups = parse_suppressions("p.py", "x = 1\n# repro: allow(a-b) -- y\n")
+    assert len(sups) == 1 and sups[0].line == 2 and sups[0].justified
+
+
+# -------------------------------------------------------- fingerprint --
+def test_fingerprint_survives_line_churn():
+    a = Finding(rule="r", path="p.py", line=10, col=0, message="m",
+                snippet="x = np.random.rand(3)")
+    b = Finding(rule="r", path="p.py", line=99, col=4, message="m",
+                snippet="x  =  np.random.rand(3)")
+    assert a.fingerprint == b.fingerprint
+    c = Finding(rule="r2", path="p.py", line=10, col=0, message="m",
+                snippet="x = np.random.rand(3)")
+    assert a.fingerprint != c.fingerprint
+
+
+def test_syntax_error_is_reported_not_raised():
+    out = LintEngine().lint_source("def broken(:\n", "bad.py")
+    assert rules_of(out) == ["syntax-error"]

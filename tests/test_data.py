@@ -1,6 +1,5 @@
 """Data pipeline: synthetic generators + federated partitioners."""
 import numpy as np
-import pytest
 
 from repro.data import (
     dirichlet_split,

@@ -1,6 +1,5 @@
 """Graph + Markov-chain machinery (paper §3, Assumption 3.1, Eq. 2-6)."""
 import numpy as np
-import pytest
 
 from repro.core import graph as G
 from repro.core import markov as M

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import rwsadmm, tree
-from repro.core.rwsadmm import ClientState, RWSADMMHparams
+from repro.core.rwsadmm import RWSADMMHparams
 
 
 @pytest.fixture
